@@ -1,0 +1,86 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import VRLConfig
+from repro.core import get_algorithm
+from repro.data import WorkerLoader, feature_classification
+from repro.optim.optimizers import sgd
+from repro.train.loss import cross_entropy_cls
+
+
+def mlp_init(key, in_dim=2048, hidden=1024, classes=200):
+    """The paper's transfer-learning model (§6.1)."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (in_dim, hidden)) / np.sqrt(in_dim),
+        "b1": jnp.zeros((hidden,)),
+        "w2": jax.random.normal(k2, (hidden, classes)) / np.sqrt(hidden),
+        "b2": jnp.zeros((classes,)),
+    }
+
+
+def mlp_loss(params, x, y):
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    logits = h @ params["w2"] + params["b2"]
+    return cross_entropy_cls(logits, y)
+
+
+def run_mlp_task(alg_name: str, *, num_workers=8, batch=32, lr=0.5, k=20,
+                 steps=300, partition="class_shard", seed=0,
+                 data=None, warmup=False):
+    """Paper §6 training protocol on the transfer-learning analog task.
+
+    Returns per-step losses of the average model's mini-batch loss.
+    """
+    data = data or feature_classification(n=4096, dim=256, num_classes=64,
+                                          seed=seed)
+    loader = iter(WorkerLoader(data, num_workers, batch, partition=partition,
+                               seed=seed))
+    cfg = VRLConfig(algorithm=alg_name, comm_period=k, learning_rate=lr,
+                    weight_decay=1e-4, warmup=warmup)
+    alg = get_algorithm(alg_name)
+    params = mlp_init(jax.random.PRNGKey(seed), in_dim=data.x.shape[1],
+                      hidden=128, classes=data.num_classes)
+    state = alg.init(cfg, params, num_workers)
+
+    def worker_grads(state, xs, ys):
+        def per_worker(p, x, y):
+            return jax.value_and_grad(mlp_loss)(p, x, y)
+        losses, grads = jax.vmap(per_worker)(state.params, xs, ys)
+        return grads, jnp.mean(losses)
+
+    @jax.jit
+    def step(state, xs, ys):
+        grads, _ = worker_grads(state, xs, ys)
+        new_state = alg.train_step(cfg, state, grads)
+        # the paper's metric: loss of the AVERAGE model on the global batch
+        avg = alg.average_model(new_state)
+        eval_loss = mlp_loss(avg, xs.reshape(-1, xs.shape[-1]),
+                             ys.reshape(-1))
+        return new_state, eval_loss
+
+    losses = []
+    for _ in range(steps):
+        xs, ys = next(loader)
+        state, loss = step(state, jnp.asarray(xs), jnp.asarray(ys))
+        losses.append(float(loss))
+    return losses
+
+
+def timeit(fn, *args, iters=10, warmup_iters=2):
+    for _ in range(warmup_iters):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def csv(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")

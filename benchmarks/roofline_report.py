@@ -1,0 +1,86 @@
+"""Roofline table from dry-run results (EXPERIMENTS.md §Roofline source).
+
+Reads results/dryrun*.jsonl (written by repro.launch.dryrun / the matrix
+script) and prints one CSV row per (arch, shape, mesh) with two-point
+calibrated terms: XLA cost_analysis counts a scan body once, so
+    per-layer = (2-layer unrolled run) - (scanned run)
+    total     = scanned + (num_layers - 1) * per-layer
+"""
+from __future__ import annotations
+
+import json
+import os
+from collections import defaultdict
+
+from benchmarks.common import csv
+from repro.configs import registry
+from repro.launch.mesh import HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16
+
+RESULTS = os.environ.get(
+    "DRYRUN_RESULTS", "results/dryrun.jsonl,results/dryrun_multi.jsonl")
+K = 20
+
+
+def load(paths: str = RESULTS) -> dict:
+    dedup = {}
+    for path in paths.split(","):
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    r = json.loads(line)
+                    dedup[(r["arch"], r["shape"], r["mesh"], r["fn"])] = r
+    return dedup
+
+
+def main() -> dict:
+    rows = load()
+    if not rows:
+        csv("roofline/missing", 0.0,
+            "run scripts/run_dryrun_matrix.sh first")
+        return {}
+    by_combo = defaultdict(dict)
+    for (arch, shape, mesh, fn), r in rows.items():
+        if r.get("ok"):
+            by_combo[(arch, shape, mesh)][fn] = r
+    out = {}
+    for (arch, shape, mesh), fns in sorted(by_combo.items()):
+        kind = {"train_4k": "local", "prefill_32k": "prefill",
+                "decode_32k": "decode", "long_500k": "decode"}[shape]
+        scanned = fns.get(kind) or fns.get("train")
+        u2 = fns.get(f"{kind}+unroll+u2")
+        if scanned is None:
+            continue
+        L = registry.get_arch(arch).num_layers
+        if u2 is not None:
+            body_f = max(u2["hlo_flops"] - scanned["hlo_flops"], 0.0)
+            body_b = max(u2["hlo_bytes"] - scanned["hlo_bytes"], 0.0)
+            flops = scanned["hlo_flops"] + (L - 1) * body_f
+            nbytes = scanned["hlo_bytes"] + (L - 1) * body_b
+            calib = "u2"
+        else:
+            flops, nbytes = scanned["hlo_flops"], scanned["hlo_bytes"]
+            calib = "scan(body-once)"
+        tc = flops / PEAK_FLOPS_BF16
+        tm = nbytes / HBM_BW
+        tl = scanned["coll_bytes"] / ICI_LINK_BW
+        if shape == "train_4k" and "sync" in fns:
+            tl += fns["sync"].get("t_collective", 0.0) / K
+        bott = max((("compute", tc), ("memory", tm), ("collective", tl)),
+                   key=lambda kv: kv[1])[0]
+        chips = 256 if mesh == "single" else 512
+        useful = scanned["model_flops"] / (flops * chips) if flops else 0.0
+        out[(arch, shape, mesh)] = (tc, tm, tl, bott)
+        csv(f"roofline/{arch}/{shape}/{mesh}",
+            scanned.get("compile_s", 0) * 1e6,
+            f"t_compute_ms={tc*1e3:.3f};t_memory_ms={tm*1e3:.3f};"
+            f"t_collective_ms={tl*1e3:.3f};bottleneck={bott};"
+            f"useful_ratio={useful:.3f};calib={calib};"
+            f"mem_gib={scanned.get('per_device_bytes', 0)/2**30:.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

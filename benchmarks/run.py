@@ -1,0 +1,67 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  fig1_nonidentical    Fig. 1  — non-identical case convergence
+  fig2_identical       Fig. 2  — identical case convergence
+  appendix_e_quadratic App. E  — exact quadratic (b, k) sweep
+  appendix_f_ksweep    App. F  — communication-period sweep
+  warmup_ablation      Rmk 5.3 — VRL-SGD-W warm-up
+  comm_complexity      Table 1 — measured HLO collective bytes + asymptotics
+  step_time            §6.1    — per-step wall-time parity claim
+  roofline_report      (ours)  — per (arch x shape x mesh) roofline terms
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast]
+"""
+import argparse
+import sys
+import traceback
+
+from benchmarks import (
+    appendix_e_quadratic,
+    appendix_f_ksweep,
+    comm_complexity,
+    fig1_nonidentical,
+    fig2_identical,
+    roofline_report,
+    step_time,
+    warmup_ablation,
+)
+
+BENCHES = {
+    "fig1_nonidentical": lambda fast: fig1_nonidentical.main(
+        steps=120 if fast else 300),
+    "fig2_identical": lambda fast: fig2_identical.main(
+        steps=120 if fast else 300),
+    "appendix_e_quadratic": lambda fast: appendix_e_quadratic.main(),
+    "appendix_f_ksweep": lambda fast: appendix_f_ksweep.main(
+        steps=120 if fast else 240),
+    "warmup_ablation": lambda fast: warmup_ablation.main(
+        steps=120 if fast else 240),
+    "step_time": lambda fast: step_time.main(),
+    "roofline_report": lambda fast: roofline_report.main(),
+    "comm_complexity": lambda fast: comm_complexity.main(),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        try:
+            BENCHES[name](args.fast)
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}", file=sys.stderr)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

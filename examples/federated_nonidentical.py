@@ -1,0 +1,39 @@
+"""Federated-style example: the paper's §6 protocol on the transfer-learning
+analog — 8 workers, disjoint class shards, MLP on frozen features,
+k=20 (the paper's Table 2 hyper-parameters), with warm-up ablation.
+
+  PYTHONPATH=src python examples/federated_nonidentical.py
+"""
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.common import run_mlp_task  # noqa: E402
+from repro.data import feature_classification, label_skew
+from repro.data.partition import class_shard_partition
+
+
+def main():
+    data = feature_classification(n=4096, dim=256, num_classes=64, seed=0)
+    parts = class_shard_partition(data.y, 8, seed=0)
+    print(f"8 workers, class-sharded: label skew (TV) = "
+          f"{label_skew(data.y, parts):.3f} (1.0 = fully disjoint)")
+    results = {}
+    for alg, warm in [("ssgd", False), ("vrl_sgd", False),
+                      ("vrl_sgd", True), ("local_sgd", False),
+                      ("easgd", False)]:
+        tag = alg + ("-w" if warm else "")
+        losses = run_mlp_task(alg, num_workers=8, batch=32, lr=0.5, k=20,
+                              steps=300, partition="class_shard", data=data,
+                              warmup=warm)
+        results[tag] = (losses[10], float(np.mean(losses[-20:])))
+        print(f"  {tag:12s} loss@10 {results[tag][0]:.4f}  "
+              f"final {results[tag][1]:.4f}")
+    print("expected ordering (paper Fig. 1): "
+          "ssgd ≈ vrl_sgd(-w) < local_sgd < easgd")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Quickstart: train a tiny LM with VRL-SGD across 4 simulated workers on
+non-identical data, then compare against Local SGD.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.configs.base import VRLConfig
+from repro.core import get_algorithm
+from repro.data import lm_token_stream
+from repro.models import transformer as T
+from repro.train.loss import cross_entropy_lm
+from repro.train.train_loop import make_train_step
+
+WORKERS, BATCH, SEQ, STEPS, K = 4, 8, 32, 150, 20
+
+
+def train(algorithm: str, data) -> list[float]:
+    cfg = registry.smoke_arch("qwen2-0.5b", num_layers=2, d_model=64,
+                              d_ff=128, vocab_size=64, num_heads=4,
+                              num_kv_heads=2, head_dim=16)
+    vrl = VRLConfig(algorithm=algorithm, comm_period=K, learning_rate=0.2,
+                    warmup=True)
+    bundle = make_train_step(cfg, vrl, remat=False)
+    alg = get_algorithm(algorithm)
+    state = bundle.init_state(jax.random.PRNGKey(0), WORKERS)
+    step = jax.jit(bundle.train_step)
+
+    @jax.jit
+    def eval_avg(state, toks, labels):
+        logits, _ = T.forward(cfg, alg.average_model(state),
+                              toks.reshape(-1, SEQ))
+        return cross_entropy_lm(logits, labels.reshape(-1, SEQ))
+
+    losses = []
+    for t in range(STEPS):
+        toks = jnp.asarray(data[t])
+        labels = jnp.roll(toks, -1, axis=-1)
+        state, _ = step(state, toks, labels)
+        losses.append(float(eval_avg(state, toks, labels)))
+    return losses
+
+
+def main():
+    cfg = registry.smoke_arch("qwen2-0.5b", vocab_size=64)
+    print("non-identical data: each worker samples its own skewed unigram "
+          "distribution (the paper's hard regime), k =", K)
+    data = lm_token_stream(WORKERS, SEQ, cfg.vocab_size, steps=STEPS,
+                           batch=BATCH, alpha=0.02, seed=0)
+    for alg in ["vrl_sgd", "local_sgd", "ssgd"]:
+        losses = train(alg, data)
+        print(f"  {alg:10s} avg-model loss: start {losses[0]:.3f} -> "
+              f"final {np.mean(losses[-10:]):.3f}")
+    print("expected: vrl_sgd ≈ ssgd, both < local_sgd (paper Fig. 1)")
+
+
+if __name__ == "__main__":
+    main()

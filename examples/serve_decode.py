@@ -1,0 +1,42 @@
+"""Serving example: batched generation with the KV-cache engine across
+three architecture families (dense GQA / SSM / hybrid) — prefill builds the
+cache, decode extends it token by token; windowed decode demonstrates the
+long-context ring buffer.
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.models import transformer as T
+from repro.serve.engine import Engine
+
+
+def main():
+    for arch in ["granite-3-2b", "mamba2-370m", "hymba-1.5b"]:
+        cfg = registry.smoke_arch(arch)
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        eng = Engine(cfg, params, max_len=96)
+        prompt = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                                    cfg.vocab_size)
+        t0 = time.time()
+        out = eng.generate(prompt, steps=32, temperature=0.7,
+                           key=jax.random.PRNGKey(2))
+        print(f"{arch:14s} [{cfg.family:6s}] generated {out.shape} "
+              f"in {time.time()-t0:.2f}s")
+
+    # windowed decode: dense arch with a sliding-window cache
+    cfg = registry.smoke_arch("granite-3-2b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_len=256, window=32)
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (2, 16), 0,
+                                cfg.vocab_size)
+    out = eng.generate(prompt, steps=64)
+    print(f"windowed decode (ring buffer 32): {out.shape} OK")
+
+
+if __name__ == "__main__":
+    main()

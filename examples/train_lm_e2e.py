@@ -1,0 +1,91 @@
+"""End-to-end driver: train a ~100M-param LM with VRL-SGD for a few hundred
+steps (CPU-scaled by default; pass --full-width for the real 100M run).
+
+This is the deliverable-(b) end-to-end example: real model, non-iid data
+pipeline, periodic sync, checkpointing, and final average-model perplexity.
+
+  PYTHONPATH=src python examples/train_lm_e2e.py                 # ~3 min CPU
+  PYTHONPATH=src python examples/train_lm_e2e.py --full-width \
+      --steps 300                                                # ~100M run
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.configs import registry
+from repro.configs.base import VRLConfig
+from repro.core import get_algorithm
+from repro.data import lm_token_stream
+from repro.models import transformer as T
+from repro.train.loss import cross_entropy_lm
+from repro.train.train_loop import make_train_step
+
+
+def build_cfg(full_width: bool):
+    base = registry.get_arch("qwen2-0.5b")
+    if full_width:
+        # ~100M params: 8 layers of qwen2-0.5b width, 32k vocab
+        return dataclasses.replace(base, num_layers=8, vocab_size=32_768)
+    return registry.smoke_arch("qwen2-0.5b", num_layers=4, d_model=128,
+                               d_ff=512, vocab_size=512)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full-width", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="/tmp/repro_e2e_ckpt")
+    args = ap.parse_args()
+
+    cfg = build_cfg(args.full_width)
+    # Clipped SGD inner step. NOTE (measured, see EXPERIMENTS.md): the Δ
+    # correction is calibrated in raw-gradient units by eq. (4), so adaptive
+    # inner optimizers (Adam) silently break the variance reduction — the
+    # framework exposes them for research but the faithful path is SGD.
+    vrl = VRLConfig(algorithm="vrl_sgd", comm_period=args.k,
+                    learning_rate=1.0, warmup=True, clip_norm=5.0,
+                    inner_optimizer="sgd", weight_decay=0.0)
+    bundle = make_train_step(cfg, vrl, remat=args.full_width)
+    alg = get_algorithm("vrl_sgd")
+    state = bundle.init_state(jax.random.PRNGKey(0), args.workers)
+    n = sum(p.size for p in jax.tree.leaves(state.params)) // args.workers
+    print(f"model: {cfg.num_layers}L d={cfg.d_model} vocab={cfg.vocab_size} "
+          f"-> {n/1e6:.1f}M params x {args.workers} workers")
+
+    data = lm_token_stream(args.workers, args.seq, cfg.vocab_size,
+                           steps=args.steps, batch=args.batch, alpha=0.02,
+                           seed=0)
+    step = jax.jit(bundle.train_step)
+
+    @jax.jit
+    def eval_ppl(state, toks, labels):
+        logits, _ = T.forward(cfg, alg.average_model(state),
+                              toks.reshape(-1, args.seq))
+        return jnp.exp(cross_entropy_lm(logits, labels.reshape(-1, args.seq)))
+
+    t0 = time.time()
+    for t in range(args.steps):
+        toks = jnp.asarray(data[t])
+        labels = jnp.roll(toks, -1, axis=-1)
+        state, loss = step(state, toks, labels)
+        if (t + 1) % 25 == 0 or t == 0:
+            ppl = float(eval_ppl(state, toks, labels))
+            print(f"step {t+1:4d}  loss {float(loss):.4f}  "
+                  f"avg-model ppl {ppl:.1f}  "
+                  f"[{(time.time()-t0)/(t+1):.2f}s/step, "
+                  f"{int(state.step)-int(state.last_sync)} since sync]")
+    ckpt.save(args.ckpt, state, meta={"steps": args.steps})
+    print(f"checkpoint -> {args.ckpt}; total {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""Generate EXPERIMENTS.md §Dry-run and §Roofline tables from
+results/dryrun*.jsonl. Prints markdown to stdout.
+
+Roofline terms use two-point calibration: XLA's cost_analysis counts a
+while-loop (scan) body ONCE, so
+    per-layer = (2-layer unrolled run) - (scanned run)
+    total     = scanned + (num_layers - 1) * per-layer
+Collective bytes come from the scanned run's loop-aware HLO parse.
+
+  PYTHONPATH=src python scripts/gen_experiments_tables.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from collections import defaultdict
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import registry  # noqa: E402
+from repro.launch.mesh import HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16  # noqa: E402
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+K = 20
+
+
+def load(paths):
+    dedup = {}
+    for path in paths:
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                r = json.loads(line)
+                dedup[(r["arch"], r["shape"], r["mesh"], r["fn"])] = r
+    return dedup
+
+
+def fmt_gib(b):
+    return "?" if (b is None or b < 0) else f"{b/2**30:.1f}"
+
+
+def corrected_terms(scanned: dict, u2: dict, num_layers: int):
+    """Two-point calibration -> (t_compute, t_memory, t_collective, flops)."""
+    body_f = max(u2["hlo_flops"] - scanned["hlo_flops"], 0.0)
+    body_b = max(u2["hlo_bytes"] - scanned["hlo_bytes"], 0.0)
+    flops = scanned["hlo_flops"] + (num_layers - 1) * body_f
+    nbytes = scanned["hlo_bytes"] + (num_layers - 1) * body_b
+    coll = scanned["coll_bytes"]  # loop-aware parser already scales
+    return (flops / PEAK_FLOPS_BF16, nbytes / HBM_BW, coll / ICI_LINK_BW,
+            flops)
+
+
+def best_rows(fns: dict, kind: str):
+    scanned = fns.get(kind)
+    u2 = fns.get(f"{kind}+unroll+u2") or fns.get(f"{kind}+u2")
+    return scanned, u2
+
+
+def main():
+    rows = load(["results/dryrun.jsonl", "results/dryrun_multi.jsonl"])
+    by_combo = defaultdict(dict)
+    for (arch, shape, mesh, fn), r in rows.items():
+        by_combo[(arch, shape, mesh)][fn] = r
+    archs = [a for a in registry.list_archs()
+             if any(k[0] == a for k in by_combo)]
+
+    print("### §Dry-run — compile/fit matrix\n")
+    print("| arch | shape | single | GiB/dev | multi | GiB/dev |")
+    print("|---|---|---|---|---|---|")
+    for arch in archs:
+        for shape in SHAPES:
+            cells = []
+            for mesh in ["single", "multi"]:
+                fns = by_combo.get((arch, shape, mesh), {})
+                r = (fns.get("train") or fns.get("prefill")
+                     or fns.get("decode"))
+                if r is None:
+                    cells += ["—", "—"]
+                else:
+                    cells += ["OK" if r.get("ok") else "FAIL",
+                              fmt_gib(r.get("per_device_bytes"))]
+            print(f"| {arch} | {shape} | " + " | ".join(cells) + " |")
+
+    print("\n### §Roofline — single-pod terms (per device, per step)\n")
+    print("| arch | shape | compute ms | memory ms | collective ms | "
+          "bottleneck | useful ratio | model TFLOPs |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in archs:
+        L = registry.get_arch(arch).num_layers
+        for shape in SHAPES:
+            fns = by_combo.get((arch, shape, "single"), {})
+            kind = {"train_4k": "local", "prefill_32k": "prefill",
+                    "decode_32k": "decode", "long_500k": "decode"}[shape]
+            scanned, u2 = best_rows(fns, kind)
+            if not scanned or not scanned.get("ok"):
+                continue
+            if u2 and u2.get("ok"):
+                tc, tm, tl, flops = corrected_terms(scanned, u2, L)
+            else:
+                tc, tm = scanned["t_compute"], scanned["t_memory"]
+                tl = scanned["t_collective"]
+                flops = scanned["hlo_flops"]
+            if shape == "train_4k" and "sync" in fns:
+                tl += fns["sync"].get("t_collective", 0.0) / K
+            bott = max((("compute", tc), ("memory", tm),
+                        ("collective", tl)), key=lambda kv: kv[1])[0]
+            chips = 256
+            useful = scanned["model_flops"] / (flops * chips) if flops else 0
+            print(f"| {arch} | {shape} | {tc*1e3:.2f} | {tm*1e3:.2f} | "
+                  f"{tl*1e3:.2f} | **{bott}** | {useful:.3f} | "
+                  f"{scanned['model_flops']/1e12:.1f} |")
+
+    fails = [r for r in rows.values() if not r.get("ok")]
+    if fails:
+        print("\n### Failures\n")
+        for r in fails:
+            print(f"- {r['arch']}/{r['shape']}/{r['mesh']}/{r['fn']}: "
+                  f"{r['error'][:200]}")
+
+
+if __name__ == "__main__":
+    main()

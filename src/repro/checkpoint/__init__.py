@@ -1,0 +1,1 @@
+from repro.checkpoint.checkpoint import load_meta, restore, save  # noqa: F401

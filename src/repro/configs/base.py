@@ -1,0 +1,275 @@
+"""Config dataclasses for the repro framework.
+
+Everything is a plain frozen dataclass so configs hash, compare, and print
+cleanly, and so jit cache keys are stable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+def _next_multiple(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture definition.
+
+    ``family`` selects the block type:
+      dense  — pre-norm transformer, GQA attention + gated MLP
+      moe    — dense attention + top-k routed expert MLP
+      ssm    — Mamba2 SSD blocks (attention-free)
+      hybrid — Hymba-style parallel attention + SSM heads per block
+      vlm    — dense backbone consuming early-fusion (text+VQ-image) tokens
+      audio  — dense backbone consuming codec-token embeddings
+    """
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    vocab_size: int
+    # attention
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    qkv_bias: bool = False
+    attn_window: Optional[int] = None          # sliding-window size; None = full
+    long_context_window: int = 8192            # window used for long_500k variant
+    rope_theta: float = 10_000.0
+    # mlp
+    d_ff: int = 0
+    mlp_act: str = "silu"                      # silu | geglu | gelu
+    # moe
+    num_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    router_aux_loss: float = 0.01
+    moe_d_ff: int = 0                          # expert hidden size (kimi: 2048)
+    num_shared_experts: int = 0
+    # ssm
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    conv_kernel: int = 4
+    # embeddings / misc
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    # sequence-parallel activations: constrain the residual stream's seq
+    # dim to the tensor axis between blocks (Megatron-SP; reduce-scatter +
+    # all-gather instead of all-reduce, and norm/elementwise run seq-sharded)
+    seq_shard_acts: bool = False
+    # modality frontend stub: if set, inputs are precomputed embeddings
+    # of shape (batch, seq, frontend_dim) instead of token ids.
+    frontend: Optional[str] = None             # None | "vision" | "codec"
+    frontend_dim: int = 0
+    # citation for the config (public pool provenance)
+    source: str = ""
+
+    # ---- derived -----------------------------------------------------------
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def subquadratic(self) -> bool:
+        """True if the arch natively supports O(<<L^2) long-context decode."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_num_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim if self.ssm_state else 0
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND model-FLOPs)."""
+        d, L, V = self.d_model, self.num_layers, self.vocab_size
+        total = V * d  # embed
+        if not self.tie_embeddings:
+            total += V * d
+        per_layer = 0
+        if self.family != "ssm":
+            hd = self.head_dim
+            per_layer += d * (self.num_heads * hd)          # q
+            per_layer += 2 * d * (self.num_kv_heads * hd)   # k, v
+            per_layer += (self.num_heads * hd) * d          # o
+            if self.qkv_bias:
+                per_layer += (self.num_heads + 2 * self.num_kv_heads) * hd
+        if self.family in ("dense", "vlm", "audio", "hybrid"):
+            mult = 3 if self.mlp_act in ("silu", "geglu") else 2
+            per_layer += mult * d * self.d_ff
+        if self.family == "moe":
+            ff = self.moe_d_ff or self.d_ff
+            per_layer += 3 * d * ff * self.num_experts
+            per_layer += 3 * d * ff * self.num_shared_experts
+            per_layer += d * self.num_experts               # router
+        if self.family in ("ssm", "hybrid"):
+            di, ds, nh = self.ssm_d_inner, self.ssm_state, self.ssm_num_heads
+            per_layer += d * (2 * di + 2 * ds * (di // self.ssm_head_dim) + nh)
+            per_layer += di * d                              # out proj
+            per_layer += self.conv_kernel * (di + 2 * ds * nh)
+        per_layer += 2 * d  # norms
+        return total + L * per_layer
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        ff = self.moe_d_ff or self.d_ff
+        dense_experts = self.experts_per_token + self.num_shared_experts
+        inactive = 3 * self.d_model * ff * (
+            self.num_experts + self.num_shared_experts - dense_experts)
+        return self.param_count() - self.num_layers * inactive
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class VRLConfig:
+    """The paper's algorithm knobs."""
+
+    algorithm: str = "vrl_sgd"      # vrl_sgd | local_sgd | ssgd | easgd
+    comm_period: int = 20           # k
+    warmup: bool = True             # VRL-SGD-W (Remark 5.3): first period k=1
+    learning_rate: float = 0.01
+    weight_decay: float = 1e-4
+    inner_optimizer: str = "sgd"    # sgd | momentum | adam (beyond-paper)
+    clip_norm: float = 0.0          # per-worker global-norm gradient clip
+    momentum: float = 0.0
+    easgd_alpha: float = 0.3        # elastic coefficient (EASGD baseline)
+    delta_dtype: str = "float32"    # accumulator dtype for Δ
+    # hierarchical (beyond-paper): per-axis comm periods, e.g.
+    # {"pod": 20, "data": 1} syncs across data every step, across pods every 20
+    axis_periods: Optional[Tuple[Tuple[str, int], ...]] = None
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    """How the physical mesh is carved up for one run."""
+
+    shape: Tuple[int, ...] = (16, 16)
+    axis_names: Tuple[str, ...] = ("data", "model")
+    # VRL workers live across these axes (model averaging every k steps).
+    worker_axes: Tuple[str, ...] = ("data",)
+    # FSDP (param-shard within worker) across these axes.
+    fsdp_axes: Tuple[str, ...] = ()
+    # tensor-parallel axes.
+    tensor_axes: Tuple[str, ...] = ("model",)
+
+    @property
+    def num_workers(self) -> int:
+        sizes = dict(zip(self.axis_names, self.shape))
+        return math.prod(sizes[a] for a in self.worker_axes) if self.worker_axes else 1
+
+    @property
+    def tensor_size(self) -> int:
+        sizes = dict(zip(self.axis_names, self.shape))
+        return math.prod(sizes[a] for a in self.tensor_axes) if self.tensor_axes else 1
+
+    @property
+    def fsdp_size(self) -> int:
+        sizes = dict(zip(self.axis_names, self.shape))
+        return math.prod(sizes[a] for a in self.fsdp_axes) if self.fsdp_axes else 1
+
+
+SINGLE_POD = MeshConfig()
+MULTI_POD = MeshConfig(
+    shape=(2, 16, 16),
+    axis_names=("pod", "data", "model"),
+    worker_axes=("pod", "data"),
+    fsdp_axes=(),
+    tensor_axes=("model",),
+)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    model: ModelConfig
+    vrl: VRLConfig = field(default_factory=VRLConfig)
+    mesh: MeshConfig = field(default_factory=lambda: SINGLE_POD)
+    seq_len: int = 4096
+    global_batch: int = 256
+    steps: int = 100
+    seed: int = 0
+    remat: bool = True
+    param_dtype: str = "bfloat16"
+
+
+def pad_for_mesh(cfg: ModelConfig, tensor_size: int) -> ModelConfig:
+    """Pad head counts / vocab / ff so every tensor-parallel dim divides.
+
+    Padding is mathematically exact: padded q/kv heads are zero-initialised
+    and their contribution is annihilated by the o-projection; padded vocab
+    rows get -inf-masked logits in the loss. The FLOP overhead is reported by
+    the roofline as (useful / compiled) ratio.
+    """
+    changes = {}
+    if cfg.family != "ssm" and cfg.num_heads:
+        # q/o projections are sharded over the tensor axis. Padding must
+        # preserve the GQA group mapping (q head i -> kv head i // group), so
+        # we pad the GROUP size: smallest g' >= g with (kv * g') % tensor == 0.
+        # kv heads stay unpadded (replicated across tensor shards when not
+        # divisible — standard GQA-TP treatment; kv is cheap). Padded q heads
+        # are zero-initialised and annihilated by the o-projection.
+        nkv = max(cfg.num_kv_heads, 1)
+        g = max(1, cfg.num_heads // nkv)
+        while (nkv * g) % tensor_size:
+            g += 1
+        nh_p = nkv * g
+        if nh_p != cfg.num_heads:
+            changes["num_heads"] = nh_p
+    if cfg.vocab_size % 128:
+        changes["vocab_size"] = _next_multiple(cfg.vocab_size, 128)
+    if cfg.d_ff and cfg.d_ff % tensor_size:
+        changes["d_ff"] = _next_multiple(cfg.d_ff, tensor_size)
+    if cfg.moe_d_ff and cfg.moe_d_ff % tensor_size:
+        changes["moe_d_ff"] = _next_multiple(cfg.moe_d_ff, tensor_size)
+    return dataclasses.replace(cfg, **changes) if changes else cfg
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Reduced same-family variant for CPU smoke tests (2 layers, d<=512)."""
+    small: dict = dict(num_layers=2, vocab_size=512)
+    d = min(cfg.d_model, 128)
+    small["d_model"] = d
+    if cfg.num_heads:
+        nh = min(cfg.num_heads, 4)
+        group = max(1, cfg.num_heads // max(cfg.num_kv_heads, 1))
+        nkv = max(1, nh // group) if cfg.num_kv_heads < cfg.num_heads else nh
+        small.update(num_heads=nh, num_kv_heads=nkv, head_dim=32)
+    if cfg.d_ff:
+        small["d_ff"] = 4 * d
+    if cfg.num_experts:
+        small.update(num_experts=4, experts_per_token=min(2, cfg.experts_per_token),
+                     moe_d_ff=2 * d)
+        small["num_shared_experts"] = min(1, cfg.num_shared_experts)
+    if cfg.ssm_state:
+        small.update(ssm_state=min(cfg.ssm_state, 16), ssm_head_dim=32, ssm_chunk=32)
+    if cfg.frontend:
+        small["frontend_dim"] = d
+    small["attn_window"] = None if cfg.attn_window is None else 64
+    small["long_context_window"] = 64
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

@@ -1,0 +1,16 @@
+"""The paper's own transfer-learning model (§6.1): MLP on 2048-d Inception-V3
+features, one hidden layer of 1024, 200 output classes, relu. Used by the
+convergence benchmarks (Fig. 1/2 analogs), not by the dry-run matrix.
+"""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class MLPConfig:
+    name: str = "paper-mlp"
+    in_dim: int = 2048
+    hidden: int = 1024
+    classes: int = 200
+
+
+CONFIG = MLPConfig()

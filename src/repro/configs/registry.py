@@ -1,0 +1,118 @@
+"""Architecture registry: ``--arch <id>`` lookup + mesh-role policy.
+
+Every assigned architecture is selectable by its public id. ``mesh_roles``
+decides how VRL-SGD workers map onto the production mesh per arch size:
+models whose per-worker replica does not fit 16-way tensor sharding on a
+16 GB chip get FSDP within the worker (worker = whole pod).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import (
+    INPUT_SHAPES,
+    InputShape,
+    MeshConfig,
+    ModelConfig,
+    pad_for_mesh,
+    reduced,
+)
+
+from repro.configs import (  # noqa: E402
+    chameleon_34b,
+    gemma_7b,
+    granite_3_2b,
+    hymba_1_5b,
+    kimi_k2_1t_a32b,
+    mamba2_370m,
+    musicgen_large,
+    phi3_5_moe_42b_a6_6b,
+    qwen2_0_5b,
+    stablelm_3b,
+)
+
+ARCHS: dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        kimi_k2_1t_a32b.CONFIG,
+        qwen2_0_5b.CONFIG,
+        stablelm_3b.CONFIG,
+        hymba_1_5b.CONFIG,
+        chameleon_34b.CONFIG,
+        musicgen_large.CONFIG,
+        granite_3_2b.CONFIG,
+        mamba2_370m.CONFIG,
+        gemma_7b.CONFIG,
+        phi3_5_moe_42b_a6_6b.CONFIG,
+    ]
+}
+
+# Archs too big to replicate one full copy per data-slice (params*2B / 16 TP
+# shards must stay well under 16 GB HBM incl. Δ + optimizer state).
+_FSDP_ARCHS = {"kimi-k2-1t-a32b", "chameleon-34b", "phi3.5-moe-42b-a6.6b"}
+# Serving has no Δ/grads: only the 1T model still needs 2D param sharding.
+# FSDP-sharded weights during serving make GSPMD replicate activations over
+# the data axis (16x redundant compute) — see EXPERIMENTS.md §Perf pair B.
+_FSDP_SERVE_ARCHS = {"kimi-k2-1t-a32b"}
+
+
+def get_arch(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+def get_shape(shape_id: str) -> InputShape:
+    if shape_id not in INPUT_SHAPES:
+        raise KeyError(f"unknown shape {shape_id!r}; known: {sorted(INPUT_SHAPES)}")
+    return INPUT_SHAPES[shape_id]
+
+
+def mesh_roles(arch_id: str, *, multi_pod: bool = False,
+               serving: bool = False) -> MeshConfig:
+    """Assign mesh axes to roles (VRL worker / FSDP / tensor) per arch."""
+    big = arch_id in (_FSDP_SERVE_ARCHS if serving else _FSDP_ARCHS)
+    if multi_pod:
+        return MeshConfig(
+            shape=(2, 16, 16),
+            axis_names=("pod", "data", "model"),
+            worker_axes=("pod",) if big else ("pod", "data"),
+            fsdp_axes=("data",) if big else (),
+            tensor_axes=("model",),
+        )
+    return MeshConfig(
+        shape=(16, 16),
+        axis_names=("data", "model"),
+        worker_axes=() if big else ("data",),
+        fsdp_axes=("data",) if big else (),
+        tensor_axes=("model",),
+    )
+
+
+def padded_arch(arch_id: str, mesh: MeshConfig) -> ModelConfig:
+    """Arch config padded for the mesh's tensor-parallel degree."""
+    return pad_for_mesh(get_arch(arch_id), mesh.tensor_size)
+
+
+def smoke_arch(arch_id: str, **overrides) -> ModelConfig:
+    """Reduced same-family variant for CPU smoke tests."""
+    return reduced(get_arch(arch_id), **overrides)
+
+
+def list_archs() -> list[str]:
+    return sorted(ARCHS)
+
+
+def describe(arch_id: str) -> str:
+    c = get_arch(arch_id)
+    n = c.param_count()
+    na = c.active_param_count()
+    extra = f", active={na/1e9:.2f}B" if na != n else ""
+    return (f"{c.name} [{c.family}] {c.num_layers}L d={c.d_model} "
+            f"params={n/1e9:.2f}B{extra}  ({c.source})")
+
+
+if __name__ == "__main__":
+    # `PYTHONPATH=src python -m repro.configs.registry` — list the pool
+    for _a in list_archs():
+        print(describe(_a))

@@ -1,0 +1,4 @@
+# The paper's primary contribution: VRL-SGD and its baselines as composable
+# distributed optimizers over worker-stacked pytrees.
+from repro.core.api import Algorithm, get_algorithm, list_algorithms  # noqa: F401
+from repro.core.types import WorkerState  # noqa: F401

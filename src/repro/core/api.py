@@ -1,0 +1,47 @@
+"""Uniform algorithm interface.
+
+    alg = get_algorithm("vrl_sgd")
+    state = alg.init(vrl_cfg, params, num_workers)
+    state = alg.train_step(vrl_cfg, state, worker_grads)   # grads: (W, ...)
+    model = alg.average_model(state)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+from repro.core import easgd, local_sgd, ssgd, vrl_sgd
+
+
+class Algorithm(NamedTuple):
+    name: str
+    init: Callable
+    train_step: Callable
+    local_step: Callable
+    sync: Callable
+    average_model: Callable
+
+
+_ALGS = {
+    "vrl_sgd": vrl_sgd,
+    "local_sgd": local_sgd,
+    "ssgd": ssgd,
+    "easgd": easgd,
+}
+
+
+def get_algorithm(name: str) -> Algorithm:
+    if name not in _ALGS:
+        raise KeyError(f"unknown algorithm {name!r}; known: {sorted(_ALGS)}")
+    m = _ALGS[name]
+    return Algorithm(
+        name=name,
+        init=m.init,
+        train_step=m.train_step,
+        local_step=m.local_step,
+        sync=m.sync,
+        average_model=vrl_sgd.average_model,
+    )
+
+
+def list_algorithms() -> list[str]:
+    return sorted(_ALGS)

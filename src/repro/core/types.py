@@ -1,0 +1,28 @@
+"""Shared state containers for the distributed optimizers.
+
+All algorithm state lives on a *worker-stacked* pytree convention: every
+leaf has a leading axis of size W (number of VRL workers). On the production
+mesh that axis is sharded over the worker mesh axes, so "mean over axis 0"
+lowers to exactly one all-reduce over the slow links — the paper's
+communication event. On CPU the same code simulates W workers on one device.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+
+
+class WorkerState(NamedTuple):
+    """State carried by every algorithm in ``repro.core``."""
+
+    params: Any              # (W, ...) worker-stacked model parameters
+    delta: Any               # (W, ...) VRL correction Δ_i (zeros if unused)
+    inner: Any               # inner-optimizer state (momentum buffers, ...)
+    center: Any              # EASGD center variable x̃ (None elsewhere)
+    step: jax.Array          # scalar int32: iterations completed
+    last_sync: jax.Array     # scalar int32: step index of the last sync
+
+
+def swap_dims(tree, a: int = 0, b: int = 1):
+    return jax.tree.map(lambda x: x.swapaxes(a, b), tree)

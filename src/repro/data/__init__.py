@@ -1,0 +1,13 @@
+from repro.data.loader import WorkerLoader  # noqa: F401
+from repro.data.partition import (  # noqa: F401
+    class_shard_partition,
+    dirichlet_partition,
+    iid_partition,
+    label_skew,
+)
+from repro.data.synthetic import (  # noqa: F401
+    ClassificationData,
+    feature_classification,
+    gaussian_classification,
+    lm_token_stream,
+)

@@ -1,0 +1,60 @@
+"""Non-identical data partitioning (the paper's central experimental regime).
+
+The paper's *non-identical case* gives each worker a disjoint subset of
+classes ("when 5 workers train on 10 classes, each worker accesses two").
+We implement that exact scheme plus the standard Dirichlet(α) relaxation
+used in the federated-learning literature, and a skew metric to report the
+extent of non-iid.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def class_shard_partition(labels: np.ndarray, num_workers: int,
+                          seed: int = 0) -> list[np.ndarray]:
+    """Paper's scheme: classes split disjointly across workers."""
+    rng = np.random.RandomState(seed)
+    classes = np.unique(labels)
+    rng.shuffle(classes)
+    chunks = np.array_split(classes, num_workers)
+    out = []
+    for ch in chunks:
+        idx = np.flatnonzero(np.isin(labels, ch))
+        rng.shuffle(idx)
+        out.append(idx)
+    return out
+
+
+def dirichlet_partition(labels: np.ndarray, num_workers: int,
+                        alpha: float = 0.1, seed: int = 0) -> list[np.ndarray]:
+    """Dirichlet(α) label-skew partition; α→0 approaches class sharding,
+    α→∞ approaches iid."""
+    rng = np.random.RandomState(seed)
+    classes = np.unique(labels)
+    buckets: list[list[int]] = [[] for _ in range(num_workers)]
+    for c in classes:
+        idx = np.flatnonzero(labels == c)
+        rng.shuffle(idx)
+        props = rng.dirichlet([alpha] * num_workers)
+        cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
+        for w, part in enumerate(np.split(idx, cuts)):
+            buckets[w].extend(part.tolist())
+    return [np.array(sorted(b)) for b in buckets]
+
+
+def iid_partition(n: int, num_workers: int, seed: int = 0) -> list[np.ndarray]:
+    rng = np.random.RandomState(seed)
+    idx = rng.permutation(n)
+    return list(np.array_split(idx, num_workers))
+
+
+def label_skew(labels: np.ndarray, parts: list[np.ndarray]) -> float:
+    """Mean total-variation distance between worker label dists and global."""
+    classes = np.unique(labels)
+    global_p = np.array([(labels == c).mean() for c in classes])
+    tvs = []
+    for idx in parts:
+        lp = np.array([(labels[idx] == c).mean() for c in classes])
+        tvs.append(0.5 * np.abs(lp - global_p).sum())
+    return float(np.mean(tvs))

@@ -1,0 +1,131 @@
+"""jit'd user-facing wrappers around the Pallas kernels.
+
+These handle layout munging (head flattening, padding to block multiples,
+pytree flattening for the optimizer kernels) so callers use natural shapes.
+``interpret`` defaults to True on CPU (kernel body runs in Python for
+correctness validation) and False on TPU.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import ssd_scan as ssd
+from repro.kernels import vrl_update as vu
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ------------------------------------------------------------ attention op
+def mha_flash(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: Optional[int] = None,
+              block_q: int = 128, block_k: int = 128,
+              interpret: Optional[bool] = None) -> jax.Array:
+    """q: (B, S, H, D); k, v: (B, S, KVH, D) -> (B, S, H, D).
+
+    Repeats kv heads to match q (GQA) and pads S to a block multiple.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    group = h // kvh
+    if group > 1:
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+    blk = math.gcd(block_q, block_k)
+    pad = (-s) % max(block_q, block_k)
+    qt = jnp.moveaxis(q, 2, 1).reshape(b * h, s, d)
+    kt = jnp.moveaxis(k, 2, 1).reshape(b * h, s, d)
+    vt = jnp.moveaxis(v, 2, 1).reshape(b * h, s, d)
+    if pad:
+        qt = jnp.pad(qt, ((0, 0), (0, pad), (0, 0)))
+        kt = jnp.pad(kt, ((0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, pad), (0, 0)))
+    out = fa.flash_attention(qt, kt, vt, causal=causal, window=window,
+                             block_q=block_q, block_k=block_k,
+                             interpret=interpret)
+    out = out[:, :s].reshape(b, h, s, d)
+    return jnp.moveaxis(out, 1, 2)
+
+
+# ------------------------------------------------------------------ ssd op
+def ssd_chunk_scan(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+                   b: jax.Array, c: jax.Array, *, chunk: int = 256,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """x: (B, L, H, P); dt: (B, L, H); a_log: (H,); b, c: (B, L, N)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    bsz, l, h, p = x.shape
+    chunk = min(chunk, l)
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    lp = l + pad
+    xt = jnp.moveaxis(x, 2, 1).reshape(bsz * h, lp, p)
+    dtt = jnp.moveaxis(dt, 2, 1).reshape(bsz * h, lp)
+    alog = jnp.tile(a_log[None, :], (bsz, 1)).reshape(bsz * h, 1)
+    y = ssd.ssd_scan(xt, dtt, alog, b, c, chunk=chunk, num_heads=h,
+                     interpret=interpret)
+    y = y[:, :l].reshape(bsz, h, l, p)
+    return jnp.moveaxis(y, 1, 2)
+
+
+# ------------------------------------------------- fused optimizer updates
+def _to_2d(x: jax.Array, block: int):
+    flat = x.reshape(-1)
+    c = 256
+    pad = (-flat.size) % (c * block)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, c), x.shape, pad
+
+
+def vrl_local_update_tree(params, grads, delta, *, lr: float,
+                          interpret: Optional[bool] = None):
+    """Fused p' = p − γ(g − Δ) over a whole pytree."""
+    if interpret is None:
+        interpret = _default_interpret()
+
+    def one(p, g, d):
+        p2, shp, _ = _to_2d(p, 8)
+        g2, _, _ = _to_2d(g, 8)
+        d2, _, _ = _to_2d(d.astype(p.dtype), 8)
+        out = vu.vrl_local_update(p2, g2, d2, lr=lr, block=8,
+                                  interpret=interpret)
+        return out.reshape(-1)[:p.size].reshape(shp)
+
+    return jax.tree.map(one, params, grads, delta)
+
+
+def vrl_sync_update_tree(params, xbar, delta, *, k: int, lr: float,
+                         interpret: Optional[bool] = None):
+    """Fused Δ' = Δ + (x̂−p)/(kγ); p' = x̂ over a whole pytree."""
+    if interpret is None:
+        interpret = _default_interpret()
+    inv_kg = 1.0 / (k * lr)
+
+    def one(p, xb, d):
+        p2, shp, _ = _to_2d(p, 8)
+        x2, _, _ = _to_2d(jnp.broadcast_to(xb, p.shape), 8)
+        d2, dshp, _ = _to_2d(d, 8)
+        po, do = vu.vrl_sync_update(p2, x2, d2, inv_kg=inv_kg, block=8,
+                                    interpret=interpret)
+        return (po.reshape(-1)[:p.size].reshape(shp),
+                do.reshape(-1)[:d.size].reshape(dshp))
+
+    outs = jax.tree.map(one, params, xbar, delta)
+    new_p = jax.tree.map(lambda t: t[0], outs,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_d = jax.tree.map(lambda t: t[1], outs,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, new_d

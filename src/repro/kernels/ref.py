@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None) -> jax.Array:
+    """q, k, v: (BH, S, D) — plain softmax attention oracle."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * scale
+    qi = jnp.arange(q.shape[1])[:, None]
+    ki = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones_like(s, dtype=bool)
+    if causal:
+        mask = mask & (ki <= qi)
+    if window is not None:
+        mask = mask & (ki > qi - window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v)
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, a_log: jax.Array, b: jax.Array,
+            c: jax.Array) -> jax.Array:
+    """Sequential SSD recurrence oracle.
+
+    x: (B, L, H, P); dt: (B, L, H); a_log: (H,); b, c: (B, L, N).
+    S_t = exp(dt_t A) S_{t-1} + dt_t x_t ⊗ B_t ;  y_t = S_t · C_t
+    """
+    bsz, l, h, p = x.shape
+    n = b.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp           # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dtt * a)        # (B,H)
+        upd = jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], bt)
+        state = decay[..., None, None] * state + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, y
+
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(b, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(c, 1, 0).astype(jnp.float32))
+    state0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)   # (B, L, H, P)
+
+
+def vrl_update_ref(p: jax.Array, g: jax.Array, delta: jax.Array,
+                   lr: float) -> jax.Array:
+    """Fused local step oracle: p - lr * (g - delta)  (eq. 5/6)."""
+    return (p.astype(jnp.float32)
+            - lr * (g.astype(jnp.float32) - delta.astype(jnp.float32))
+            ).astype(p.dtype)
+
+
+def vrl_sync_ref(p: jax.Array, xbar: jax.Array, delta: jax.Array,
+                 inv_kg: float):
+    """Fused sync oracle: Δ' = Δ + (x̂ − x)·1/(kγ); x' = x̂  (eq. 4)."""
+    new_delta = (delta.astype(jnp.float32)
+                 + (xbar.astype(jnp.float32) - p.astype(jnp.float32)) * inv_kg
+                 ).astype(delta.dtype)
+    return xbar.astype(p.dtype), new_delta

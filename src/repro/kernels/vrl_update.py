@@ -1,0 +1,72 @@
+"""Fused VRL-SGD update kernels (the paper's eq. 4-6 as single HBM passes).
+
+The paper's math is elementwise over model-sized buffers, so on TPU it is
+purely HBM-bandwidth-bound. Unfused, the local step reads p, g, Δ and writes
+v then p (5 model-sized transfers); the fused kernel reads 3 and writes 1.
+The sync step fuses the Δ update with the parameter broadcast the same way.
+
+  local:  p' = p − γ·(g − Δ)                          (eq. 5 + 6)
+  sync:   Δ' = Δ + (x̂ − p)/(kγ);  p' = x̂             (eq. 4 + line 6)
+
+Both operate on 2D row-major tiles of the flattened parameter leaf; ops.py
+handles flatten/pad/unflatten.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _local_kernel(p_ref, g_ref, d_ref, o_ref, *, lr: float):
+    p = p_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    d = d_ref[...].astype(jnp.float32)
+    o_ref[...] = (p - lr * (g - d)).astype(o_ref.dtype)
+
+
+def _sync_kernel(p_ref, xbar_ref, d_ref, po_ref, do_ref, *, inv_kg: float):
+    p = p_ref[...].astype(jnp.float32)
+    xb = xbar_ref[...].astype(jnp.float32)
+    d = d_ref[...].astype(jnp.float32)
+    do_ref[...] = (d + (xb - p) * inv_kg).astype(do_ref.dtype)
+    po_ref[...] = xb.astype(po_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "block", "interpret"))
+def vrl_local_update(p: jax.Array, g: jax.Array, delta: jax.Array, *,
+                     lr: float, block: int = 1024,
+                     interpret: bool = True) -> jax.Array:
+    """p, g, delta: (R, C) with R % block == 0 -> updated p."""
+    r, c = p.shape
+    assert r % block == 0, (r, block)
+    spec = pl.BlockSpec((block, c), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_local_kernel, lr=lr),
+        grid=(r // block,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((r, c), p.dtype),
+        interpret=interpret,
+    )(p, g, delta)
+
+
+@functools.partial(jax.jit, static_argnames=("inv_kg", "block", "interpret"))
+def vrl_sync_update(p: jax.Array, xbar: jax.Array, delta: jax.Array, *,
+                    inv_kg: float, block: int = 1024,
+                    interpret: bool = True):
+    """Returns (p', Δ')."""
+    r, c = p.shape
+    assert r % block == 0, (r, block)
+    spec = pl.BlockSpec((block, c), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_sync_kernel, inv_kg=inv_kg),
+        grid=(r // block,),
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((r, c), p.dtype),
+                   jax.ShapeDtypeStruct((r, c), delta.dtype)],
+        interpret=interpret,
+    )(p, xbar, delta)

@@ -1,0 +1,476 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+#   512 placeholder host devices back both the 16x16 single-pod mesh (first
+#   256 devices) and the 2x16x16 multi-pod mesh.
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input-shape x mesh) combination this lowers the
+real step function (train_step / prefill / serve_step) with ShapeDtypeStruct
+inputs (zero allocation), compiles it for the production mesh, and records:
+
+  * memory_analysis()   — per-device bytes (does it fit HBM?)
+  * cost_analysis()     — per-device FLOPs / bytes for the roofline
+  * collective bytes    — parsed from optimized HLO (loop-aware)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out results/dryrun.jsonl
+"""
+import argparse
+import dataclasses
+import json
+import math
+import sys
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, MeshConfig, VRLConfig
+from repro.configs import registry
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer
+from repro.models.param import abstract as abstract_params
+from repro.serve.engine import make_prefill, make_serve_step
+from repro.sharding import specs as sh
+from repro.train.train_loop import make_train_step
+
+
+# --------------------------------------------------------------------- mesh
+def build_mesh(mesh_cfg: MeshConfig):
+    n = math.prod(mesh_cfg.shape)
+    return jax.make_mesh(
+        mesh_cfg.shape, mesh_cfg.axis_names, devices=jax.devices()[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(mesh_cfg.axis_names))
+
+
+def _data_axes(mesh_cfg: MeshConfig):
+    return tuple(mesh_cfg.worker_axes) + tuple(mesh_cfg.fsdp_axes)
+
+
+def _axis_size(mesh_cfg: MeshConfig, axes) -> int:
+    sizes = dict(zip(mesh_cfg.axis_names, mesh_cfg.shape))
+    return math.prod(sizes[a] for a in axes) if axes else 1
+
+
+# -------------------------------------------------------------- input specs
+def input_specs(arch_id: str, shape_id: str, mesh_cfg: MeshConfig,
+                cfg=None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this combo."""
+    cfg = cfg or registry.padded_arch(arch_id, mesh_cfg)
+    shape = registry.get_shape(shape_id)
+    w = mesh_cfg.num_workers
+    if shape.kind == "train":
+        b = shape.global_batch // w
+        if cfg.frontend == "codec":
+            inp = jax.ShapeDtypeStruct((w, b, shape.seq_len, cfg.frontend_dim),
+                                       jnp.bfloat16)
+        else:
+            inp = jax.ShapeDtypeStruct((w, b, shape.seq_len), jnp.int32)
+        lab = jax.ShapeDtypeStruct((w, b, shape.seq_len), jnp.int32)
+        return {"tokens": inp, "labels": lab}
+    if shape.kind == "prefill":
+        if cfg.frontend == "codec":
+            inp = jax.ShapeDtypeStruct(
+                (shape.global_batch, shape.seq_len, cfg.frontend_dim),
+                jnp.bfloat16)
+        else:
+            inp = jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len),
+                                       jnp.int32)
+        return {"tokens": inp}
+    # decode: one new token against a seq_len cache
+    window = _decode_window(cfg, shape)
+    cache = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                       dtype=jnp.bfloat16, window=window))
+    if cfg.frontend == "codec":
+        tok = jax.ShapeDtypeStruct((shape.global_batch, 1, cfg.frontend_dim),
+                                   jnp.bfloat16)
+    else:
+        tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    return {"tokens": tok, "cache": cache,
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def _decode_window(cfg, shape: InputShape) -> Optional[int]:
+    """long_500k needs sub-quadratic attention: SSM/hybrid run natively,
+    full-attention archs run the sliding-window variant."""
+    if shape.name == "long_500k" and cfg.family not in ("ssm",):
+        if cfg.attn_window is not None:
+            return cfg.attn_window
+        return cfg.long_context_window
+    return cfg.attn_window
+
+
+# ---------------------------------------------------------------- shardings
+def _maybe(axes, size_needed: int, mesh_cfg: MeshConfig):
+    """Axes tuple if it divides size_needed, else None (replicated)."""
+    if not axes:
+        return None
+    if size_needed % _axis_size(mesh_cfg, axes) == 0:
+        return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def batch_sharding_spec(mesh_cfg: MeshConfig, batch: int, extra: int,
+                        *, worker_stacked: bool) -> P:
+    if worker_stacked:
+        lead = sh._norm(tuple(mesh_cfg.worker_axes))
+        inner = _maybe(tuple(mesh_cfg.fsdp_axes), batch, mesh_cfg)
+        return P(lead, inner, *([None] * extra))
+    axes = _maybe(_data_axes(mesh_cfg), batch, mesh_cfg)
+    return P(axes, *([None] * extra))
+
+
+def cache_specs(cfg, mesh_cfg: MeshConfig, batch: int, seq_len: int = 0):
+    """PartitionSpec tree mirroring init_cache's (layer-stacked) structure.
+
+    KV layout policy: shard kv heads over the tensor axis when divisible;
+    otherwise shard the cache SEQ dim (distributed flash-decode: per-shard
+    partial softmax combined by small all-reduces) — replicating a 32k cache
+    across 16 tensor shards would blow HBM on the GQA-8 architectures.
+    """
+    t = mesh_cfg.tensor_size
+    bax = _maybe(_data_axes(mesh_cfg), batch, mesh_cfg)
+    tax = sh._norm(tuple(mesh_cfg.tensor_axes))
+    kvh = None
+    seq_ax = None
+    if cfg.num_kv_heads and cfg.num_kv_heads % t == 0:
+        kvh = tax
+    elif seq_len and seq_len % t == 0:
+        seq_ax = tax
+    ssmh = tax if cfg.ssm_state and cfg.ssm_num_heads % t == 0 else None
+
+    attn = {"k": P(None, bax, seq_ax, kvh, None),
+            "v": P(None, bax, seq_ax, kvh, None)}
+    ssm_c = {"state": P(None, bax, ssmh, None, None),
+             "conv": P(None, bax, None, None)}
+    if cfg.family == "ssm":
+        return ssm_c
+    if cfg.family == "hybrid":
+        return {"attn": attn, "ssm": ssm_c}
+    return attn
+
+
+def state_specs(cfg, mesh_cfg: MeshConfig, vrl_cfg: VRLConfig):
+    """PartitionSpec tree for WorkerState."""
+    from repro.core.types import WorkerState
+    defs = transformer.model_defs(cfg)
+    pspec = sh.partition_specs(defs, cfg, mesh_cfg)
+    wspec = jax.tree.map(lambda s: sh.worker_stacked_spec(s, mesh_cfg),
+                         pspec, is_leaf=lambda x: isinstance(x, P))
+    if vrl_cfg.inner_optimizer == "sgd" and not vrl_cfg.momentum:
+        inner = ()
+    elif vrl_cfg.inner_optimizer == "adam":
+        from repro.optim.optimizers import AdamState
+        inner = AdamState(wspec, wspec, P())
+    else:
+        inner = wspec
+    center = pspec if vrl_cfg.algorithm == "easgd" else None
+    return WorkerState(params=wspec, delta=wspec, inner=inner, center=center,
+                       step=P(), last_sync=P())
+
+
+# ------------------------------------------------------------------- lower
+@dataclasses.dataclass
+class DryrunResult:
+    arch: str
+    shape: str
+    mesh: str
+    fn: str
+    ok: bool
+    compile_s: float
+    per_device_bytes: int
+    roofline: Optional[rl.Roofline]
+    error: str = ""
+
+    def to_json(self) -> dict:
+        d = {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "fn": self.fn, "ok": self.ok, "compile_s": round(self.compile_s, 2),
+            "per_device_bytes": self.per_device_bytes, "error": self.error,
+        }
+        if self.roofline:
+            r = self.roofline
+            d.update(hlo_flops=r.hlo_flops, hlo_bytes=r.hlo_bytes,
+                     coll_bytes=r.coll_bytes, model_flops=r.model_flops,
+                     t_compute=r.t_compute, t_memory=r.t_memory,
+                     t_collective=r.t_collective, bottleneck=r.bottleneck,
+                     useful_ratio=r.useful_ratio, coll_detail=r.coll_detail)
+        return d
+
+
+def _mem_bytes(compiled) -> int:
+    try:
+        ma = compiled.memory_analysis()
+        return int(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                   + ma.temp_size_in_bytes + ma.generated_code_size_in_bytes)
+    except Exception:
+        return -1
+
+
+def _model_flops_train(cfg, shape: InputShape) -> float:
+    return 6.0 * cfg.active_param_count() * shape.global_batch * shape.seq_len
+
+
+def _model_flops_prefill(cfg, shape: InputShape) -> float:
+    return 2.0 * cfg.active_param_count() * shape.global_batch * shape.seq_len
+
+
+def _model_flops_decode(cfg, shape: InputShape) -> float:
+    return 2.0 * cfg.active_param_count() * shape.global_batch
+
+
+def lower_one(arch_id: str, shape_id: str, *, multi_pod: bool,
+              vrl_cfg: Optional[VRLConfig] = None,
+              fn_kind: Optional[str] = None, verbose: bool = True,
+              unrolled: bool = False, algorithm: str = "vrl_sgd",
+              comm_period: int = 20,
+              mesh_override: Optional[dict] = None,
+              cfg_override: Optional[dict] = None, tag: str = "",
+              last_only: bool = False, no_remat: bool = False):
+    """Lower+compile one combination. fn_kind in
+    {train, local, sync, prefill, decode} (default by shape kind).
+
+    ``unrolled=True`` unrolls the layer scan so cost_analysis() counts every
+    layer (XLA's HLO cost analysis counts a while-loop body ONCE); use the
+    scanned variant for the memory/fit artifact and the unrolled one for
+    roofline terms."""
+    serving = fn_kind in ("prefill", "decode") or (
+        fn_kind is None and registry.get_shape(shape_id).kind != "train")
+    mesh_cfg = registry.mesh_roles(arch_id, multi_pod=multi_pod,
+                                   serving=serving)
+    if mesh_override:
+        mesh_cfg = dataclasses.replace(mesh_cfg, **mesh_override)
+    cfg = registry.padded_arch(arch_id, mesh_cfg)
+    if cfg_override:
+        cfg = dataclasses.replace(cfg, **cfg_override)
+    shape = registry.get_shape(shape_id)
+    vrl_cfg = vrl_cfg or VRLConfig(
+        algorithm=algorithm, comm_period=comm_period,
+        delta_dtype="bfloat16" if (arch_id in registry._FSDP_ARCHS
+                                   or os.environ.get("VRL_DELTA_BF16"))
+        else "float32")
+    mesh = build_mesh(mesh_cfg)
+    mesh_name = "multi" if multi_pod else "single"
+    chips = math.prod(mesh_cfg.shape)
+    if fn_kind is None:
+        fn_kind = {"train": "train", "prefill": "prefill",
+                   "decode": "decode"}[shape.kind]
+
+    unroll = cfg.num_layers if unrolled else 1
+    ins = input_specs(arch_id, shape_id, mesh_cfg, cfg=cfg)
+    t0 = time.time()
+    name = f"{arch_id}/{shape_id}/{mesh_name}/{fn_kind}"
+    if unrolled:
+        name += "/unrolled"
+    if tag:
+        name += f"/{tag}"
+
+    with jax.set_mesh(mesh):
+        if fn_kind in ("train", "local", "sync"):
+            bundle = make_train_step(cfg, vrl_cfg,
+                                     remat=not no_remat, unroll=unroll,
+                                     param_dtype=jnp.bfloat16)
+            st_spec = state_specs(cfg, mesh_cfg, vrl_cfg)
+            state_abs = jax.eval_shape(
+                lambda: bundle.init_state(jax.random.PRNGKey(0),
+                                          mesh_cfg.num_workers))
+            extra = 2 if cfg.frontend == "codec" else 1
+            tok_spec = batch_sharding_spec(
+                mesh_cfg, shape.global_batch // mesh_cfg.num_workers,
+                extra, worker_stacked=True)
+            lab_spec = batch_sharding_spec(
+                mesh_cfg, shape.global_batch // mesh_cfg.num_workers,
+                1, worker_stacked=True)
+            if fn_kind == "sync":
+                fn = jax.jit(bundle.sync_step, in_shardings=(st_spec,),
+                             out_shardings=st_spec)
+                lowered = fn.lower(state_abs)
+            else:
+                step = (bundle.train_step if fn_kind == "train"
+                        else bundle.local_step)
+                fn = jax.jit(step,
+                             in_shardings=(st_spec, tok_spec, lab_spec),
+                             out_shardings=(st_spec, P()))
+                lowered = fn.lower(state_abs, ins["tokens"], ins["labels"])
+            mf = _model_flops_train(cfg, shape)
+            if fn_kind == "sync":
+                mf = 0.0
+        elif fn_kind == "prefill":
+            pdefs = transformer.model_defs(cfg)
+            params_abs = abstract_params(pdefs, jnp.bfloat16)
+            pspec = sh.partition_specs(pdefs, cfg, mesh_cfg)
+            prefill_fn = make_prefill(cfg, shape.seq_len, unroll=unroll,
+                                      last_only=last_only)
+            extra = 2 if cfg.frontend == "codec" else 1
+            tok_spec = batch_sharding_spec(mesh_cfg, shape.global_batch,
+                                           extra, worker_stacked=False)
+            bax = _maybe(_data_axes(mesh_cfg), shape.global_batch, mesh_cfg)
+            vax = _maybe(tuple(mesh_cfg.tensor_axes), cfg.vocab_size, mesh_cfg)
+            logits_spec = P(bax, None, vax)
+            eff = cfg.attn_window or shape.seq_len
+            c_spec = cache_specs(cfg, mesh_cfg, shape.global_batch,
+                                 seq_len=min(eff, shape.seq_len))
+            fn = jax.jit(prefill_fn, in_shardings=(pspec, tok_spec),
+                         out_shardings=(logits_spec, c_spec))
+            lowered = fn.lower(params_abs, ins["tokens"])
+            mf = _model_flops_prefill(cfg, shape)
+        elif fn_kind == "decode":
+            pdefs = transformer.model_defs(cfg)
+            params_abs = abstract_params(pdefs, jnp.bfloat16)
+            pspec = sh.partition_specs(pdefs, cfg, mesh_cfg)
+            window = _decode_window(cfg, shape)
+            serve_fn = make_serve_step(cfg, window=window, unroll=unroll)
+            eff = window if window is not None else shape.seq_len
+            c_spec = cache_specs(cfg, mesh_cfg, shape.global_batch,
+                                 seq_len=min(eff, shape.seq_len))
+            extra = 2 if cfg.frontend == "codec" else 1
+            tok_spec = batch_sharding_spec(mesh_cfg, shape.global_batch,
+                                           extra, worker_stacked=False)
+            bax = _maybe(_data_axes(mesh_cfg), shape.global_batch, mesh_cfg)
+            vax = _maybe(tuple(mesh_cfg.tensor_axes), cfg.vocab_size, mesh_cfg)
+            logits_spec = P(bax, None, vax)
+            fn = jax.jit(serve_fn,
+                         in_shardings=(pspec, c_spec, tok_spec, P()),
+                         out_shardings=(logits_spec, c_spec))
+            lowered = fn.lower(params_abs, ins["cache"], ins["tokens"],
+                               ins["pos"])
+            mf = _model_flops_decode(cfg, shape)
+        else:
+            raise ValueError(fn_kind)
+
+        compiled = lowered.compile()
+
+    dt = time.time() - t0
+    hlo = compiled.as_text()
+    roof = rl.analyze(name, compiled, hlo, mf, chips)
+    fn_label = fn_kind + ("+unroll" if unrolled else "") + \
+        (f"+{tag}" if tag else "")
+    res = DryrunResult(arch=arch_id, shape=shape_id, mesh=mesh_name,
+                       fn=fn_label, ok=True, compile_s=dt,
+                       per_device_bytes=_mem_bytes(compiled), roofline=roof)
+    if verbose:
+        try:
+            print(compiled.memory_analysis())
+        except Exception as e:  # noqa: BLE001
+            print("memory_analysis unavailable:", e)
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        print({k: cost.get(k) for k in ("flops", "bytes accessed")})
+        print(f"[{name}] compile {dt:.1f}s  mem/device "
+              f"{res.per_device_bytes/2**30:.2f} GiB  "
+              f"bottleneck={roof.bottleneck}  "
+              f"terms(ms) c={roof.t_compute*1e3:.3f} "
+              f"m={roof.t_memory*1e3:.3f} coll={roof.t_collective*1e3:.3f}")
+    return res
+
+
+FN_KINDS_BY_SHAPE = {
+    "train_4k": ["train", "local", "sync"],
+    "prefill_32k": ["prefill"],
+    "decode_32k": ["decode"],
+    "long_500k": ["decode"],
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--fn", default=None,
+                    help="train|local|sync|prefill|decode (default by shape)")
+    ap.add_argument("--all", action="store_true",
+                    help="run the full arch x shape matrix")
+    ap.add_argument("--unrolled", action="store_true",
+                    help="unroll the layer scan (accurate roofline flops)")
+    ap.add_argument("--algorithm", default="vrl_sgd",
+                    choices=["vrl_sgd", "local_sgd", "ssgd", "easgd"])
+    ap.add_argument("--worker-axes", default=None,
+                    help="comma list overriding VRL worker mesh axes")
+    ap.add_argument("--fsdp-axes", default=None)
+    ap.add_argument("--tensor-axes", default=None)
+    ap.add_argument("--seq-shard-acts", action="store_true",
+                    help="Megatron-style sequence-parallel activations")
+    ap.add_argument("--tag", default="", help="label for this variant")
+    ap.add_argument("--no-remat", action="store_true",
+                    help="disable activation checkpointing in train lowering")
+    ap.add_argument("--delta-bf16", action="store_true")
+    ap.add_argument("--last-only", action="store_true",
+                    help="prefill emits last-position logits only")
+    ap.add_argument("--two-layer", action="store_true",
+                    help="2-layer unrolled calibration lowering: per-layer "
+                         "roofline cost = (this run) - (scanned run); "
+                         "total = scanned + (L-1) * per-layer")
+    ap.add_argument("--out", default=None, help="append JSONL results here")
+    args = ap.parse_args(argv)
+
+    archs = registry.list_archs() if (args.all or not args.arch) \
+        else [args.arch]
+    shapes = list(registry.INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = [False, True] if args.mesh == "both" else [args.mesh == "multi"]
+
+    results = []
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            fns = [args.fn] if args.fn else FN_KINDS_BY_SHAPE[shape]
+            for multi in meshes:
+                for fn_kind in fns:
+                    mesh_override = {}
+                    for key, val in [("worker_axes", args.worker_axes),
+                                     ("fsdp_axes", args.fsdp_axes),
+                                     ("tensor_axes", args.tensor_axes)]:
+                        if val is not None:
+                            mesh_override[key] = tuple(
+                                a for a in val.split(",") if a)
+                    cfg_override = {}
+                    if args.seq_shard_acts:
+                        cfg_override["seq_shard_acts"] = True
+                    if args.two_layer:
+                        cfg_override["num_layers"] = 2
+                    try:
+                        res = lower_one(
+                            arch, shape, multi_pod=multi, fn_kind=fn_kind,
+                            unrolled=args.unrolled or args.two_layer,
+                            algorithm=args.algorithm,
+                            mesh_override=mesh_override or None,
+                            cfg_override=cfg_override or None,
+                            tag=args.tag or ("u2" if args.two_layer else ""),
+                            last_only=args.last_only,
+                            no_remat=args.no_remat)
+                    except Exception as e:  # noqa: BLE001
+                        failures += 1
+                        mesh_name = "multi" if multi else "single"
+                        fl = fn_kind + ("+unroll+u2" if args.two_layer
+                                        else "+unroll" if args.unrolled
+                                        else "") + (f"+{args.tag}" if args.tag else "")
+                        res = DryrunResult(
+                            arch=arch, shape=shape, mesh=mesh_name,
+                            fn=fl, ok=False, compile_s=0.0,
+                            per_device_bytes=-1, roofline=None,
+                            error=f"{type(e).__name__}: {e}"[:500])
+                        print(f"[FAIL] {arch}/{shape}/{mesh_name}/{fn_kind}: "
+                              f"{res.error}", file=sys.stderr)
+                    results.append(res)
+                    if args.out:
+                        with open(args.out, "a") as f:
+                            f.write(json.dumps(res.to_json()) + "\n")
+    print(f"\ndry-run complete: {len(results) - failures}/{len(results)} OK")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

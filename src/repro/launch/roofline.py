@@ -1,0 +1,169 @@
+"""Roofline analysis over compiled dry-run artifacts.
+
+Three terms, each in seconds (per device / per step):
+
+  compute    = HLO_FLOPs        / PEAK_FLOPS_BF16
+  memory     = HLO_bytes        / HBM_BW
+  collective = collective_bytes / ICI_LINK_BW
+
+``cost_analysis()`` on an SPMD-compiled executable reports *per-device*
+flops/bytes. Collective bytes are not in cost_analysis — we parse the
+optimized HLO and sum output-shape bytes of every collective op, multiplying
+ops that live inside while-loop bodies (scan-over-layers!) by the loop trip
+count recovered from the loop-condition constant.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+from repro.launch.mesh import HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COMP_RE = re.compile(r"^(%?[\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*{\s*$")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_hlo_computations(hlo: str) -> dict[str, list[str]]:
+    """Split HLO module text into {computation_name: [lines]}."""
+    comps: dict[str, list[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        if s.endswith("{") and ("(" in s or s.split()[0].endswith(")")):
+            # computation header like: %body.123 (arg: ...) -> ... {
+            name = s.split()[0].lstrip("%")
+            if name == "ENTRY":
+                name = s.split()[1].lstrip("%")
+            cur = name
+            comps[cur] = []
+        elif s == "}":
+            cur = None
+        elif cur is not None:
+            comps[cur].append(s)
+    return comps
+
+
+def _line_out_bytes(line: str) -> int:
+    """Bytes of the op's output tuple/array (first shape(s) on the line)."""
+    lhs = line.split("=", 1)
+    target = lhs[1] if len(lhs) == 2 else line
+    # take shapes up to the opcode's '(' — i.e. the result type annotation
+    m = re.match(r"\s*((?:\(?[\w\[\],\s{}\/#*]+\)?))\s+[\w\-]+\(", target)
+    span = m.group(1) if m else target
+    return sum(_shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(span))
+
+
+def _while_trip_counts(comps: dict[str, list[str]]) -> dict[str, int]:
+    """Map body-computation name -> trip count (best effort)."""
+    # find while ops: ... while(...), condition=%cond.1, body=%body.2
+    trip: dict[str, int] = {}
+    cond_const: dict[str, int] = {}
+    for name, lines in comps.items():
+        for ln in lines:
+            if " constant(" in ln:
+                m = re.search(r"constant\((\d+)\)", ln)
+                if m:
+                    cond_const[name] = max(cond_const.get(name, 0), int(m.group(1)))
+    for lines in comps.values():
+        for ln in lines:
+            if "while(" in ln and "body=" in ln:
+                mb = re.search(r"body=%?([\w\.\-]+)", ln)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ln)
+                if mb and mc:
+                    trip[mb.group(1)] = cond_const.get(mc.group(1), 1)
+    return trip
+
+
+def collective_bytes(hlo: str) -> dict[str, float]:
+    """Sum collective output bytes per op kind, loop-aware."""
+    comps = parse_hlo_computations(hlo)
+    trips = _while_trip_counts(comps)
+
+    # computations reachable from loop bodies inherit the multiplier
+    def comp_multiplier(name: str) -> int:
+        return trips.get(name, 1)
+
+    out: dict[str, float] = defaultdict(float)
+    for cname, lines in comps.items():
+        mult = comp_multiplier(cname)
+        for ln in lines:
+            for op in COLLECTIVE_OPS:
+                if re.search(rf"=\s*[\w\[\],\s()\/{{}}#*]*{op}[\.(]", ln) or \
+                   re.search(rf"\s{op}\(", ln):
+                    out[op] += mult * _line_out_bytes(ln)
+                    break
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+@dataclasses.dataclass
+class Roofline:
+    name: str
+    hlo_flops: float            # per device
+    hlo_bytes: float            # per device
+    coll_bytes: float           # per device
+    model_flops: float          # 6*N_active*D, whole step, all devices
+    chips: int
+    coll_detail: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def row(self) -> str:
+        return (f"{self.name} | {self.t_compute*1e3:9.3f} | "
+                f"{self.t_memory*1e3:9.3f} | {self.t_collective*1e3:9.3f} | "
+                f"{self.bottleneck:10s} | {self.useful_ratio:6.3f}")
+
+
+def analyze(name: str, compiled, hlo_text: str, model_flops: float,
+            chips: int) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    return Roofline(name=name, hlo_flops=flops, hlo_bytes=nbytes,
+                    coll_bytes=coll.get("total", 0.0),
+                    model_flops=model_flops, chips=chips, coll_detail=coll)

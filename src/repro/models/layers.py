@@ -1,0 +1,62 @@
+"""Shared low-level layers: RMSNorm, RoPE, gated MLPs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import ParamDef
+
+
+# ----------------------------------------------------------------- rms norm
+def rms_norm_def(d: int) -> ParamDef:
+    return ParamDef((d,), ("embed",), init="ones")
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                         # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                # broadcast over heads
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- mlp
+def mlp_defs(cfg: ModelConfig) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    if cfg.mlp_act in ("silu", "geglu"):
+        return {
+            "w_gate": ParamDef((d, ff), ("embed", "ff")),
+            "w_up": ParamDef((d, ff), ("embed", "ff")),
+            "w_down": ParamDef((ff, d), ("ff", "embed")),
+        }
+    return {
+        "w_up": ParamDef((d, ff), ("embed", "ff")),
+        "w_down": ParamDef((ff, d), ("ff", "embed")),
+    }
+
+
+def mlp(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.mlp_act == "silu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif cfg.mlp_act == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"], approximate=True) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"], approximate=True)
+    return h @ p["w_down"]

@@ -1,0 +1,114 @@
+"""Top-k routed mixture-of-experts MLP.
+
+Dispatch is capacity-bounded and sort-based (no (tokens, experts, capacity)
+one-hot einsum — at 384 experts that intermediate would be ~3e10 elements).
+Tokens are scattered into an (experts, capacity, d) buffer, experts run as a
+single batched matmul (expert-parallel: the leading E axis is tensor-sharded),
+and results are combined back with router weights. Overflowing tokens are
+dropped (standard capacity-factor semantics); the residual path keeps them
+intact.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import ParamDef
+from repro.sharding.constrain import maybe_constrain
+
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    d, ff, e = cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.num_experts
+    defs = {
+        "router": ParamDef((d, e), ("embed", None), scale=0.02),
+        # expert weights use dedicated logical axes: 2D-sharded as
+        # (experts -> tensor, expert_ff -> fsdp). Sharding the ff dim (not
+        # d) keeps the gate/up matmuls collective-free and leaves one
+        # (E, C, d) partial-sum all-reduce on the down-projection — vs
+        # FSDP-on-d which all-reduces the (E, C, ff) hiddens every matmul.
+        "w_gate": ParamDef((e, d, ff), ("experts", "expert_embed", "expert_ff")),
+        "w_up": ParamDef((e, d, ff), ("experts", "expert_embed", "expert_ff")),
+        "w_down": ParamDef((e, ff, d), ("experts", "expert_ff", "expert_embed")),
+    }
+    if cfg.num_shared_experts:
+        s = cfg.num_shared_experts
+        defs["shared_w_gate"] = ParamDef((d, s * ff), ("embed", "ff"))
+        defs["shared_w_up"] = ParamDef((d, s * ff), ("embed", "ff"))
+        defs["shared_w_down"] = ParamDef((s * ff, d), ("ff", "embed"))
+    return defs
+
+
+def capacity(cfg: ModelConfig, num_tokens: int) -> int:
+    c = int(num_tokens * cfg.experts_per_token * cfg.capacity_factor
+            / cfg.num_experts)
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def route(cfg: ModelConfig, router: jax.Array, x: jax.Array):
+    """x: (T, d) -> (weights (T,k), ids (T,k), aux_loss scalar)."""
+    logits = (x.astype(jnp.float32) @ router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # (T, E)
+    weights, ids = jax.lax.top_k(probs, cfg.experts_per_token)  # (T, k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    # Switch-style load-balance loss: E * sum_e f_e * p_e
+    e = cfg.num_experts
+    me = jnp.mean(probs, axis=0)                                # (E,)
+    one_hot = jax.nn.one_hot(ids[:, 0], e, dtype=jnp.float32)
+    fe = jnp.mean(one_hot, axis=0)
+    aux = e * jnp.sum(fe * me)
+    return weights, ids, aux
+
+
+def moe_mlp(cfg: ModelConfig, p: dict, x: jax.Array):
+    """x: (T, d) -> (y (T, d), aux_loss). Caller flattens batch*seq."""
+    t, d = x.shape
+    k = cfg.experts_per_token
+    cap = capacity(cfg, t)
+    weights, ids, aux = route(cfg, p["router"], x)
+
+    flat_e = ids.reshape(-1)                                  # (T*k,)
+    order = jnp.argsort(flat_e)                               # stable
+    sorted_e = flat_e[order]
+    # position of each entry within its expert's block
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos = jnp.arange(t * k) - first
+    keep = pos < cap
+    token = order // k
+
+    # scatter tokens into the expert buffer (dropped tokens -> slot cap-1,
+    # masked to zero so they contribute nothing)
+    safe_pos = jnp.where(keep, pos, cap - 1)
+    xk = x[token] * keep[:, None].astype(x.dtype)
+    buf = jnp.zeros((cfg.num_experts, cap, d), x.dtype)
+    buf = buf.at[sorted_e, safe_pos].add(xk)                  # (E, C, d)
+    # Expert-parallel on E. The second sharding axis depends on scale:
+    #   train (capacity large, divisible): shard CAPACITY over "data" so the
+    #     expert matmuls stay collective-free and GSPMD FSDP-gathers the
+    #     2D-sharded weights per layer (~2 GiB/layer on kimi-k2) instead of
+    #     all-reducing (E, C, ff) hiddens (~127 GiB/layer at train capacity);
+    #   decode (capacity tiny): co-shard d with the weights' FSDP axis so
+    #     the contraction partial-sums a few-MB tensor.
+    # maybe_constrain no-ops when the dim doesn't divide the axis.
+    # Expert-parallel on E; d co-sharded with the weights' FSDP axis so the
+    # contractions partial-sum. Best-known GSPMD layout for both decode and
+    # train: the gather/scatter dispatch poisons sharding propagation for
+    # every alternative we measured (EXPERIMENTS.md §Perf pair C — the
+    # structural fix is a shard_map all-to-all dispatch, documented there).
+    espec = ("model", None, "data")
+    buf = maybe_constrain(buf, *espec)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    h = maybe_constrain(h, "model", None, None)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])      # (E, C, d)
+    out_buf = maybe_constrain(out_buf, *espec)
+
+    contrib = out_buf[sorted_e, safe_pos] * keep[:, None].astype(x.dtype)
+    w = weights.reshape(-1)[order].astype(x.dtype)
+    y = jnp.zeros((t, d), x.dtype).at[token].add(contrib * w[:, None])
+
+    if cfg.num_shared_experts:
+        hs = jax.nn.silu(x @ p["shared_w_gate"]) * (x @ p["shared_w_up"])
+        y = y + hs @ p["shared_w_down"]
+    return y, aux

@@ -1,0 +1,85 @@
+"""Parameter definition substrate.
+
+Models declare their parameters once as a pytree of :class:`ParamDef`
+(shape + logical axis names + initializer). From that single declaration we
+derive:
+
+  * materialized parameters  (``materialize``)
+  * ``PartitionSpec`` trees  (``repro.sharding.specs.partition_specs``)
+  * ``ShapeDtypeStruct`` trees for dry-runs (no allocation)
+
+Logical axis vocabulary (mapped to mesh axes by sharding rules):
+  layers   — stacked-layer leading axis (never sharded)
+  worker   — VRL worker leading axis (sharded over worker mesh axes)
+  vocab    — vocabulary rows (tensor-sharded, Megatron-style)
+  embed    — the d_model dimension (FSDP-sharded when enabled)
+  heads    — q/o attention head dim (tensor-sharded)
+  kv_heads — k/v head dim (tensor-sharded only when divisible)
+  ff       — MLP hidden (tensor-sharded)
+  experts  — MoE expert dim (tensor-sharded = expert parallel)
+  ssm_inner— SSD inner channels (tensor-sharded)
+  null     — never sharded
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | small_normal
+    scale: Optional[float] = None  # stddev; default fan-in
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_def(x: Any) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _init_one(d: ParamDef, key: jax.Array, dtype) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+    scale = d.scale if d.scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+    return (scale * jax.random.normal(key, d.shape)).astype(dtype)
+
+
+def materialize(defs, key: jax.Array, dtype=jnp.float32):
+    """Materialize a ParamDef pytree into arrays with split PRNG keys."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [_init_one(d, k, dtype) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def abstract(defs, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree (for .lower() without allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs, is_leaf=is_def)
+
+
+def stack_defs(defs, n: int, axis_name: str = "layers"):
+    """Prepend a stacked leading axis (layers / worker) to every leaf."""
+    return jax.tree.map(
+        lambda d: ParamDef((n, *d.shape), (axis_name, *d.axes), d.init, d.scale),
+        defs, is_leaf=is_def)
+
+
+def count_params(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    return int(sum(np.prod(d.shape) for d in leaves))
+
+
+def map_defs(fn: Callable[[ParamDef], Any], defs):
+    return jax.tree.map(fn, defs, is_leaf=is_def)

@@ -1,0 +1,1 @@
+from repro.optim.optimizers import Optimizer, adam, make_inner, momentum, sgd  # noqa: F401

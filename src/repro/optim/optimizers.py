@@ -1,0 +1,103 @@
+"""Inner optimizers built from scratch (no optax): SGD, momentum, Adam.
+
+All of them are pytree transforms with the interface
+    opt.init(params) -> state
+    opt.update(params, grads, state) -> (new_params, new_state)
+Weight decay is decoupled (AdamW-style) and applied by every optimizer.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]
+
+
+def sgd(lr: float, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(params, grads, state):
+        def upd(x, g):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * x.astype(jnp.float32)
+            return (x.astype(jnp.float32) - lr * g).astype(x.dtype)
+        return jax.tree.map(upd, params, grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9, weight_decay: float = 0.0,
+             nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+
+    def _g(x, g):
+        g = g.astype(jnp.float32)
+        return g + weight_decay * x.astype(jnp.float32) if weight_decay else g
+
+    def update(params, grads, bufs):
+        new_m = jax.tree.map(lambda x, g, m: beta * m + _g(x, g),
+                             params, grads, bufs)
+        def upd(x, g, m):
+            step_dir = _g(x, g) + beta * m if nesterov else m
+            return (x.astype(jnp.float32) - lr * step_dir).astype(x.dtype)
+        new_p = jax.tree.map(upd, params, grads, new_m)
+        return new_p, new_m
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda x: jnp.zeros_like(x, jnp.float32)
+        return AdamState(jax.tree.map(z, params), jax.tree.map(z, params),
+                         jnp.zeros((), jnp.int32))
+
+    def update(params, grads, state):
+        count = state.count + 1
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+        new_mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state.mu, grads)
+        new_nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+
+        def upd(x, m, v):
+            step = lr * (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                step = step + lr * weight_decay * x.astype(jnp.float32)
+            return (x.astype(jnp.float32) - step).astype(x.dtype)
+
+        new_p = jax.tree.map(upd, params, new_mu, new_nu)
+        return new_p, AdamState(new_mu, new_nu, count)
+
+    return Optimizer(init, update)
+
+
+def make_inner(cfg) -> Optimizer:
+    """Build the inner optimizer from a VRLConfig."""
+    if cfg.inner_optimizer == "sgd":
+        if cfg.momentum:
+            return momentum(cfg.learning_rate, cfg.momentum, cfg.weight_decay)
+        return sgd(cfg.learning_rate, cfg.weight_decay)
+    if cfg.inner_optimizer == "momentum":
+        return momentum(cfg.learning_rate, cfg.momentum or 0.9, cfg.weight_decay)
+    if cfg.inner_optimizer == "adam":
+        return adam(cfg.learning_rate, weight_decay=cfg.weight_decay)
+    raise ValueError(cfg.inner_optimizer)

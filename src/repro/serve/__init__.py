@@ -1,0 +1,1 @@
+from repro.serve.engine import Engine, make_prefill, make_serve_step  # noqa: F401

@@ -1,0 +1,69 @@
+"""Serving engine: cache-building prefill + batched single-token decode.
+
+``serve_step`` is the function the decode dry-run shapes lower: ONE new token
+against a ``seq_len``-sized cache. The engine wraps it with greedy/temperature
+sampling for the runnable examples.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+
+
+def make_serve_step(cfg: ModelConfig, window: Optional[int] = None,
+                    unroll: int = 1):
+    """(params, cache, tokens (B,1), pos) -> (logits (B,1,V), cache)."""
+    def serve_step(params, cache, tokens, pos):
+        return transformer.decode_step(cfg, params, cache, tokens, pos,
+                                       window=window, unroll=unroll)
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig, cache_len: int,
+                 window: Optional[int] = None, unroll: int = 1,
+                 last_only: bool = False):
+    def prefill_fn(params, tokens):
+        return transformer.prefill(cfg, params, tokens, cache_len,
+                                   window=window, unroll=unroll,
+                                   last_only=last_only)
+    return prefill_fn
+
+
+class Engine:
+    """Minimal batched generation engine (greedy / temperature sampling)."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_len: int = 512,
+                 window: Optional[int] = None):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.window = window
+        self._prefill = jax.jit(make_prefill(cfg, max_len, window,
+                                             last_only=True))
+        self._step = jax.jit(make_serve_step(cfg, window))
+
+    def generate(self, prompt: jax.Array, steps: int, *,
+                 temperature: float = 0.0, key=None) -> jax.Array:
+        """prompt (B, S) int32 -> (B, S+steps) greedy/sampled continuation."""
+        bsz, s = prompt.shape
+        logits, cache = self._prefill(self.params, prompt)
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        out = [prompt, tok]
+        pos = s
+        for i in range(steps - 1):
+            logits, cache = self._step(self.params, cache, tok, pos)
+            if temperature > 0.0:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(
+                    sub, logits[:, 0] / temperature)[:, None].astype(jnp.int32)
+            else:
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            out.append(tok)
+            pos += 1
+        return jnp.concatenate(out, axis=1)

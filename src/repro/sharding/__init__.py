@@ -1,0 +1,9 @@
+from repro.sharding.specs import (  # noqa: F401
+    axis_rules,
+    batch_spec,
+    make_mesh,
+    partition_specs,
+    shardings,
+    spec_for,
+    worker_stacked_spec,
+)

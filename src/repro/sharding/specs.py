@@ -1,0 +1,91 @@
+"""Logical-axis -> PartitionSpec rules.
+
+ParamDef axes (see models/param.py) are mapped onto mesh axes according to
+the MeshConfig role assignment. The same rules build specs for worker-stacked
+algorithm state (params, Δ, momentum all share the param layout).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import MeshConfig, ModelConfig
+from repro.models.param import ParamDef, is_def
+
+
+def make_mesh(mesh_cfg: MeshConfig) -> Mesh:
+    return jax.make_mesh(mesh_cfg.shape, mesh_cfg.axis_names)
+
+
+def axis_rules(cfg: ModelConfig, mesh_cfg: MeshConfig) -> dict:
+    tensor = tuple(mesh_cfg.tensor_axes)
+    fsdp = tuple(mesh_cfg.fsdp_axes)
+    worker = tuple(mesh_cfg.worker_axes)
+    t = mesh_cfg.tensor_size
+    experts_sharded = bool(cfg.num_experts) and cfg.num_experts % t == 0
+    rules = {
+        "layers": None,
+        "worker": worker if worker else None,
+        "vocab": tensor,
+        "embed": fsdp if fsdp else None,
+        "heads": tensor if cfg.num_heads and cfg.num_heads % t == 0 else None,
+        "kv_heads": tensor if cfg.num_kv_heads and cfg.num_kv_heads % t == 0 else None,
+        # expert-parallel: the expert dim takes the tensor axis, so expert
+        # (and shared-expert) ff stays unsharded to avoid a duplicate axis.
+        "ff": None if experts_sharded else tensor,
+        "experts": tensor if experts_sharded else None,
+        # expert weights 2D: (experts -> tensor, d -> fsdp); the activation
+        # constraint in models/moe.py decides gather-vs-partial-sum by
+        # capacity (see EXPERIMENTS.md §Perf pair C).
+        "expert_embed": fsdp if fsdp else None,
+        "expert_ff": None,
+        "ssm_inner": tensor if cfg.ssm_state and cfg.ssm_d_inner % t == 0 else None,
+        None: None,
+    }
+    return rules
+
+
+def _norm(r):
+    """() or None -> None; 1-tuple -> name; n-tuple stays a tuple."""
+    if not r:
+        return None
+    if isinstance(r, tuple) and len(r) == 1:
+        return r[0]
+    return r
+
+
+def spec_for(d: ParamDef, rules: dict) -> P:
+    return P(*[_norm(rules.get(ax, None)) for ax in d.axes])
+
+
+def partition_specs(defs, cfg: ModelConfig, mesh_cfg: MeshConfig):
+    """Pytree of PartitionSpec mirroring a ParamDef pytree."""
+    rules = axis_rules(cfg, mesh_cfg)
+    return jax.tree.map(lambda d: spec_for(d, rules), defs, is_leaf=is_def)
+
+
+def shardings(defs, cfg: ModelConfig, mesh_cfg: MeshConfig, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        partition_specs(defs, cfg, mesh_cfg),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def worker_stacked_spec(spec: P, mesh_cfg: MeshConfig) -> P:
+    """Prepend the worker axis to an existing spec."""
+    return P(_norm(tuple(mesh_cfg.worker_axes)), *spec)
+
+
+def batch_spec(mesh_cfg: MeshConfig, *, worker_stacked: bool, extra_dims: int) -> P:
+    """Spec for (W, local_batch, ...) train batches or (batch, ...) serve."""
+    w = tuple(mesh_cfg.worker_axes)
+    f = tuple(mesh_cfg.fsdp_axes)
+    if worker_stacked:
+        return P(_norm(w), _norm(f), *([None] * extra_dims))
+    # serving: batch over all data-like axes
+    return P(_norm(w + f), *([None] * extra_dims))
+
+
+from repro.sharding.constrain import maybe_constrain  # noqa: F401,E402

@@ -1,0 +1,2 @@
+from repro.train.loss import accuracy, cross_entropy_cls, cross_entropy_lm  # noqa: F401
+from repro.train.train_loop import StepBundle, make_train_step  # noqa: F401

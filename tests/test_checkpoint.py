@@ -1,0 +1,41 @@
+"""Checkpoint roundtrip tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.configs.base import VRLConfig
+from repro.core import get_algorithm
+
+
+def test_roundtrip_pytree(tmp_path):
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.int32)}}
+    ckpt.save(str(tmp_path / "t"), tree, meta={"step": 7})
+    out = ckpt.restore(str(tmp_path / "t"), tree)
+    for l1, l2 in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    assert ckpt.load_meta(str(tmp_path / "t"))["meta"]["step"] == 7
+
+
+def test_roundtrip_worker_state(tmp_path):
+    cfg = VRLConfig(comm_period=4, learning_rate=0.01)
+    alg = get_algorithm("vrl_sgd")
+    state = alg.init(cfg, {"w": jnp.ones((3, 2))}, 4)
+    state = alg.train_step(cfg, state,
+                           {"w": jnp.ones((4, 3, 2)) * 0.1})
+    ckpt.save(str(tmp_path / "s"), state)
+    restored = ckpt.restore(str(tmp_path / "s"), state)
+    assert int(restored.step) == int(state.step)
+    np.testing.assert_allclose(np.asarray(restored.params["w"]),
+                               np.asarray(state.params["w"]))
+    np.testing.assert_allclose(np.asarray(restored.delta["w"]),
+                               np.asarray(state.delta["w"]))
+
+
+def test_shape_mismatch_raises(tmp_path):
+    tree = {"a": jnp.ones((2, 2))}
+    ckpt.save(str(tmp_path / "m"), tree)
+    import pytest
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path / "m"), {"a": jnp.ones((3, 3))})

@@ -1,0 +1,98 @@
+"""Hierarchical (two-level) VRL-SGD extension tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import VRLConfig
+from repro.core import hierarchical as H
+from repro.core import get_algorithm
+
+
+def quad_grads_grid(b):
+    """2x2 worker grid, four distinct quadratic objectives with optimum of
+    the average at x*=0: f_pd = a_pd (x - c_pd)^2, sum a*c = 0."""
+    a = jnp.array([[1.0, 2.0], [1.5, 0.5]])
+    c = jnp.array([[2.0, -1.0], [-2.0, 2.0]]) * b  # sum(a*c)=2-2-3+1=...
+    # choose c so that sum a_pd * c_pd = 0 -> optimum of mean at 0
+    c = jnp.array([[2.0, -1.0], [-1.0, 1.0]]) * b  # 1*2 -2*1 -1.5*1 +0.5*1 = -1?
+    c = jnp.array([[1.0, -0.5], [-0.5, 0.5]]) * b
+    # recompute: sum a*c = 1*1 + 2*(-.5) + 1.5*(-.5) + .5*.5 = 1 -1 -.75 +.25 = -0.5b
+    # shift last entry to zero the sum: c[1,1] = (0.5b)/0.5 + ... solve directly:
+    c = c.at[1, 1].set((-(1.0 * c[0, 0] + 2.0 * c[0, 1] + 1.5 * c[1, 0])) / 0.5)
+
+    def grads(params):
+        x = params["x"]  # (2, 2, 1)
+        return {"x": 2 * a[..., None] * (x - c[..., None])}
+    return grads
+
+
+def run_hier(k1, k2, steps=3000, lr=0.02, b=3.0):
+    cfg = VRLConfig(learning_rate=lr, weight_decay=0.0)
+    state = H.init(cfg, {"x": jnp.array([1.0])}, (2, 2))
+    g = quad_grads_grid(b)
+    step = jax.jit(lambda s: H.train_step(cfg, s, g(s.params), k1=k1, k2=k2))
+    for _ in range(steps):
+        state = step(state)
+    return state
+
+
+def test_hierarchical_converges_nonidentical():
+    state = run_hier(k1=4, k2=32)
+    xhat = float(H.average_model(state)["x"][0])
+    assert abs(xhat) < 1e-3
+
+
+def test_hierarchical_delta_invariants():
+    state = run_hier(k1=4, k2=16, steps=64)
+    d1 = np.asarray(state.delta1["x"])          # (2,2,1)
+    assert np.abs(d1.sum(axis=1)).max() < 1e-4  # zero within each pod
+    d2 = np.asarray(state.delta2["x"])          # (2,1,1)
+    assert abs(d2.sum()) < 1e-4                 # zero across pods
+
+
+def test_hierarchical_average_follows_sgd():
+    cfg = VRLConfig(learning_rate=0.05, weight_decay=0.0)
+    state = H.init(cfg, {"x": jnp.array([0.0])}, (2, 2))
+    rng = np.random.RandomState(0)
+    xhat = 0.0
+    for t in range(30):
+        g = jnp.asarray(rng.randn(2, 2, 1).astype(np.float32))
+        xhat -= 0.05 * float(g.mean())
+        state = H.train_step(cfg, state, {"x": g}, k1=3, k2=9)
+        got = float(H.average_model(state)["x"][0])
+        assert abs(got - xhat) < 1e-5
+
+
+def test_reduces_to_flat_vrl_single_pod():
+    """grid (1, N), k1 = k2 = k reproduces the paper's Algorithm 1."""
+    cfg = VRLConfig(algorithm="vrl_sgd", comm_period=4, learning_rate=0.05,
+                    weight_decay=0.0, warmup=False)
+    alg = get_algorithm("vrl_sgd")
+    flat = alg.init(cfg, {"x": jnp.array([1.0])}, 2)
+    hier = H.init(cfg, {"x": jnp.array([1.0])}, (1, 2))
+    b = 4.0
+
+    def g_flat(params):
+        x = params["x"]
+        return {"x": jnp.stack([2 * (x[0] + 2 * b), 4 * (x[1] - b)])}
+
+    def g_hier(params):
+        x = params["x"]  # (1,2,1)
+        return {"x": jnp.stack([2 * (x[0, 0] + 2 * b),
+                                4 * (x[0, 1] - b)])[None]}
+
+    for _ in range(40):
+        flat = alg.train_step(cfg, flat, g_flat(flat.params))
+        hier = H.train_step(cfg, hier, g_hier(hier.params), k1=4, k2=4)
+    np.testing.assert_allclose(np.asarray(hier.params["x"][0]),
+                               np.asarray(flat.params["x"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_cross_pod_savings_vs_flat_quality():
+    """k2 = 8*k1: cross-pod traffic drops 8x; convergence must remain close
+    to flat VRL at k1 (the point of the hierarchy)."""
+    state_h = run_hier(k1=4, k2=32, steps=4000)
+    xh = abs(float(H.average_model(state_h)["x"][0]))
+    assert xh < 1e-3  # still converges despite 8x fewer global syncs

@@ -1,0 +1,84 @@
+"""MoE routing/dispatch unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.models import moe
+
+
+def _cfg(**kw):
+    base = registry.smoke_arch("phi3.5-moe-42b-a6.6b")
+    import dataclasses
+    return dataclasses.replace(base, **kw)
+
+
+def test_router_weights_normalized():
+    cfg = _cfg()
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (64, cfg.d_model))
+    router = jax.random.normal(jax.random.PRNGKey(1),
+                               (cfg.d_model, cfg.num_experts)) * 0.1
+    w, ids, aux = moe.route(cfg, router, x)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
+    assert ids.shape == (64, cfg.experts_per_token)
+    assert bool((ids < cfg.num_experts).all())
+
+
+def test_moe_capacity_drops_only_overflow():
+    """With capacity_factor high enough nothing is dropped: the MoE output
+    must equal a dense per-token expert evaluation."""
+    cfg = _cfg(capacity_factor=8.0, num_shared_experts=0)
+    key = jax.random.PRNGKey(0)
+    params = {
+        "router": jax.random.normal(key, (cfg.d_model, cfg.num_experts)) * 0.1,
+        "w_gate": jax.random.normal(jax.random.PRNGKey(1),
+                                    (cfg.num_experts, cfg.d_model, cfg.moe_d_ff)) * 0.05,
+        "w_up": jax.random.normal(jax.random.PRNGKey(2),
+                                  (cfg.num_experts, cfg.d_model, cfg.moe_d_ff)) * 0.05,
+        "w_down": jax.random.normal(jax.random.PRNGKey(3),
+                                    (cfg.num_experts, cfg.moe_d_ff, cfg.d_model)) * 0.05,
+    }
+    x = jax.random.normal(jax.random.PRNGKey(4), (32, cfg.d_model))
+    y, aux = moe.moe_mlp(cfg, params, x)
+
+    # dense reference: evaluate every expert on every token, combine top-k
+    w, ids, _ = moe.route(cfg, params["router"], x)
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", x, params["w_gate"]))
+    h = h * jnp.einsum("td,edf->tef", x, params["w_up"])
+    all_out = jnp.einsum("tef,efd->ted", h, params["w_down"])
+    ref = jnp.zeros_like(x)
+    for j in range(cfg.experts_per_token):
+        ref = ref + w[:, j:j + 1] * jnp.take_along_axis(
+            all_out, ids[:, j][:, None, None], axis=1)[:, 0]
+    assert float(jnp.max(jnp.abs(y - ref))) < 1e-4
+
+
+def test_moe_capacity_one_drops_tokens():
+    cfg = _cfg(capacity_factor=0.01, num_shared_experts=0)
+    params_key = jax.random.split(jax.random.PRNGKey(0), 4)
+    params = {
+        "router": jax.random.normal(params_key[0], (cfg.d_model, cfg.num_experts)) * 0.1,
+        "w_gate": jax.random.normal(params_key[1], (cfg.num_experts, cfg.d_model, cfg.moe_d_ff)) * 0.05,
+        "w_up": jax.random.normal(params_key[2], (cfg.num_experts, cfg.d_model, cfg.moe_d_ff)) * 0.05,
+        "w_down": jax.random.normal(params_key[3], (cfg.num_experts, cfg.moe_d_ff, cfg.d_model)) * 0.05,
+    }
+    x = jax.random.normal(jax.random.PRNGKey(4), (256, cfg.d_model))
+    y, _ = moe.moe_mlp(cfg, params, x)
+    assert bool(jnp.isfinite(y).all())
+    # some tokens must have been dropped to zero contribution
+    norms = jnp.linalg.norm(y, axis=-1)
+    assert float((norms < 1e-9).mean()) > 0.1
+
+
+def test_aux_loss_uniform_router_is_one():
+    """Switch LB loss == 1.0 for a perfectly uniform router."""
+    cfg = _cfg()
+    x = jax.random.normal(jax.random.PRNGKey(0), (512, cfg.d_model))
+    router = jnp.zeros((cfg.d_model, cfg.num_experts))
+    # zero logits -> uniform probs; top-1 ties broken deterministically, so
+    # f_e collapses — perturb tiny bit for realistic tie-breaking
+    router = router + 1e-6 * jax.random.normal(jax.random.PRNGKey(1),
+                                               router.shape)
+    _, _, aux = moe.route(cfg, router, x)
+    assert 0.5 < float(aux) < 2.5

@@ -1,0 +1,122 @@
+"""Sharding/spec tests: rank agreement, divisibility rules, padding exactness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry
+from repro.configs.base import MeshConfig, pad_for_mesh
+from repro.models import transformer as T
+from repro.models.param import ParamDef, is_def
+from repro.sharding import specs as sh
+
+MESHES = [registry.mesh_roles("qwen2-0.5b"),
+          registry.mesh_roles("kimi-k2-1t-a32b"),
+          registry.mesh_roles("qwen2-0.5b", multi_pod=True)]
+
+
+@pytest.mark.parametrize("arch", registry.list_archs())
+@pytest.mark.parametrize("multi", [False, True])
+def test_specs_match_param_ranks(arch, multi):
+    mesh_cfg = registry.mesh_roles(arch, multi_pod=multi)
+    cfg = registry.padded_arch(arch, mesh_cfg)
+    defs = T.model_defs(cfg)
+    specs = sh.partition_specs(defs, cfg, mesh_cfg)
+    flat_d = jax.tree.leaves(defs, is_leaf=is_def)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_d) == len(flat_s)
+    sizes = dict(zip(mesh_cfg.axis_names, mesh_cfg.shape))
+    for d, s in zip(flat_d, flat_s):
+        assert len(s) == len(d.shape), (d, s)
+        for dim, part in zip(d.shape, tuple(s)):
+            if part is None:
+                continue
+            axes = (part,) if isinstance(part, str) else part
+            need = int(np.prod([sizes[a] for a in axes]))
+            assert dim % need == 0, (arch, d, s)
+
+
+@pytest.mark.parametrize("arch", registry.list_archs())
+def test_padded_heads_divide_tensor_axis(arch):
+    mesh_cfg = registry.mesh_roles(arch)
+    cfg = registry.padded_arch(arch, mesh_cfg)
+    if cfg.num_heads:
+        assert cfg.num_heads % mesh_cfg.tensor_size == 0
+        assert cfg.num_heads % max(cfg.num_kv_heads, 1) == 0
+    assert cfg.vocab_size % 128 == 0
+
+
+def test_head_padding_is_exact():
+    """Zero-padded q heads change nothing: build a padded model whose real
+    head weights equal the unpadded model and compare outputs."""
+    cfg = registry.smoke_arch("qwen2-0.5b", num_heads=6, num_kv_heads=2,
+                             head_dim=16, d_model=64, d_ff=128)
+    cfg_pad = pad_for_mesh(cfg, tensor_size=4)   # 6 -> 8 q heads
+    assert cfg_pad.num_heads == 8
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    params_pad = T.init_params(cfg_pad, key)
+
+    # copy real head weights into the padded layout (group-preserving):
+    g, gp = 3, 4
+    def expand(wq):  # (L, d, 6, hd) -> (L, d, 8, hd), zero extra slots
+        L, d, _, hd = wq.shape
+        out = np.zeros((L, d, 8, hd), np.float32)
+        src = np.asarray(wq).reshape(L, d, 2, g, hd)
+        out = out.reshape(L, d, 2, gp, hd)
+        out[:, :, :, :g] = src
+        return jnp.asarray(out.reshape(L, d, 8, hd))
+
+    def expand_o(wo):  # (L, 6, hd, d) -> (L, 8, hd, d)
+        L, _, hd, d = wo.shape
+        out = np.zeros((L, 8, hd, d), np.float32)
+        src = np.asarray(wo).reshape(L, 2, g, hd, d)
+        out = out.reshape(L, 2, gp, hd, d)
+        out[:, :, :g] = src
+        return jnp.asarray(out.reshape(L, 8, hd, d))
+
+    pp = jax.tree.map(lambda x: x, params_pad)
+    for name in ["embed", "final_norm"]:
+        pp[name] = params[name]
+    pp["layers"] = dict(params_pad["layers"])
+    pp["layers"]["norm1"] = params["layers"]["norm1"]
+    pp["layers"]["norm2"] = params["layers"]["norm2"]
+    pp["layers"]["mlp"] = params["layers"]["mlp"]
+    attn = dict(params["layers"]["attn"])
+    attn_p = dict(params_pad["layers"]["attn"])
+    attn_p["wq"] = expand(attn["wq"])
+    attn_p["wo"] = expand_o(attn["wo"])
+    attn_p["wk"], attn_p["wv"] = attn["wk"], attn["wv"]
+    if "bq" in attn:
+        bq = np.zeros((cfg.num_layers, 8, 16), np.float32)
+        bq_src = np.asarray(attn["bq"]).reshape(cfg.num_layers, 2, g, 16)
+        bq = bq.reshape(cfg.num_layers, 2, gp, 16)
+        bq[:, :, :g] = bq_src
+        attn_p["bq"] = jnp.asarray(bq.reshape(cfg.num_layers, 8, 16))
+        attn_p["bk"], attn_p["bv"] = attn["bk"], attn["bv"]
+    pp["layers"]["attn"] = attn_p
+
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    l1, _ = T.forward(cfg, params, toks)
+    l2, _ = T.forward(cfg_pad, pp, toks)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_worker_stacked_spec():
+    mesh_cfg = MeshConfig()
+    s = sh.worker_stacked_spec(P("model", None), mesh_cfg)
+    assert tuple(s) == ("data", "model", None)
+
+
+def test_batch_spec_roles():
+    m1 = registry.mesh_roles("qwen2-0.5b", multi_pod=True)
+    s = sh.batch_spec(m1, worker_stacked=True, extra_dims=1)
+    assert tuple(s) == (("pod", "data"), None, None)
+    m2 = registry.mesh_roles("kimi-k2-1t-a32b", multi_pod=True)
+    s = sh.batch_spec(m2, worker_stacked=True, extra_dims=1)
+    assert tuple(s) == ("pod", "data", None)

@@ -1,0 +1,56 @@
+"""End-to-end system test: non-iid VRL-SGD training -> checkpoint ->
+restore -> serve the averaged model with the batched engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.configs import registry
+from repro.configs.base import VRLConfig
+from repro.core import get_algorithm
+from repro.data import lm_token_stream
+from repro.serve.engine import Engine
+from repro.train.train_loop import make_train_step
+
+
+def test_end_to_end_train_checkpoint_serve(tmp_path):
+    w, batch, seq, steps = 4, 4, 32, 30
+    cfg = registry.smoke_arch("granite-3-2b", num_layers=2, d_model=64,
+                              d_ff=128, vocab_size=64, num_heads=4,
+                              num_kv_heads=2, head_dim=16)
+    vrl = VRLConfig(algorithm="vrl_sgd", comm_period=5, learning_rate=0.3,
+                    weight_decay=0.0, warmup=True)
+    bundle = make_train_step(cfg, vrl, remat=False)
+    state = bundle.init_state(jax.random.PRNGKey(0), w)
+    data = lm_token_stream(w, seq, 64, steps=steps, batch=batch,
+                           alpha=0.05, seed=3)
+    step = jax.jit(bundle.train_step)
+    first = last = None
+    for t in range(steps):
+        toks = jnp.asarray(data[t])
+        labels = jnp.roll(toks, -1, axis=-1)
+        state, loss = step(state, toks, labels)
+        first = first if first is not None else float(loss)
+        last = float(loss)
+    assert last < first  # training works
+
+    # checkpoint + restore
+    ckpt.save(str(tmp_path / "run"), state, meta={"step": int(state.step)})
+    restored = ckpt.restore(str(tmp_path / "run"), state)
+    np.testing.assert_allclose(
+        np.asarray(jax.tree.leaves(restored.params)[0]),
+        np.asarray(jax.tree.leaves(state.params)[0]))
+
+    # serve the averaged model
+    alg = get_algorithm("vrl_sgd")
+    model = alg.average_model(restored)
+    eng = Engine(cfg, model, max_len=64)
+    prompt = jnp.asarray(data[0, 0, :2, :8])        # (2, 8) prompt
+    out = eng.generate(prompt, steps=6)
+    assert out.shape == (2, 14)
+    assert bool((out >= 0).all()) and bool((out < cfg.vocab_size).all())
+
+    # sampled generation too
+    out2 = eng.generate(prompt, steps=4, temperature=0.8,
+                        key=jax.random.PRNGKey(1))
+    assert out2.shape == (2, 12)

@@ -1,0 +1,73 @@
+"""Property-based tests (hypothesis) for the VRL-SGD invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import VRLConfig
+from repro.core import get_algorithm
+
+
+def _run_random(seed, n_workers, k, lr, steps, dim=3):
+    """Drive VRL-SGD with arbitrary random gradient sequences."""
+    rng = np.random.RandomState(seed)
+    cfg = VRLConfig(algorithm="vrl_sgd", comm_period=k, learning_rate=lr,
+                    weight_decay=0.0, warmup=False)
+    alg = get_algorithm("vrl_sgd")
+    state = alg.init(cfg, {"w": jnp.zeros((dim,))}, n_workers)
+    xhat_manual = np.zeros(dim, np.float64)
+    for _ in range(steps):
+        g = rng.randn(n_workers, dim).astype(np.float32)
+        xhat_manual -= lr * g.mean(axis=0)
+        state = alg.train_step(cfg, state, {"w": jnp.asarray(g)})
+    return alg, state, xhat_manual
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n_workers=st.integers(2, 6),
+       k=st.integers(1, 7), lr=st.floats(1e-3, 0.5))
+def test_delta_sum_zero_invariant(seed, n_workers, k, lr):
+    """Σ_i Δ_i = 0 holds for ANY gradient sequence (paper §4.1)."""
+    steps = k * 3
+    _, state, _ = _run_random(seed, n_workers, k, lr, steps)
+    total = np.asarray(jnp.sum(state.delta["w"], axis=0))
+    np.testing.assert_allclose(total, 0.0, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n_workers=st.integers(2, 5),
+       k=st.integers(1, 6), lr=st.floats(1e-3, 0.3),
+       steps=st.integers(1, 20))
+def test_average_model_is_exact_sgd(seed, n_workers, k, lr, steps):
+    """eq. (8): the worker-average follows plain SGD on mean gradients,
+    for any step count (mid-period included)."""
+    alg, state, xhat_manual = _run_random(seed, n_workers, k, lr, steps)
+    xhat = np.asarray(alg.average_model(state)["w"])
+    np.testing.assert_allclose(xhat, xhat_manual, rtol=2e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(2, 6))
+def test_params_equal_after_sync(seed, k):
+    """All workers hold x̂ right after a sync."""
+    alg, state, _ = _run_random(seed, 4, k, 0.05, k * 2)
+    w = np.asarray(state.params["w"])
+    np.testing.assert_allclose(w, np.broadcast_to(w[:1], w.shape), atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_k1_trajectory_matches_ssgd(seed):
+    rng = np.random.RandomState(seed)
+    cfg = VRLConfig(algorithm="vrl_sgd", comm_period=1, learning_rate=0.1,
+                    weight_decay=0.0, warmup=False)
+    a1, a2 = get_algorithm("vrl_sgd"), get_algorithm("ssgd")
+    s1 = a1.init(cfg, {"w": jnp.zeros((2,))}, 3)
+    s2 = a2.init(cfg, {"w": jnp.zeros((2,))}, 3)
+    for _ in range(10):
+        g = jnp.asarray(rng.randn(3, 2).astype(np.float32))
+        s1 = a1.train_step(cfg, s1, {"w": g})
+        s2 = a2.train_step(cfg, s2, {"w": g})
+    np.testing.assert_allclose(np.asarray(s1.params["w"]),
+                               np.asarray(s2.params["w"]), rtol=1e-4,
+                               atol=1e-5)
