@@ -1,8 +1,17 @@
 """Paper §6.1 Metrics: 'VRL-SGD and Local SGD have the same training time in
 one epoch'. We verify the claim on CPU: the VRL local step's overhead over
 Local SGD's (the Δ subtraction) is a small fraction of step time, and the
-fused Pallas vrl_update kernel removes most of it."""
+fused Pallas vrl_update kernel removes most of it.
+
+Also benchmarks the flat-buffer engine (core/engine.py) against the
+reference tree path — pure update math (no model forward/backward) at two
+model sizes — and records the numbers in BENCH_engine.json so the perf
+trajectory is tracked from PR 1 onward.
+"""
 from __future__ import annotations
+
+import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -10,6 +19,7 @@ import jax.numpy as jnp
 from benchmarks.common import csv, timeit
 from repro.configs import registry
 from repro.configs.base import VRLConfig
+from repro.core import get_algorithm, make_engine
 from repro.train.train_loop import make_train_step
 
 
@@ -35,5 +45,63 @@ def main() -> dict:
     return out
 
 
+# --------------------------------------------------- engine update-math bench
+def _mlp_template(key, dim: int):
+    k1, k2 = jax.random.split(key)
+    return {"w1": jax.random.normal(k1, (dim, dim)) * 0.02,
+            "b1": jnp.zeros((dim,)),
+            "w2": jax.random.normal(k2, (dim, dim)) * 0.02,
+            "b2": jnp.zeros((dim,))}
+
+
+def bench_engine(*, workers: int = 4, dims=(256, 1024), iters: int = 10,
+                 out_path: str = "BENCH_engine.json") -> dict:
+    """Fused flat-buffer engine vs reference tree path, update math only.
+
+    Times one local step and one sync at each model size (n_params ≈
+    2·dim² + 2·dim per worker).  On CPU the Pallas kernels run in interpret
+    mode, so the fused numbers here bound bookkeeping overhead, not HBM
+    traffic — the dry-run/roofline artifacts carry the TPU story.
+    """
+    results = {"workers": workers, "sizes": {}}
+    for dim in dims:
+        params = _mlp_template(jax.random.PRNGKey(0), dim)
+        n_params = sum(p.size for p in jax.tree.leaves(params))
+        grads = jax.tree.map(
+            lambda x: jnp.broadcast_to(jnp.sin(x), (workers, *x.shape)),
+            params)
+        row = {"n_params": int(n_params)}
+        for backend in ["reference", "fused"]:
+            cfg = VRLConfig(algorithm="vrl_sgd", comm_period=20,
+                            learning_rate=0.01, weight_decay=1e-4,
+                            update_backend=backend)
+            if backend == "fused":
+                eng = make_engine(cfg, jax.eval_shape(lambda: params))
+                state = eng.init(params, workers)
+                local = jax.jit(eng.local_step)
+                sync = jax.jit(eng.sync)
+                us_local = timeit(lambda: local(state, grads), iters=iters)
+                us_sync = timeit(lambda: sync(state), iters=iters)
+            else:
+                alg = get_algorithm("vrl_sgd")
+                state = alg.init(cfg, params, workers)
+                local = jax.jit(lambda s, g: alg.local_step(cfg, s, g))
+                sync = jax.jit(lambda s: alg.sync(cfg, s))
+                us_local = timeit(lambda: local(state, grads), iters=iters)
+                us_sync = timeit(lambda: sync(state), iters=iters)
+            row[backend] = {"local_us": round(us_local, 1),
+                            "sync_us": round(us_sync, 1)}
+            csv(f"engine/{backend}/local_step/d{dim}", us_local,
+                f"{n_params/1e6:.2f}M params x {workers} workers")
+            csv(f"engine/{backend}/sync/d{dim}", us_sync, "")
+        results["sizes"][str(dim)] = row
+    results["backend"] = jax.default_backend()
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"wrote {os.path.abspath(out_path)}")
+    return results
+
+
 if __name__ == "__main__":
     main()
+    bench_engine()

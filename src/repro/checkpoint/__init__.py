@@ -1,1 +1,7 @@
-from repro.checkpoint.checkpoint import load_meta, restore, save  # noqa: F401
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    load_meta,
+    restore,
+    restore_flat_state,
+    save,
+    save_flat_state,
+)

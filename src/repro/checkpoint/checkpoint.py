@@ -72,3 +72,30 @@ def restore(path: str, like: Any) -> Any:
 def load_meta(path: str) -> dict:
     with open(os.path.join(path, "meta.json")) as f:
         return json.load(f)
+
+
+# ----------------------------------------------------- flat-engine states
+# The fused engine's FlatWorkerState is an ordinary pytree of buffers, so
+# save()/restore() work unchanged — but a flat buffer is meaningless without
+# its unravel spec (leaf paths/shapes/offsets + tiling).  These helpers
+# persist the spec's JSON description alongside the arrays and refuse to
+# restore into an engine whose layout disagrees (e.g. different lane width,
+# model revision, or block auto-choice).
+
+def save_flat_state(path: str, state: Any, spec, meta: dict | None = None
+                    ) -> None:
+    """Save a core.engine.FlatWorkerState plus its flat.FlatSpec layout."""
+    m = dict(meta or {})
+    m["flat_spec"] = spec.meta()
+    save(path, state, meta=m)
+
+
+def restore_flat_state(path: str, state_like: Any, spec) -> Any:
+    """Restore a FlatWorkerState, validating the recorded unravel spec."""
+    recorded = load_meta(path)["meta"].get("flat_spec")
+    if recorded is not None and recorded != spec.meta():
+        raise ValueError(
+            "checkpoint flat-buffer layout does not match the engine's "
+            f"unravel spec:\n  checkpoint: {recorded}\n  engine:     "
+            f"{spec.meta()}")
+    return restore(path, state_like)

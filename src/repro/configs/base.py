@@ -147,6 +147,21 @@ INPUT_SHAPES: dict[str, InputShape] = {
 
 
 @dataclass(frozen=True)
+class EngineConfig:
+    """Knobs for the flat-buffer fused-update engine (core/engine.py).
+
+    ``block=0`` auto-sizes the Pallas row tile (pad toward 1024-row
+    multiples, capping padding waste at ``max_pad_waste``); ``interpret=None``
+    runs kernel bodies in python everywhere except real TPU backends.
+    """
+
+    block: int = 0                  # Pallas tile height; 0 = auto
+    lanes: int = 256                # flat-buffer lane (last-dim) width
+    interpret: Optional[bool] = None
+    max_pad_waste: float = 0.25
+
+
+@dataclass(frozen=True)
 class VRLConfig:
     """The paper's algorithm knobs."""
 
@@ -160,6 +175,11 @@ class VRLConfig:
     momentum: float = 0.0
     easgd_alpha: float = 0.3        # elastic coefficient (EASGD baseline)
     delta_dtype: str = "float32"    # accumulator dtype for Δ
+    # execution backend for the update math: "fused" runs the flat-buffer
+    # Pallas engine (one HBM pass per local step, one flat all-reduce per
+    # sync); "reference" runs the per-leaf jax.tree.map path.
+    update_backend: str = "reference"   # fused | reference
+    engine: EngineConfig = EngineConfig()
     # hierarchical (beyond-paper): per-axis comm periods, e.g.
     # {"pod": 20, "data": 1} syncs across data every step, across pods every 20
     axis_periods: Optional[Tuple[Tuple[str, int], ...]] = None

@@ -1,4 +1,16 @@
 # The paper's primary contribution: VRL-SGD and its baselines as composable
-# distributed optimizers over worker-stacked pytrees.
-from repro.core.api import Algorithm, get_algorithm, list_algorithms  # noqa: F401
+# distributed optimizers.  Algorithms are thin AlgoSpec descriptions executed
+# by core/engine.py (reference tree path or fused flat-buffer Pallas path).
+from repro.core.api import (  # noqa: F401
+    Algorithm,
+    get_algorithm,
+    get_spec,
+    list_algorithms,
+)
+from repro.core.engine import (  # noqa: F401
+    AlgoSpec,
+    Engine,
+    FlatWorkerState,
+    make_engine,
+)
 from repro.core.types import WorkerState  # noqa: F401

@@ -4,12 +4,18 @@
     state = alg.init(vrl_cfg, params, num_workers)
     state = alg.train_step(vrl_cfg, state, worker_grads)   # grads: (W, ...)
     model = alg.average_model(state)
+
+Every algorithm is a thin ``engine.AlgoSpec`` description executed by
+``repro.core.engine``.  ``get_algorithm`` returns the per-leaf *reference*
+executor (tree-structured state, easy to inspect); the production fused
+flat-buffer executor is built with ``engine.make_engine`` (selected by
+``VRLConfig.update_backend = "fused"`` in the train loop).
 """
 from __future__ import annotations
 
 from typing import Any, Callable, NamedTuple
 
-from repro.core import easgd, local_sgd, ssgd, vrl_sgd
+from repro.core import easgd, engine, local_sgd, ssgd, vrl_sgd
 
 
 class Algorithm(NamedTuple):
@@ -39,8 +45,13 @@ def get_algorithm(name: str) -> Algorithm:
         train_step=m.train_step,
         local_step=m.local_step,
         sync=m.sync,
-        average_model=vrl_sgd.average_model,
+        average_model=engine.average_model,
     )
+
+
+def get_spec(name: str) -> engine.AlgoSpec:
+    """The algorithm's engine description (correction term + sync rule)."""
+    return engine.get_spec(name)
 
 
 def list_algorithms() -> list[str]:

@@ -5,55 +5,32 @@ the center variable x̃ pull toward each other elastically:
 
     x_i ← x_i − α (x_i − x̃)
     x̃  ← x̃ + α Σ_i (x_i − x̃)   =  (1 − Nα) x̃ + Nα · x̄
+
+Described by ``SPEC`` (no correction term, "elastic" sync rule, center
+variable) and executed by ``core/engine.py``.
 """
 from __future__ import annotations
 
 from typing import Any
 
-import jax
-import jax.numpy as jnp
-
 from repro.configs.base import VRLConfig
-from repro.core import vrl_sgd
+from repro.core import engine
 from repro.core.types import WorkerState
-from repro.optim.optimizers import make_inner
+
+SPEC = engine.ALGO_SPECS["easgd"]
 
 
 def init(cfg: VRLConfig, params: Any, num_workers: int) -> WorkerState:
-    state = vrl_sgd.init(cfg, params, num_workers)
-    center = jax.tree.map(lambda x: x[0].astype(jnp.float32), state.params)
-    return state._replace(center=center)
+    return engine.ref_init(SPEC, cfg, params, num_workers)
 
 
 def local_step(cfg: VRLConfig, state: WorkerState, grads: Any) -> WorkerState:
-    opt = make_inner(cfg)
-    new_params, new_inner = opt.update(state.params, grads, state.inner)
-    return state._replace(params=new_params, inner=new_inner,
-                          step=state.step + 1)
+    return engine.ref_local_step(SPEC, cfg, state, grads)
 
 
 def sync(cfg: VRLConfig, state: WorkerState) -> WorkerState:
-    # Zhang et al. parameterize elasticity as beta/N (beta = easgd_alpha):
-    # keeps the center update (1 - beta) x̃ + beta x̄ stable for any N.
-    n = jax.tree.leaves(state.params)[0].shape[0]
-    a = cfg.easgd_alpha / n
-
-    def upd_worker(x, c):
-        return (x.astype(jnp.float32)
-                - a * (x.astype(jnp.float32) - c)).astype(x.dtype)
-
-    def upd_center(c, x):
-        xbar = jnp.mean(x.astype(jnp.float32), axis=0)
-        return (1.0 - n * a) * c + n * a * xbar
-
-    new_params = jax.tree.map(upd_worker, state.params, state.center)
-    new_center = jax.tree.map(upd_center, state.center, state.params)
-    return state._replace(params=new_params, center=new_center,
-                          last_sync=state.step)
+    return engine.ref_sync(SPEC, cfg, state)
 
 
 def train_step(cfg: VRLConfig, state: WorkerState, grads: Any) -> WorkerState:
-    state = local_step(cfg, state, grads)
-    return jax.lax.cond(
-        (state.step - state.last_sync) >= cfg.comm_period,
-        lambda s: sync(cfg, s), lambda s: s, state)
+    return engine.ref_train_step(SPEC, cfg, state, grads)

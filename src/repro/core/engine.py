@@ -1,0 +1,455 @@
+"""Flat-buffer algorithm engine — the shared execution core for VRL-SGD and
+its baselines.
+
+Engine architecture
+===================
+
+Every algorithm in ``repro.core`` is the same loop over worker-stacked,
+model-sized state: a *local* elementwise update per step (eqs. 5-6: the
+inner-optimizer step on the Δ-corrected gradient) and a periodic *sync*
+(eq. 4: model averaging — the one communication event the paper's
+O(T^{1/2}N^{3/2}) complexity counts — plus the Δ update).  The engine
+factors that loop into two orthogonal pieces:
+
+  1. ``AlgoSpec`` — a thin *description* of an algorithm: does the local
+     step subtract Δ, is the gradient all-reduced every step (S-SGD), and
+     which sync rule runs at period boundaries ("vrl" | "average" |
+     "elastic" | "none").  ``core/{vrl_sgd,local_sgd,ssgd,easgd}.py`` are
+     now just named specs plus thin wrappers over this module.
+
+  2. Two interchangeable executors over a spec:
+
+     * the **reference** executor (``ref_*``): per-leaf ``jax.tree.map``
+       math over the parameter pytree — easy to read, slow (5+ HBM passes
+       per local step), and the oracle the fused path is tested against.
+
+     * the **fused** executor (``make_engine``): parameters, Δ, and the
+       inner-optimizer moments are flattened ONCE at init into contiguous
+       per-worker (W, R, C) buffers (layout + unravel spec: ``core/flat``),
+       and every step runs a single fused Pallas kernel
+       (``kernels/vrl_update.fused_*``) — one HBM pass for the local step,
+       one fused pass + a SINGLE flat all-reduce for sync.
+
+Worker axis
+-----------
+
+With ``mesh=None`` (CPU / single device) the worker axis is just the
+leading buffer dimension and "all-reduce" is ``jnp.mean`` over it.  Given a
+mesh, the engine step functions are wrapped in ``shard_map`` over the
+configured worker axes: the sync's model average lowers to exactly one
+``psum`` over the flat (R, C) buffer — the compiled HLO contains one
+all-reduce per sync and none in local steps (asserted in
+``tests/test_engine_collectives.py``).
+
+Backend selection
+-----------------
+
+``VRLConfig.update_backend`` ("fused" | "reference") threads from
+``configs/base.py`` through ``train/train_loop.py`` to ``launch/train.py``
+(where "fused" is the default).  Tiling knobs (``block``, ``lanes``,
+``interpret``) live in ``configs.base.EngineConfig``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import VRLConfig
+from repro.core import flat
+from repro.core.types import WorkerState
+from repro.kernels import vrl_update as vu
+from repro.optim.optimizers import AdamState, make_inner
+
+
+# ===================================================================== specs
+class AlgoSpec(NamedTuple):
+    """An algorithm as a description over the shared engine."""
+
+    name: str
+    use_delta: bool        # local step applies v = g − Δ (eq. 6)
+    grad_all_reduce: bool  # S-SGD: mean gradients over workers every step
+    sync: str              # "vrl" | "average" | "elastic" | "none"
+    has_center: bool       # EASGD center variable x̃
+    warmup_aware: bool     # honors VRLConfig.warmup (first period k=1)
+
+
+ALGO_SPECS = {
+    "vrl_sgd": AlgoSpec("vrl_sgd", use_delta=True, grad_all_reduce=False,
+                        sync="vrl", has_center=False, warmup_aware=True),
+    "local_sgd": AlgoSpec("local_sgd", use_delta=False, grad_all_reduce=False,
+                          sync="average", has_center=False,
+                          warmup_aware=False),
+    "ssgd": AlgoSpec("ssgd", use_delta=False, grad_all_reduce=True,
+                     sync="none", has_center=False, warmup_aware=False),
+    "easgd": AlgoSpec("easgd", use_delta=False, grad_all_reduce=False,
+                      sync="elastic", has_center=True, warmup_aware=False),
+}
+
+
+def get_spec(name: str) -> AlgoSpec:
+    if name not in ALGO_SPECS:
+        raise KeyError(f"unknown algorithm {name!r}; known: "
+                       f"{sorted(ALGO_SPECS)}")
+    return ALGO_SPECS[name]
+
+
+def should_sync(spec: AlgoSpec, cfg: VRLConfig, step: jax.Array,
+                last_sync: jax.Array) -> jax.Array:
+    """True when ``step`` (post-increment) completes a communication period.
+
+    VRL-SGD-W (Remark 5.3): with ``warmup`` the first period runs k=1.
+    """
+    if spec.warmup_aware:
+        k = jnp.where(cfg.warmup & (last_sync == 0) & (step <= 1),
+                      1, cfg.comm_period)
+    else:
+        k = cfg.comm_period
+    return (step - last_sync) >= k
+
+
+# ======================================================== reference executor
+# Per-leaf tree math — the oracle path.  Exactly the seed implementations,
+# now generic over AlgoSpec.
+
+def _bcast(tree, w: int):
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (w, *x.shape)).copy(),
+                        tree)
+
+
+def worker_mean(tree):
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0, keepdims=True), tree)
+
+
+def average_model(state) -> Any:
+    """x̂ — the evaluation model (paper reports metrics on the average)."""
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0), state.params)
+
+
+def ref_init(spec: AlgoSpec, cfg: VRLConfig, params: Any,
+             num_workers: int) -> WorkerState:
+    stacked = _bcast(params, num_workers)
+    delta_dt = jnp.dtype(cfg.delta_dtype)
+    delta = jax.tree.map(lambda x: jnp.zeros_like(x, dtype=delta_dt), stacked)
+    inner = make_inner(cfg).init(stacked)
+    center = (jax.tree.map(lambda x: x[0].astype(jnp.float32), stacked)
+              if spec.has_center else None)
+    return WorkerState(params=stacked, delta=delta, inner=inner,
+                       center=center, step=jnp.zeros((), jnp.int32),
+                       last_sync=jnp.zeros((), jnp.int32))
+
+
+def corrected_grads(state: WorkerState, grads: Any) -> Any:
+    """v_i = g_i − Δ_i  (eq. 6)."""
+    return jax.tree.map(lambda g, d: g - d.astype(g.dtype), grads,
+                        state.delta)
+
+
+def ref_local_step(spec: AlgoSpec, cfg: VRLConfig, state: WorkerState,
+                   grads: Any) -> WorkerState:
+    opt = make_inner(cfg)
+    if spec.grad_all_reduce:
+        # S-SGD's "local" step IS a train step: that's the point of the paper.
+        gbar = jax.tree.map(lambda g: jnp.mean(g, axis=0, keepdims=True),
+                            grads)
+        gbar = jax.tree.map(lambda g, x: jnp.broadcast_to(g, x.shape),
+                            gbar, state.params)
+        new_params, new_inner = opt.update(state.params, gbar, state.inner)
+        return state._replace(params=new_params, inner=new_inner,
+                              step=state.step + 1, last_sync=state.step + 1)
+    v = corrected_grads(state, grads) if spec.use_delta else grads
+    new_params, new_inner = opt.update(state.params, v, state.inner)
+    return state._replace(params=new_params, inner=new_inner,
+                          step=state.step + 1)
+
+
+def ref_sync(spec: AlgoSpec, cfg: VRLConfig, state: WorkerState
+             ) -> WorkerState:
+    if spec.sync == "none":
+        return state._replace(last_sync=state.step)
+
+    if spec.sync == "elastic":
+        # Zhang et al. parameterize elasticity as beta/N (beta = easgd_alpha).
+        n = jax.tree.leaves(state.params)[0].shape[0]
+        a = cfg.easgd_alpha / n
+
+        def upd_worker(x, c):
+            return (x.astype(jnp.float32)
+                    - a * (x.astype(jnp.float32) - c)).astype(x.dtype)
+
+        def upd_center(c, x):
+            xbar = jnp.mean(x.astype(jnp.float32), axis=0)
+            return (1.0 - n * a) * c + n * a * xbar
+
+        new_params = jax.tree.map(upd_worker, state.params, state.center)
+        new_center = jax.tree.map(upd_center, state.center, state.params)
+        return state._replace(params=new_params, center=new_center,
+                              last_sync=state.step)
+
+    xbar = worker_mean(state.params)                    # the all-reduce
+    new_params = jax.tree.map(
+        lambda x, xb: jnp.broadcast_to(xb, x.shape).astype(x.dtype),
+        state.params, xbar)
+    if spec.sync == "average":
+        return state._replace(params=new_params, last_sync=state.step)
+
+    # "vrl": Δ_i ← Δ_i + (x̂ − x_i)/(k_eff γ)  (eq. 4)
+    k_eff = jnp.maximum(state.step - state.last_sync, 1).astype(jnp.float32)
+
+    def upd_delta(d, x, xb):
+        return (d.astype(jnp.float32)
+                + (xb.astype(jnp.float32) - x.astype(jnp.float32))
+                / (k_eff * cfg.learning_rate)).astype(d.dtype)
+
+    new_delta = jax.tree.map(upd_delta, state.delta, state.params, xbar)
+    return state._replace(params=new_params, delta=new_delta,
+                          last_sync=state.step)
+
+
+def ref_train_step(spec: AlgoSpec, cfg: VRLConfig, state: WorkerState,
+                   grads: Any) -> WorkerState:
+    state = ref_local_step(spec, cfg, state, grads)
+    if spec.sync == "none":
+        return state
+    return jax.lax.cond(
+        should_sync(spec, cfg, state.step, state.last_sync),
+        lambda s: ref_sync(spec, cfg, s), lambda s: s, state)
+
+
+# ============================================================ fused executor
+class FlatWorkerState(NamedTuple):
+    """Worker-stacked algorithm state as contiguous flat buffers.
+
+    ``params``/``delta``/moments: (W, R, C); ``center``: (R, C) fp32
+    (EASGD only); Δ is () for algorithms that never use it.  The unravel
+    spec (``flat.FlatSpec``) lives on the Engine, not in the state — it is
+    static layout, checkpointed as metadata (``checkpoint.save_flat_state``).
+    """
+
+    params: jax.Array
+    delta: Any
+    inner: Any
+    center: Any
+    step: jax.Array
+    last_sync: jax.Array
+
+
+class Engine(NamedTuple):
+    """Bound fused-executor closures for one (algorithm, model) pair."""
+
+    algorithm: str
+    spec: flat.FlatSpec
+    algo: AlgoSpec
+    init: Callable              # (params_tree, num_workers) -> FlatWorkerState
+    train_step: Callable        # (state, grads_tree) -> state
+    local_step: Callable        # (state, grads_tree) -> state
+    sync: Callable              # (state,) -> state
+    average_model: Callable     # (state,) -> single-model pytree
+    params_tree: Callable       # (state,) -> worker-stacked params pytree
+
+
+# Adam moment/bias-correction bases.  Must equal optimizers.adam's defaults
+# (the reference executor) — the kernel gets these explicitly so the moment
+# update and the bias correction can never use different betas.
+_ADAM_B1, _ADAM_B2 = 0.9, 0.999
+
+
+def _inner_kind(cfg: VRLConfig) -> Tuple[str, float]:
+    """Mirror optimizers.make_inner dispatch for the fused kernels."""
+    if cfg.inner_optimizer == "sgd":
+        if cfg.momentum:
+            return "momentum", cfg.momentum
+        return "sgd", 0.0
+    if cfg.inner_optimizer == "momentum":
+        return "momentum", cfg.momentum or 0.9
+    if cfg.inner_optimizer == "adam":
+        return "adam", 0.0
+    raise ValueError(cfg.inner_optimizer)
+
+
+def _state_pspecs(state, axes) -> Any:
+    """shard_map PartitionSpecs: worker-stacked (ndim 3) leaves shard over
+    the worker axes; everything else (center, scalars) is replicated."""
+    ax = tuple(axes) if isinstance(axes, (tuple, list)) else (axes,)
+    ax = ax[0] if len(ax) == 1 else ax
+
+    def one(x):
+        if getattr(x, "ndim", 0) == 3:
+            return P(ax, None, None)
+        return P(*([None] * getattr(x, "ndim", 0)))
+
+    return jax.tree.map(one, state)
+
+
+def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
+                worker_axes: Tuple[str, ...] = ("data",)) -> Engine:
+    """Build the fused engine for ``cfg.algorithm`` over ``template`` (a
+    single-model pytree of arrays or ShapeDtypeStructs).
+
+    ``mesh``: optional jax Mesh.  When given (and the worker axes span more
+    than one device) the step functions run under ``shard_map`` over
+    ``worker_axes`` and the sync's model average is a single ``psum`` of the
+    flat buffer; otherwise the worker axis is purely local and the average
+    is a ``jnp.mean`` (the single-device fallback).
+    """
+    algo = get_spec(cfg.algorithm)
+    ecfg = cfg.engine
+    fspec = flat.make_spec(template, lanes=ecfg.lanes, block=ecfg.block,
+                           max_waste=ecfg.max_pad_waste)
+    interpret = (vu.default_interpret() if ecfg.interpret is None
+                 else ecfg.interpret)
+    block = fspec.block
+    kind, beta = _inner_kind(cfg)
+    lr, wd = cfg.learning_rate, cfg.weight_decay
+    delta_dt = jnp.dtype(cfg.delta_dtype)
+
+    axis_names = None
+    axis_size = 1
+    if mesh is not None:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        axis_size = math.prod(sizes[a] for a in worker_axes)
+        if axis_size > 1:
+            axis_names = tuple(worker_axes)
+
+    def _wmean(buf):
+        """Global worker mean of a (W_local, R, C) buffer -> (R, C).
+
+        On the mesh this is THE communication event: one all-reduce over
+        the flat buffer."""
+        if axis_names is None:
+            return jnp.mean(buf, axis=0)
+        total = buf.shape[0] * axis_size
+        s = jax.lax.psum(jnp.sum(buf, axis=0), axis_names)
+        return s / total
+
+    # ------------------------------------------------------------- init
+    def init(params: Any, num_workers: int) -> FlatWorkerState:
+        flat1 = flat.flatten_tree(fspec, params)
+        stacked = jnp.broadcast_to(flat1, (num_workers, *flat1.shape)).copy()
+        delta = (jnp.zeros(stacked.shape, delta_dt) if algo.use_delta else ())
+        if kind == "sgd":
+            inner = ()
+        elif kind == "momentum":
+            inner = jnp.zeros(stacked.shape, jnp.float32)
+        else:
+            z = jnp.zeros(stacked.shape, jnp.float32)
+            inner = AdamState(z, z, jnp.zeros((), jnp.int32))
+        center = flat1.astype(jnp.float32) if algo.has_center else None
+        return FlatWorkerState(params=stacked, delta=delta, inner=inner,
+                               center=center,
+                               step=jnp.zeros((), jnp.int32),
+                               last_sync=jnp.zeros((), jnp.int32))
+
+    # ------------------------------------------------- core step functions
+    # These see LOCAL shards (W_local, R, C) when shard_mapped.
+    def _core_local(state: FlatWorkerState, g: jax.Array) -> FlatWorkerState:
+        if algo.grad_all_reduce:
+            g = jnp.broadcast_to(_wmean(g)[None], g.shape)
+        d = state.delta if algo.use_delta else None
+        if kind == "sgd":
+            new_p = vu.fused_local_sgd(state.params, g, d, lr=lr, wd=wd,
+                                       block=block, interpret=interpret)
+            new_inner = state.inner
+        elif kind == "momentum":
+            new_p, new_m = vu.fused_local_momentum(
+                state.params, g, d, state.inner, lr=lr, beta=beta, wd=wd,
+                block=block, interpret=interpret)
+            new_inner = new_m
+        else:
+            count = state.inner.count + 1
+            t = count.astype(jnp.float32)
+            scal = jnp.stack([1.0 - _ADAM_B1 ** t, 1.0 - _ADAM_B2 ** t]
+                             ).reshape(1, 2).astype(jnp.float32)
+            new_p, new_mu, new_nu = vu.fused_local_adam(
+                state.params, g, d, state.inner.mu, state.inner.nu, scal,
+                lr=lr, b1=_ADAM_B1, b2=_ADAM_B2, wd=wd, block=block,
+                interpret=interpret)
+            new_inner = AdamState(new_mu, new_nu, count)
+        out = state._replace(params=new_p, inner=new_inner,
+                             step=state.step + 1)
+        if algo.grad_all_reduce:
+            out = out._replace(last_sync=state.step + 1)
+        return out
+
+    def _core_sync(state: FlatWorkerState) -> FlatWorkerState:
+        if algo.sync == "none":
+            return state._replace(last_sync=state.step)
+        if algo.sync == "elastic":
+            n = state.params.shape[0] * axis_size
+            a = cfg.easgd_alpha / n
+            p32 = state.params.astype(jnp.float32)
+            xbar = _wmean(p32)
+            new_p = (p32 - a * (p32 - state.center[None])
+                     ).astype(state.params.dtype)
+            new_c = (1.0 - n * a) * state.center + n * a * xbar
+            return state._replace(params=new_p, center=new_c,
+                                  last_sync=state.step)
+        xbar = _wmean(state.params)
+        if algo.sync == "average":
+            new_p = jnp.broadcast_to(xbar[None], state.params.shape
+                                     ).astype(state.params.dtype)
+            return state._replace(params=new_p, last_sync=state.step)
+        # "vrl": fused Δ update + parameter broadcast, one pass
+        k_eff = jnp.maximum(state.step - state.last_sync, 1
+                            ).astype(jnp.float32)
+        scal = (k_eff * lr).reshape(1, 1).astype(jnp.float32)
+        new_p, new_d = vu.fused_sync_vrl(
+            state.params, xbar.astype(state.params.dtype), state.delta,
+            scal, block=block, interpret=interpret)
+        return state._replace(params=new_p, delta=new_d,
+                              last_sync=state.step)
+
+    def _core_train(state: FlatWorkerState, g: jax.Array) -> FlatWorkerState:
+        state = _core_local(state, g)
+        if algo.sync == "none":
+            return state
+        return jax.lax.cond(
+            should_sync(algo, cfg, state.step, state.last_sync),
+            _core_sync, lambda s: s, state)
+
+    # ----------------------------------------------------- shard_map wrap
+    def _sharded(fn, with_grads: bool):
+        if axis_names is None:
+            return fn
+        from jax.experimental.shard_map import shard_map
+
+        def wrapped(state, *rest):
+            sspec = _state_pspecs(state, axis_names)
+            ax = axis_names[0] if len(axis_names) == 1 else axis_names
+            in_specs = (sspec, P(ax, None, None)) if with_grads else (sspec,)
+            return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=sspec, check_rep=False)(state, *rest)
+
+        return wrapped
+
+    local_core = _sharded(_core_local, with_grads=True)
+    sync_core = _sharded(_core_sync, with_grads=False)
+    train_core = _sharded(_core_train, with_grads=True)
+
+    # --------------------------------------------------------- public API
+    def _gbuf(grads: Any) -> jax.Array:
+        return flat.flatten_stacked(fspec, grads, dtype=fspec.dtype)
+
+    def local_step(state: FlatWorkerState, grads: Any) -> FlatWorkerState:
+        return local_core(state, _gbuf(grads))
+
+    def train_step(state: FlatWorkerState, grads: Any) -> FlatWorkerState:
+        return train_core(state, _gbuf(grads))
+
+    def sync(state: FlatWorkerState) -> FlatWorkerState:
+        return sync_core(state)
+
+    def params_tree(state: FlatWorkerState) -> Any:
+        """Worker-stacked parameter pytree view (for the model forward)."""
+        return flat.unflatten_stacked(fspec, state.params)
+
+    def avg_model(state: FlatWorkerState) -> Any:
+        return flat.unflatten_tree(fspec, jnp.mean(state.params, axis=0))
+
+    return Engine(algorithm=cfg.algorithm, spec=fspec, algo=algo,
+                  init=init, train_step=train_step, local_step=local_step,
+                  sync=sync, average_model=avg_model,
+                  params_tree=params_tree)

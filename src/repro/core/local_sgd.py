@@ -1,42 +1,32 @@
 """Local SGD baseline [Stich 2019]: k local steps, periodic model averaging.
 
 Exactly VRL-SGD with Δ_i ≡ 0 (paper §4.1, line 5 of Alg. 1 removed).
+Described by ``SPEC`` (no correction term, "average" sync rule) and executed
+by ``core/engine.py`` — reference tree path here, fused flat-buffer path via
+``engine.make_engine``.
 """
 from __future__ import annotations
 
 from typing import Any
 
-import jax
-import jax.numpy as jnp
-
 from repro.configs.base import VRLConfig
-from repro.core import vrl_sgd
+from repro.core import engine
 from repro.core.types import WorkerState
-from repro.optim.optimizers import make_inner
+
+SPEC = engine.ALGO_SPECS["local_sgd"]
 
 
 def init(cfg: VRLConfig, params: Any, num_workers: int) -> WorkerState:
-    state = vrl_sgd.init(cfg, params, num_workers)
-    return state
+    return engine.ref_init(SPEC, cfg, params, num_workers)
 
 
 def local_step(cfg: VRLConfig, state: WorkerState, grads: Any) -> WorkerState:
-    opt = make_inner(cfg)
-    new_params, new_inner = opt.update(state.params, grads, state.inner)
-    return state._replace(params=new_params, inner=new_inner,
-                          step=state.step + 1)
+    return engine.ref_local_step(SPEC, cfg, state, grads)
 
 
 def sync(cfg: VRLConfig, state: WorkerState) -> WorkerState:
-    xbar = vrl_sgd.worker_mean(state.params)
-    new_params = jax.tree.map(
-        lambda x, xb: jnp.broadcast_to(xb, x.shape).astype(x.dtype),
-        state.params, xbar)
-    return state._replace(params=new_params, last_sync=state.step)
+    return engine.ref_sync(SPEC, cfg, state)
 
 
 def train_step(cfg: VRLConfig, state: WorkerState, grads: Any) -> WorkerState:
-    state = local_step(cfg, state, grads)
-    return jax.lax.cond(
-        (state.step - state.last_sync) >= cfg.comm_period,
-        lambda s: sync(cfg, s), lambda s: s, state)
+    return engine.ref_train_step(SPEC, cfg, state, grads)

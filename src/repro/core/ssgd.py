@@ -1,38 +1,33 @@
 """Synchronous SGD baseline [Ghadimi & Lan 2013]: gradient all-reduce every
 step. The reference point for *linear iteration speedup*; communication
 complexity O(T).
+
+Described by ``SPEC`` (gradient all-reduce every step, no periodic sync) and
+executed by ``core/engine.py``.
 """
 from __future__ import annotations
 
 from typing import Any
 
-import jax
-import jax.numpy as jnp
-
 from repro.configs.base import VRLConfig
-from repro.core import vrl_sgd
+from repro.core import engine
 from repro.core.types import WorkerState
-from repro.optim.optimizers import make_inner
+
+SPEC = engine.ALGO_SPECS["ssgd"]
 
 
 def init(cfg: VRLConfig, params: Any, num_workers: int) -> WorkerState:
-    return vrl_sgd.init(cfg, params, num_workers)
+    return engine.ref_init(SPEC, cfg, params, num_workers)
 
 
 def local_step(cfg: VRLConfig, state: WorkerState, grads: Any) -> WorkerState:
     # "local" step of S-SGD still all-reduces: that's the point of the paper.
-    return train_step(cfg, state, grads)
+    return engine.ref_local_step(SPEC, cfg, state, grads)
 
 
 def sync(cfg: VRLConfig, state: WorkerState) -> WorkerState:
-    return state._replace(last_sync=state.step)
+    return engine.ref_sync(SPEC, cfg, state)
 
 
 def train_step(cfg: VRLConfig, state: WorkerState, grads: Any) -> WorkerState:
-    gbar = jax.tree.map(lambda g: jnp.mean(g, axis=0, keepdims=True), grads)
-    gbar = jax.tree.map(lambda g, x: jnp.broadcast_to(g, x.shape),
-                        gbar, state.params)
-    opt = make_inner(cfg)
-    new_params, new_inner = opt.update(state.params, gbar, state.inner)
-    return state._replace(params=new_params, inner=new_inner,
-                          step=state.step + 1, last_sync=state.step + 1)
+    return engine.ref_train_step(SPEC, cfg, state, grads)

@@ -5,6 +5,10 @@ leaf has a leading axis of size W (number of VRL workers). On the production
 mesh that axis is sharded over the worker mesh axes, so "mean over axis 0"
 lowers to exactly one all-reduce over the slow links — the paper's
 communication event. On CPU the same code simulates W workers on one device.
+
+``WorkerState`` is the reference executor's tree-structured state; the
+fused flat-buffer executor carries the same fields as contiguous (W, R, C)
+buffers in ``core.engine.FlatWorkerState`` (layout: ``core.flat``).
 """
 from __future__ import annotations
 

@@ -17,88 +17,57 @@ Invariants (tested):
   * k=1 ⇒ identical trajectory to S-SGD              (paper §4.1)
   * Δ_i ≡ 0 ⇒ identical trajectory to Local SGD      (paper §4.1)
   * x̂ follows eq. (8): exact generalized SGD on the averaged gradients.
+
+Engine architecture: this module is a thin *description* — ``SPEC`` names
+the correction term (Δ in the local step) and the sync rule ("vrl") — and
+delegates execution to ``core/engine.py``, which provides two backends: the
+per-leaf reference path below, and the flat-buffer fused-Pallas path
+(``engine.make_engine``) where the whole update is one HBM pass and the
+sync's model average is a single all-reduce over the flattened parameters.
+See the engine module docstring for the flat layout and backend knob.
 """
 from __future__ import annotations
 
-from typing import Any, Callable
+from typing import Any
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import VRLConfig
+from repro.core import engine
+from repro.core.engine import _bcast, average_model, worker_mean  # noqa: F401
 from repro.core.types import WorkerState
-from repro.optim.optimizers import make_inner
 
-
-def _bcast(tree, w: int):
-    return jax.tree.map(lambda x: jnp.broadcast_to(x, (w, *x.shape)).copy(), tree)
-
-
-def worker_mean(tree):
-    return jax.tree.map(lambda x: jnp.mean(x, axis=0, keepdims=True), tree)
+SPEC = engine.ALGO_SPECS["vrl_sgd"]
 
 
 def init(cfg: VRLConfig, params: Any, num_workers: int) -> WorkerState:
     """params: single-model pytree -> worker-stacked state."""
-    stacked = _bcast(params, num_workers)
-    delta_dt = jnp.dtype(cfg.delta_dtype)
-    delta = jax.tree.map(lambda x: jnp.zeros_like(x, dtype=delta_dt), stacked)
-    inner = make_inner(cfg).init(stacked)
-    return WorkerState(params=stacked, delta=delta, inner=inner, center=None,
-                       step=jnp.zeros((), jnp.int32),
-                       last_sync=jnp.zeros((), jnp.int32))
+    return engine.ref_init(SPEC, cfg, params, num_workers)
 
 
 def corrected_grads(state: WorkerState, grads: Any) -> Any:
     """v_i = g_i − Δ_i  (eq. 6)."""
-    return jax.tree.map(lambda g, d: g - d.astype(g.dtype), grads, state.delta)
+    return engine.corrected_grads(state, grads)
 
 
 def local_step(cfg: VRLConfig, state: WorkerState, grads: Any) -> WorkerState:
     """One local iteration on every worker (no cross-worker communication)."""
-    v = corrected_grads(state, grads)
-    opt = make_inner(cfg)
-    new_params, new_inner = opt.update(state.params, v, state.inner)
-    return state._replace(params=new_params, inner=new_inner,
-                          step=state.step + 1)
+    return engine.ref_local_step(SPEC, cfg, state, grads)
 
 
 def sync(cfg: VRLConfig, state: WorkerState) -> WorkerState:
     """Model averaging + Δ update (the only cross-worker communication)."""
-    k_eff = jnp.maximum(state.step - state.last_sync, 1).astype(jnp.float32)
-    xbar = worker_mean(state.params)                     # the all-reduce
-
-    def upd_delta(d, x, xb):
-        return (d.astype(jnp.float32)
-                + (xb.astype(jnp.float32) - x.astype(jnp.float32))
-                / (k_eff * cfg.learning_rate)).astype(d.dtype)
-
-    new_delta = jax.tree.map(upd_delta, state.delta, state.params, xbar)
-    new_params = jax.tree.map(
-        lambda x, xb: jnp.broadcast_to(xb, x.shape).astype(x.dtype),
-        state.params, xbar)
-    return state._replace(params=new_params, delta=new_delta,
-                          last_sync=state.step)
+    return engine.ref_sync(SPEC, cfg, state)
 
 
 def should_sync(cfg: VRLConfig, step: jax.Array, last_sync: jax.Array):
     """True when ``step`` (post-increment) completes a communication period."""
-    k = jnp.where(cfg.warmup & (last_sync == 0) & (step <= 1),
-                  1, cfg.comm_period)
-    return (step - last_sync) >= k
+    return engine.should_sync(SPEC, cfg, step, last_sync)
 
 
 def train_step(cfg: VRLConfig, state: WorkerState, grads: Any) -> WorkerState:
     """local step, then sync if the period ends (lax.cond keeps one jit)."""
-    state = local_step(cfg, state, grads)
-    return jax.lax.cond(
-        should_sync(cfg, state.step, state.last_sync),
-        lambda s: sync(cfg, s), lambda s: s, state)
-
-
-def average_model(state: WorkerState) -> Any:
-    """x̂ — the evaluation model (paper reports metrics on the average)."""
-    return jax.tree.map(lambda x: jnp.mean(x, axis=0), state.params)
+    return engine.ref_train_step(SPEC, cfg, state, grads)
 
 
 def make_algorithm(cfg: VRLConfig):

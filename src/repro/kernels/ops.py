@@ -81,9 +81,23 @@ def ssd_chunk_scan(x: jax.Array, dt: jax.Array, a_log: jax.Array,
 
 
 # ------------------------------------------------- fused optimizer updates
-def _to_2d(x: jax.Array, block: int):
+_LANES = 256
+
+
+def _leaf_tile(n: int, block: int) -> tuple[int, int]:
+    """(block, lanes) for an n-element leaf: auto block unless forced.
+
+    Auto mode pads rows toward 1024-row multiples but caps padding waste
+    (core.flat.choose_block) — a 4 KiB bias vector no longer pads to a
+    megabyte tile the way the old hardcoded block did.
+    """
+    from repro.core.flat import choose_block
+    rows = -(-n // _LANES)
+    return (block or choose_block(rows)), _LANES
+
+
+def _to_2d(x: jax.Array, block: int, c: int = _LANES):
     flat = x.reshape(-1)
-    c = 256
     pad = (-flat.size) % (c * block)
     if pad:
         flat = jnp.pad(flat, (0, pad))
@@ -91,16 +105,24 @@ def _to_2d(x: jax.Array, block: int):
 
 
 def vrl_local_update_tree(params, grads, delta, *, lr: float,
+                          block: int = 0,
                           interpret: Optional[bool] = None):
-    """Fused p' = p − γ(g − Δ) over a whole pytree."""
+    """Fused p' = p − γ(g − Δ) over a whole pytree.
+
+    ``block=0`` auto-sizes the per-leaf tile; pass an explicit block (and
+    ``interpret``) to pin the layout — both are surfaced through
+    ``configs.base.EngineConfig`` for the flat-buffer engine, which is the
+    preferred path (one kernel for the whole model instead of one per leaf).
+    """
     if interpret is None:
         interpret = _default_interpret()
 
     def one(p, g, d):
-        p2, shp, _ = _to_2d(p, 8)
-        g2, _, _ = _to_2d(g, 8)
-        d2, _, _ = _to_2d(d.astype(p.dtype), 8)
-        out = vu.vrl_local_update(p2, g2, d2, lr=lr, block=8,
+        blk, c = _leaf_tile(p.size, block)
+        p2, shp, _ = _to_2d(p, blk, c)
+        g2, _, _ = _to_2d(g, blk, c)
+        d2, _, _ = _to_2d(d.astype(p.dtype), blk, c)
+        out = vu.vrl_local_update(p2, g2, d2, lr=lr, block=blk,
                                   interpret=interpret)
         return out.reshape(-1)[:p.size].reshape(shp)
 
@@ -108,17 +130,22 @@ def vrl_local_update_tree(params, grads, delta, *, lr: float,
 
 
 def vrl_sync_update_tree(params, xbar, delta, *, k: int, lr: float,
+                         block: int = 0,
                          interpret: Optional[bool] = None):
-    """Fused Δ' = Δ + (x̂−p)/(kγ); p' = x̂ over a whole pytree."""
+    """Fused Δ' = Δ + (x̂−p)/(kγ); p' = x̂ over a whole pytree.
+
+    Tiling as in ``vrl_local_update_tree`` (auto unless ``block`` given).
+    """
     if interpret is None:
         interpret = _default_interpret()
     inv_kg = 1.0 / (k * lr)
 
     def one(p, xb, d):
-        p2, shp, _ = _to_2d(p, 8)
-        x2, _, _ = _to_2d(jnp.broadcast_to(xb, p.shape), 8)
-        d2, dshp, _ = _to_2d(d, 8)
-        po, do = vu.vrl_sync_update(p2, x2, d2, inv_kg=inv_kg, block=8,
+        blk, c = _leaf_tile(p.size, block)
+        p2, shp, _ = _to_2d(p, blk, c)
+        x2, _, _ = _to_2d(jnp.broadcast_to(xb, p.shape), blk, c)
+        d2, dshp, _ = _to_2d(d, blk, c)
+        po, do = vu.vrl_sync_update(p2, x2, d2, inv_kg=inv_kg, block=blk,
                                     interpret=interpret)
         return (po.reshape(-1)[:p.size].reshape(shp),
                 do.reshape(-1)[:d.size].reshape(dshp))

@@ -8,8 +8,21 @@ The sync step fuses the Δ update with the parameter broadcast the same way.
   local:  p' = p − γ·(g − Δ)                          (eq. 5 + 6)
   sync:   Δ' = Δ + (x̂ − p)/(kγ);  p' = x̂             (eq. 4 + line 6)
 
-Both operate on 2D row-major tiles of the flattened parameter leaf; ops.py
-handles flatten/pad/unflatten.
+Two families live here:
+
+  * ``vrl_local_update`` / ``vrl_sync_update`` — the original per-leaf 2D
+    tile kernels (used by ``ops.py``'s tree wrappers and their tests).
+  * ``fused_local_{sgd,momentum,adam}`` / ``fused_sync_vrl`` — the engine's
+    worker-stacked (W, R, C) kernels.  One grid step per (worker, row-tile);
+    the inner-optimizer moment update is fused into the same HBM pass, and
+    dynamic scalars (Adam bias correction, the sync-time k_eff·γ) ride in as
+    a tiny (1, n) operand so the compiled kernel never retraces per step.
+    All math is fp32 in-register with per-buffer output casts, matching the
+    reference tree path bit-for-bit in fp32.
+
+``block``/``interpret`` come from the engine config (``configs.base
+.EngineConfig``); the (R, C) layout and auto block choice from
+``core/flat.py``.
 """
 from __future__ import annotations
 
@@ -18,6 +31,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+
+def default_interpret() -> bool:
+    """Interpret-mode (python body) everywhere but real TPU backends."""
+    return jax.default_backend() != "tpu"
 
 
 def _local_kernel(p_ref, g_ref, d_ref, o_ref, *, lr: float):
@@ -70,3 +88,174 @@ def vrl_sync_update(p: jax.Array, xbar: jax.Array, delta: jax.Array, *,
                    jax.ShapeDtypeStruct((r, c), delta.dtype)],
         interpret=interpret,
     )(p, xbar, delta)
+
+
+# ===================================================================== engine
+# Worker-stacked (W, R, C) kernels for core/engine.py.  Grid = (W, R/block);
+# every buffer streams through VMEM exactly once per step.
+
+def _grid_specs(w: int, r: int, c: int, block: int, n: int):
+    """n identical (1, block, C) specs over a (W, R/block) grid."""
+    del w, r
+    return [pl.BlockSpec((1, block, c), lambda wi, i: (wi, i, 0))
+            for _ in range(n)]
+
+
+def _scal_spec(n: int):
+    """(1, n) fp32 dynamic-scalar operand, same tile for every grid step."""
+    return pl.BlockSpec((1, n), lambda wi, i: (0, 0))
+
+
+def _f32(ref):
+    return ref[...].astype(jnp.float32)
+
+
+def _fused_sgd_kernel(*refs, lr, wd, use_delta):
+    if use_delta:
+        p_ref, g_ref, d_ref, o_ref = refs
+        v = _f32(g_ref) - _f32(d_ref)
+    else:
+        p_ref, g_ref, o_ref = refs
+        v = _f32(g_ref)
+    p = _f32(p_ref)
+    if wd:
+        v = v + wd * p
+    o_ref[...] = (p - lr * v).astype(o_ref.dtype)
+
+
+def fused_local_sgd(p, g, d=None, *, lr: float, wd: float = 0.0,
+                    block: int = 1024, interpret=None):
+    """p' = p − γ((g − Δ) + wd·p) on (W, R, C) buffers.  d=None ⇒ Δ ≡ 0."""
+    if interpret is None:
+        interpret = default_interpret()
+    w, r, c = p.shape
+    use_delta = d is not None
+    ins = (p, g, d) if use_delta else (p, g)
+    specs = _grid_specs(w, r, c, block, len(ins))
+    return pl.pallas_call(
+        functools.partial(_fused_sgd_kernel, lr=lr, wd=wd,
+                          use_delta=use_delta),
+        grid=(w, r // block),
+        in_specs=specs,
+        out_specs=specs[0],
+        out_shape=jax.ShapeDtypeStruct((w, r, c), p.dtype),
+        interpret=interpret,
+    )(*ins)
+
+
+def _fused_momentum_kernel(*refs, lr, beta, wd, nesterov, use_delta):
+    if use_delta:
+        p_ref, g_ref, d_ref, m_ref, po_ref, mo_ref = refs
+        v = _f32(g_ref) - _f32(d_ref)
+    else:
+        p_ref, g_ref, m_ref, po_ref, mo_ref = refs
+        v = _f32(g_ref)
+    p = _f32(p_ref)
+    if wd:
+        v = v + wd * p
+    m_new = beta * _f32(m_ref) + v
+    step_dir = v + beta * m_new if nesterov else m_new
+    po_ref[...] = (p - lr * step_dir).astype(po_ref.dtype)
+    mo_ref[...] = m_new.astype(mo_ref.dtype)
+
+
+def fused_local_momentum(p, g, d, m, *, lr: float, beta: float,
+                         wd: float = 0.0, nesterov: bool = False,
+                         block: int = 1024, interpret=None):
+    """Momentum inner step fused with the Δ correction; returns (p', m')."""
+    if interpret is None:
+        interpret = default_interpret()
+    w, r, c = p.shape
+    use_delta = d is not None
+    ins = (p, g, d, m) if use_delta else (p, g, m)
+    specs = _grid_specs(w, r, c, block, len(ins))
+    return pl.pallas_call(
+        functools.partial(_fused_momentum_kernel, lr=lr, beta=beta, wd=wd,
+                          nesterov=nesterov, use_delta=use_delta),
+        grid=(w, r // block),
+        in_specs=specs,
+        out_specs=[specs[0], specs[0]],
+        out_shape=[jax.ShapeDtypeStruct((w, r, c), p.dtype),
+                   jax.ShapeDtypeStruct((w, r, c), m.dtype)],
+        interpret=interpret,
+    )(*ins)
+
+
+def _fused_adam_kernel(*refs, lr, b1, b2, eps, wd, use_delta):
+    if use_delta:
+        p_ref, g_ref, d_ref, mu_ref, nu_ref, s_ref, po, muo, nuo = refs
+        v = _f32(g_ref) - _f32(d_ref)
+    else:
+        p_ref, g_ref, mu_ref, nu_ref, s_ref, po, muo, nuo = refs
+        v = _f32(g_ref)
+    p = _f32(p_ref)
+    c1 = s_ref[0, 0]    # 1 − b1^t  (dynamic: depends on the step count)
+    c2 = s_ref[0, 1]    # 1 − b2^t
+    mu = b1 * _f32(mu_ref) + (1.0 - b1) * v
+    nu = b2 * _f32(nu_ref) + (1.0 - b2) * v * v
+    step = lr * (mu / c1) / (jnp.sqrt(nu / c2) + eps)
+    if wd:
+        step = step + lr * wd * p
+    po[...] = (p - step).astype(po.dtype)
+    muo[...] = mu.astype(muo.dtype)
+    nuo[...] = nu.astype(nuo.dtype)
+
+
+def fused_local_adam(p, g, d, mu, nu, scal, *, lr: float, b1: float = 0.9,
+                     b2: float = 0.999, eps: float = 1e-8, wd: float = 0.0,
+                     block: int = 1024, interpret=None):
+    """Adam inner step fused with the Δ correction.
+
+    ``scal``: (1, 2) fp32 = [1 − b1^t, 1 − b2^t] (bias-correction terms are
+    traced values, so they enter as data, not as static compile-time args).
+    Returns (p', mu', nu').
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    w, r, c = p.shape
+    use_delta = d is not None
+    ins = (p, g, d, mu, nu) if use_delta else (p, g, mu, nu)
+    specs = _grid_specs(w, r, c, block, len(ins)) + [_scal_spec(2)]
+    return pl.pallas_call(
+        functools.partial(_fused_adam_kernel, lr=lr, b1=b1, b2=b2, eps=eps,
+                          wd=wd, use_delta=use_delta),
+        grid=(w, r // block),
+        in_specs=specs,
+        out_specs=[specs[0], specs[0], specs[0]],
+        out_shape=[jax.ShapeDtypeStruct((w, r, c), p.dtype),
+                   jax.ShapeDtypeStruct((w, r, c), mu.dtype),
+                   jax.ShapeDtypeStruct((w, r, c), nu.dtype)],
+        interpret=interpret,
+    )(*ins, scal)
+
+
+def _fused_sync_kernel(p_ref, xb_ref, d_ref, s_ref, po_ref, do_ref):
+    p = _f32(p_ref)
+    xb = _f32(xb_ref)[None]     # (block, C) broadcast over the worker dim
+    kg = s_ref[0, 0]            # k_eff · γ  (k_eff is traced)
+    do_ref[...] = (_f32(d_ref) + (xb - p) / kg).astype(do_ref.dtype)
+    po_ref[...] = jnp.broadcast_to(xb, po_ref.shape).astype(po_ref.dtype)
+
+
+def fused_sync_vrl(p, xbar, d, scal, *, block: int = 1024, interpret=None):
+    """Δ' = Δ + (x̂ − p)/(k_eff γ); p' = x̂ — one pass, (W, R, C) buffers.
+
+    ``xbar``: (R, C) — each worker's grid step reads the same x̂ tile, so the
+    broadcast never materializes W copies in HBM.  ``scal``: (1, 1) fp32
+    holding k_eff·γ (division matches the reference path's rounding exactly).
+    Returns (p', Δ').
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    w, r, c = p.shape
+    s3 = _grid_specs(w, r, c, block, 2)
+    xb_spec = pl.BlockSpec((block, c), lambda wi, i: (i, 0))
+    return pl.pallas_call(
+        _fused_sync_kernel,
+        grid=(w, r // block),
+        in_specs=[s3[0], xb_spec, s3[1], _scal_spec(1)],
+        out_specs=[s3[0], s3[0]],
+        out_shape=[jax.ShapeDtypeStruct((w, r, c), p.dtype),
+                   jax.ShapeDtypeStruct((w, r, c), d.dtype)],
+        interpret=interpret,
+    )(p, xbar, d, scal)

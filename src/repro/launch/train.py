@@ -19,8 +19,7 @@ import numpy as np
 
 from repro import checkpoint as ckpt
 from repro.configs import registry
-from repro.configs.base import VRLConfig
-from repro.core import get_algorithm
+from repro.configs.base import EngineConfig, VRLConfig
 from repro.data import lm_token_stream
 from repro.models import transformer as T
 from repro.train.loss import cross_entropy_lm
@@ -35,6 +34,12 @@ def main(argv=None) -> int:
                     help="reduced config (CPU-runnable)")
     ap.add_argument("--algorithm", default="vrl_sgd",
                     choices=["vrl_sgd", "local_sgd", "ssgd", "easgd"])
+    ap.add_argument("--backend", default="fused",
+                    choices=["fused", "reference"],
+                    help="update math: flat-buffer fused Pallas engine "
+                         "(default) or the per-leaf reference path")
+    ap.add_argument("--block", type=int, default=0,
+                    help="engine Pallas tile height (0 = auto)")
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--batch", type=int, default=8, help="per-worker batch")
     ap.add_argument("--seq", type=int, default=64)
@@ -56,13 +61,20 @@ def main(argv=None) -> int:
     print(f"arch: {registry.describe(args.arch)}"
           f"{' [reduced smoke variant]' if args.smoke else ''}")
     vrl = VRLConfig(algorithm=args.algorithm, comm_period=args.k,
-                    learning_rate=args.lr, warmup=args.warmup)
+                    learning_rate=args.lr, warmup=args.warmup,
+                    update_backend=args.backend,
+                    engine=EngineConfig(block=args.block))
     bundle = make_train_step(cfg, vrl, remat=not args.smoke)
-    alg = get_algorithm(args.algorithm)
     state = bundle.init_state(jax.random.PRNGKey(args.seed), args.workers)
-    n_params = sum(p.size for p in jax.tree.leaves(state.params)) // args.workers
+    n_params = (bundle.engine.spec.size if bundle.engine is not None else
+                sum(p.size for p in jax.tree.leaves(state.params))
+                // args.workers)
     print(f"params: {n_params/1e6:.2f}M x {args.workers} workers, "
-          f"algorithm={args.algorithm}, k={args.k}")
+          f"algorithm={args.algorithm}, k={args.k}, backend={args.backend}")
+    if bundle.engine is not None:
+        es = bundle.engine.spec
+        print(f"engine: flat buffer {es.rows}x{es.lanes} "
+              f"({es.padded - es.size} pad elems), block={es.block}")
 
     data = lm_token_stream(args.workers, args.seq, cfg.vocab_size,
                            steps=args.steps, batch=args.batch,
@@ -72,7 +84,7 @@ def main(argv=None) -> int:
 
     @jax.jit
     def eval_avg(state, toks, labels):
-        avg = alg.average_model(state)
+        avg = bundle.average_model(state)
         logits, _ = T.forward(cfg, avg, toks.reshape(-1, args.seq))
         return cross_entropy_lm(logits, labels.reshape(-1, args.seq))
 
@@ -87,8 +99,12 @@ def main(argv=None) -> int:
                   f"avg_model_loss {float(el):.4f}  "
                   f"({(time.time()-t0)/(t+1):.2f}s/step)")
         if args.ckpt and (t + 1) % args.ckpt_every == 0:
-            ckpt.save(args.ckpt, state, meta={"step": t + 1,
-                                              "arch": args.arch})
+            meta = {"step": t + 1, "arch": args.arch}
+            if bundle.engine is not None:
+                ckpt.save_flat_state(args.ckpt, state, bundle.engine.spec,
+                                     meta=meta)
+            else:
+                ckpt.save(args.ckpt, state, meta=meta)
             print(f"checkpointed -> {args.ckpt}")
     print(f"done: {args.steps} steps in {time.time()-t0:.1f}s")
     return 0

@@ -14,15 +14,27 @@ Worker parallelism is a ``vmap`` over the leading worker axis; on the
 production mesh that axis is sharded over the worker mesh axes so local steps
 compile with no cross-worker collectives, which is exactly the property the
 paper's communication complexity counts.
+
+Backend selection: ``vrl_cfg.update_backend``.
+
+  "reference" — tree-structured WorkerState, per-leaf jax.tree.map update.
+  "fused"     — flat-buffer engine (core/engine.py): state is a
+                FlatWorkerState of contiguous (W, R, C) buffers, the update
+                math runs as fused Pallas kernels (one HBM pass per local
+                step), and with ``mesh=`` given the sync lowers to a single
+                all-reduce of the flat buffer via shard_map.  The model
+                forward still sees a normal pytree (engine.params_tree).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+import functools
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, VRLConfig
+from repro.core import engine as engine_mod
 from repro.core import get_algorithm
 from repro.models import transformer
 from repro.train.loss import chunked_cross_entropy_lm, cross_entropy_lm
@@ -43,15 +55,19 @@ class StepBundle(NamedTuple):
     local_step: callable
     sync_step: callable
     grads_fn: callable
+    average_model: Any = None   # (state,) -> single-model pytree
+    engine: Any = None          # core.engine.Engine when backend == "fused"
 
 
 def make_train_step(model_cfg: ModelConfig, vrl_cfg: VRLConfig,
                     *, remat: bool = True, unroll: int = 1,
                     param_dtype=jnp.float32,
-                    chunked_ce: int = 0) -> StepBundle:
+                    chunked_ce: int = 0, mesh=None,
+                    worker_axes=("data",)) -> StepBundle:
     """``chunked_ce > 0`` streams the LM loss over vocab chunks of that
     size — the (B, S, V) logits tensor is never materialized (a ~10x-S
-    fp32 buffer at 256k vocab)."""
+    fp32 buffer at 256k vocab).  ``mesh``/``worker_axes`` only affect the
+    fused backend (shard_map worker axis for the flat all-reduce)."""
     alg = get_algorithm(vrl_cfg.algorithm)
 
     def loss_fn(params, tokens, labels):
@@ -78,6 +94,34 @@ def make_train_step(model_cfg: ModelConfig, vrl_cfg: VRLConfig,
             grads = clip_by_global_norm(grads, vrl_cfg.clip_norm)
         return grads, loss
 
+    if vrl_cfg.update_backend == "fused":
+        template = jax.eval_shape(functools.partial(
+            transformer.init_params, model_cfg, dtype=param_dtype),
+            jax.random.PRNGKey(0))
+        eng = engine_mod.make_engine(vrl_cfg, template, mesh=mesh,
+                                     worker_axes=tuple(worker_axes))
+
+        def grads_fn(state, tokens, labels):
+            ptree = eng.params_tree(state)
+            grads, losses = jax.vmap(per_worker)(ptree, tokens, labels)
+            return grads, jnp.mean(losses)
+
+        def train_step(state, tokens, labels):
+            grads, loss = grads_fn(state, tokens, labels)
+            return eng.train_step(state, grads), loss
+
+        def local_step(state, tokens, labels):
+            grads, loss = grads_fn(state, tokens, labels)
+            return eng.local_step(state, grads), loss
+
+        def init_state(key, num_workers: int):
+            params = transformer.init_params(model_cfg, key,
+                                             dtype=param_dtype)
+            return eng.init(params, num_workers)
+
+        return StepBundle(init_state, train_step, local_step, eng.sync,
+                          grads_fn, eng.average_model, eng)
+
     def grads_fn(state, tokens, labels):
         grads, losses = jax.vmap(per_worker)(state.params, tokens, labels)
         return grads, jnp.mean(losses)
@@ -97,4 +141,5 @@ def make_train_step(model_cfg: ModelConfig, vrl_cfg: VRLConfig,
         params = transformer.init_params(model_cfg, key, dtype=param_dtype)
         return alg.init(vrl_cfg, params, num_workers)
 
-    return StepBundle(init_state, train_step, local_step, sync_step, grads_fn)
+    return StepBundle(init_state, train_step, local_step, sync_step,
+                      grads_fn, alg.average_model)

@@ -1,0 +1,208 @@
+"""Fused flat-buffer engine vs reference tree path: trajectory parity.
+
+The engine (core/engine.py) must reproduce the reference executor exactly
+(fp32, atol 1e-5) for all four algorithms x all three inner optimizers over
+multiple sync periods, and the paper invariants must hold on the fused path.
+Also covers the flat layout (core/flat.py): exact roundtrips, auto tiling,
+and checkpoint save/restore with the unravel spec.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.configs.base import EngineConfig, VRLConfig
+from repro.core import flat, get_algorithm, make_engine
+
+ALGORITHMS = ["vrl_sgd", "local_sgd", "ssgd", "easgd"]
+INNER = ["sgd", "momentum", "adam"]
+W, K, STEPS = 4, 4, 13          # 13 steps at k=4 -> 3 completed sync periods
+
+TEMPLATE = {"w": jnp.zeros((8, 3)), "b": jnp.zeros((5,)),
+            "deep": {"u": jnp.zeros((2, 2, 4))}}
+
+
+def _params0():
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    return {"w": jax.random.normal(ks[0], (8, 3)),
+            "b": jax.random.normal(ks[1], (5,)),
+            "deep": {"u": jax.random.normal(ks[2], (2, 2, 4))}}
+
+
+def _grads(params, t):
+    """Deterministic non-identical pseudo-gradients as a fn of params.
+
+    Leaves carry the worker axis and the sin phase differs per worker, so
+    workers drift apart between syncs (exercises Δ and the averaging)."""
+    def one(x):
+        w = x.shape[0]
+        phase = jnp.arange(w, dtype=x.dtype).reshape((w,) + (1,) * (x.ndim - 1))
+        return jnp.sin(3.0 * x + 0.7 * t + phase) + 0.1 * x
+    return jax.tree.map(one, params)
+
+
+def _cfg(alg, inner, k=K, warmup=False):
+    return VRLConfig(algorithm=alg, comm_period=k, learning_rate=0.05,
+                     weight_decay=1e-3, inner_optimizer=inner,
+                     momentum=0.9 if inner == "momentum" else 0.0,
+                     warmup=warmup, update_backend="fused")
+
+
+def _run_pair(alg_name, inner, steps=STEPS, k=K, warmup=False):
+    cfg = _cfg(alg_name, inner, k=k, warmup=warmup)
+    alg = get_algorithm(alg_name)
+    eng = make_engine(cfg, TEMPLATE)
+    p0 = _params0()
+    sref = alg.init(cfg, p0, W)
+    sfus = eng.init(p0, W)
+    ref_step = jax.jit(
+        lambda s, t: alg.train_step(cfg, s, _grads(s.params, t)))
+    fus_step = jax.jit(
+        lambda s, t: eng.train_step(s, _grads(eng.params_tree(s), t)))
+    for t in range(steps):
+        tt = jnp.float32(t)
+        sref = ref_step(sref, tt)
+        sfus = fus_step(sfus, tt)
+    return alg, eng, sref, sfus
+
+
+@pytest.mark.parametrize("inner", INNER)
+@pytest.mark.parametrize("alg_name", ALGORITHMS)
+def test_fused_matches_reference_trajectory(alg_name, inner):
+    alg, eng, sref, sfus = _run_pair(alg_name, inner)
+    for a, b in zip(jax.tree.leaves(sref.params),
+                    jax.tree.leaves(eng.params_tree(sfus))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    # the evaluation model agrees too
+    for a, b in zip(jax.tree.leaves(alg.average_model(sref)),
+                    jax.tree.leaves(eng.average_model(sfus))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    assert int(sfus.step) == STEPS
+    assert int(sfus.last_sync) == int(sref.last_sync)
+
+
+@pytest.mark.parametrize("inner", INNER)
+def test_fused_delta_matches_reference(inner):
+    _, eng, sref, sfus = _run_pair("vrl_sgd", inner)
+    dref = jax.tree.leaves(sref.delta)
+    dfus = jax.tree.leaves(flat.unflatten_stacked(eng.spec, sfus.delta))
+    for a, b in zip(dref, dfus):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_fused_delta_sums_to_zero():
+    """Paper §4.1: Σ_i Δ_i = 0 after every sync — on the fused path."""
+    _, eng, _, sfus = _run_pair("vrl_sgd", "sgd", steps=12)
+    # padding lanes are zero on every worker, so the buffer-level sum works
+    total = float(jnp.max(jnp.abs(jnp.sum(sfus.delta, axis=0))))
+    assert total < 1e-5
+
+
+def test_fused_k1_equals_ssgd():
+    """Paper §4.1: VRL-SGD with k=1 is exactly S-SGD — on the fused path."""
+    _, eng_v, _, s_vrl = _run_pair("vrl_sgd", "sgd", steps=20, k=1)
+    _, eng_s, _, s_ssgd = _run_pair("ssgd", "sgd", steps=20, k=1)
+    for a, b in zip(jax.tree.leaves(eng_v.params_tree(s_vrl)),
+                    jax.tree.leaves(eng_s.params_tree(s_ssgd))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_fused_warmup_syncs_after_first_step():
+    """Remark 5.3: VRL-SGD-W syncs once after step 1 on the fused path."""
+    _, _, sref, sfus = _run_pair("vrl_sgd", "sgd", steps=1, warmup=True)
+    assert int(sfus.last_sync) == 1
+    assert int(sref.last_sync) == 1
+    d = jnp.sum(sfus.delta, axis=0)
+    assert float(jnp.max(jnp.abs(d))) < 1e-5
+    assert float(jnp.max(jnp.abs(sfus.delta))) > 0.0
+
+
+def test_train_loop_fused_backend_matches_reference():
+    """End-to-end through make_train_step: real LM forward/backward, both
+    backends, same data -> same losses and same average model."""
+    import dataclasses
+
+    from repro.configs import registry
+    from repro.train.train_loop import make_train_step
+
+    cfg = registry.smoke_arch("qwen2-0.5b", num_layers=2, d_model=64,
+                              d_ff=128, vocab_size=64, num_heads=4,
+                              num_kv_heads=2, head_dim=16)
+    vrl_ref = VRLConfig(algorithm="vrl_sgd", comm_period=3,
+                        learning_rate=0.2, weight_decay=0.0, warmup=False,
+                        update_backend="reference")
+    vrl_fus = dataclasses.replace(vrl_ref, update_backend="fused")
+    w, b, s = 2, 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(3), (w, b, s), 0, 64)
+    labels = jnp.roll(toks, -1, -1)
+
+    losses = {}
+    states = {}
+    for name, vrl in [("ref", vrl_ref), ("fused", vrl_fus)]:
+        bundle = make_train_step(cfg, vrl, remat=False)
+        state = bundle.init_state(jax.random.PRNGKey(0), w)
+        step = jax.jit(bundle.train_step)
+        ls = []
+        for _ in range(7):
+            state, loss = step(state, toks, labels)
+            ls.append(float(loss))
+        losses[name] = ls
+        states[name] = bundle.average_model(state)
+    np.testing.assert_allclose(losses["ref"], losses["fused"], atol=1e-5)
+    for a, b_ in zip(jax.tree.leaves(states["ref"]),
+                     jax.tree.leaves(states["fused"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-5)
+
+
+# ------------------------------------------------------------- flat layout
+def test_flat_roundtrip_exact():
+    spec = flat.make_spec(TEMPLATE)
+    tree = _params0()
+    buf = flat.flatten_tree(spec, tree)
+    out = flat.unflatten_tree(spec, buf)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_flat_roundtrip_stacked_exact():
+    spec = flat.make_spec(TEMPLATE)
+    tree = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (3, *x.shape)) + jnp.arange(3.0)
+        .reshape(3, *([1] * x.ndim)), _params0())
+    buf = flat.flatten_stacked(spec, tree)
+    assert buf.shape == (3, spec.rows, spec.lanes)
+    out = flat.unflatten_stacked(spec, buf)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_choose_block_caps_waste():
+    for rows in [1, 3, 8, 17, 100, 1000, 1024, 5000, 100000]:
+        b = flat.choose_block(rows)
+        padded = -(-rows // b) * b
+        waste = (padded - rows) / padded
+        assert b in (1024, 512, 256, 128, 64, 32, 16, 8)
+        assert waste <= 0.25 or b == 8, (rows, b, waste)
+    assert flat.choose_block(100000) == 1024     # big buffers -> big tiles
+    assert flat.choose_block(3) == 8             # floor preserved
+
+
+def test_spec_meta_roundtrip_and_mismatch(tmp_path):
+    cfg = _cfg("vrl_sgd", "adam")
+    eng = make_engine(cfg, TEMPLATE)
+    state = eng.init(_params0(), W)
+    state = eng.train_step(state, _grads(eng.params_tree(state), 0.0))
+    ckpt.save_flat_state(str(tmp_path / "c"), state, eng.spec,
+                         meta={"step": 1})
+    restored = ckpt.restore_flat_state(str(tmp_path / "c"), state, eng.spec)
+    np.testing.assert_allclose(np.asarray(restored.params),
+                               np.asarray(state.params))
+    np.testing.assert_allclose(np.asarray(restored.inner.mu),
+                               np.asarray(state.inner.mu))
+    assert int(restored.step) == 1
+    # a different layout must refuse to restore
+    other = make_engine(cfg, {"w": jnp.zeros((4, 4))})
+    with pytest.raises(ValueError, match="unravel spec"):
+        ckpt.restore_flat_state(str(tmp_path / "c"), state, other.spec)
