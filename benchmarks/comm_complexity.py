@@ -1,18 +1,25 @@
 """Paper Table 1: communication complexity.
 
-Two views:
+Three views:
   (a) MEASURED collective bytes per training iteration, parsed from the
-      compiled production-mesh HLO (qwen2-0.5b on the 16x16 mesh), for
-      S-SGD (sync every step) vs Local SGD / VRL-SGD (sync every k):
+      compiled production-mesh HLO (qwen2-0.5b on the 16x16 mesh, fused
+      flat-buffer backend), for S-SGD (sync every step) vs Local SGD /
+      VRL-SGD (sync every k):
           per-iter bytes = local_step_bytes + sync_bytes / k
       The worker-axis term drops by ~k, exactly the paper's mechanism.
-  (b) ASYMPTOTIC communication rounds at the paper's own scale
+  (b) HIERARCHICAL cross-pod bytes on the 2x16x16 multi-pod mesh: the
+      level-2 sync (the only event touching the slow DCI tier) runs every
+      k2 steps, so cross-pod bytes/iter = sync2_bytes / k2 — vs flat
+      VRL-SGD at k1 whose every sync all-reduces the full buffer across
+      pods: cross-pod bytes/iter = sync_bytes / k1.  The ratio is k2/k1
+      with identical intra-pod cadence.
+  (c) ASYMPTOTIC communication rounds at the paper's own scale
       (T=117,187 iterations, N=8 workers, paper §F):
           S-SGD      T                    = 117,187
           Local SGD  T / (T^1/4 N^-3/4)   = T^{3/4} N^{3/4}
           VRL-SGD    T / (T^1/2 N^-3/2)   = T^{1/2} N^{3/2}
 
-The measured view shells out to the dry-run driver because the 512-device
+The measured views shell out to the dry-run driver because the 512-device
 placeholder env must be set before jax initializes.
 """
 from __future__ import annotations
@@ -27,14 +34,17 @@ from benchmarks.common import csv
 
 ARCH = "qwen2-0.5b"
 K = 20
+K1, K2 = 5, 20      # hierarchical periods for view (b)
 
 
-def _dryrun(fn: str, algorithm: str = "vrl_sgd", out: str = "") -> dict:
+def _dryrun(fn: str, algorithm: str = "vrl_sgd", out: str = "",
+            mesh: str = "single") -> dict:
     cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", ARCH,
-           "--shape", "train_4k", "--fn", fn, "--mesh", "single",
-           "--algorithm", algorithm, "--out", out]
+           "--shape", "train_4k", "--fn", fn, "--mesh", mesh,
+           "--algorithm", algorithm, "--out", out,
+           "--k1", str(K1), "--k2", str(K2)]
     env = dict(os.environ, PYTHONPATH="src")
-    subprocess.run(cmd, env=env, capture_output=True, timeout=1200,
+    subprocess.run(cmd, env=env, capture_output=True, timeout=1800,
                    check=True)
     with open(out) as f:
         return json.loads(f.readlines()[-1])
@@ -61,7 +71,22 @@ def main() -> dict:
     csv("table1/measured_bytes_per_iter/worker_axis_reduction", 0.0,
         f"sync_vs_ssgd_worker_bytes={(ssgd_b - local_b) / max(sync_b / K, 1):.1f}x")
 
-    # asymptotic rounds at the paper's scale (T=117187, N=8)
+    # (b) hierarchical cross-pod bytes on the multi-pod mesh
+    hier_sync2 = _dryrun("sync2", "hier_vrl_sgd", tmp, mesh="multi")
+    flat_sync = _dryrun("sync", "vrl_sgd", tmp, mesh="multi")
+    s2_b = hier_sync2["coll_bytes"]
+    flat_b = flat_sync["coll_bytes"]
+    hier_cross_iter = s2_b / K2
+    flat_cross_iter = flat_b / K1
+    csv("table1/hier_cross_pod_bytes_per_iter/hier_k1_k2", 0.0,
+        f"bytes={hier_cross_iter:.3e};sync2={s2_b:.3e};k1={K1};k2={K2}")
+    csv("table1/hier_cross_pod_bytes_per_iter/flat_vrl_k1", 0.0,
+        f"bytes={flat_cross_iter:.3e};sync={flat_b:.3e};k1={K1}")
+    csv("table1/hier_cross_pod_bytes_per_iter/reduction", 0.0,
+        f"flat_over_hier={flat_cross_iter / max(hier_cross_iter, 1):.1f}x"
+        f" (expected ~k2/k1 = {K2 / K1:.1f}x)")
+
+    # (c) asymptotic rounds at the paper's scale (T=117187, N=8)
     t_iters, n = 117_187, 8
     rounds = {
         "ssgd": t_iters,
@@ -72,7 +97,11 @@ def main() -> dict:
         csv(f"table1/asymptotic_rounds/{alg}", 0.0,
             f"rounds={r};T={t_iters};N={n}")
     out.update(measured=dict(ssgd=ssgd_b, vrl_iter=vrl_iter, local=local_b,
-                             sync=sync_b), rounds=rounds)
+                             sync=sync_b),
+               hier=dict(cross_pod_iter=hier_cross_iter,
+                         flat_cross_pod_iter=flat_cross_iter,
+                         sync2=s2_b, flat_sync=flat_b, k1=K1, k2=K2),
+               rounds=rounds)
     return out
 
 

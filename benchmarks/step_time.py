@@ -18,8 +18,8 @@ import jax.numpy as jnp
 
 from benchmarks.common import csv, timeit
 from repro.configs import registry
-from repro.configs.base import VRLConfig
-from repro.core import get_algorithm, make_engine
+from repro.configs.base import HierConfig, VRLConfig
+from repro.core import get_algorithm, hierarchical, make_engine
 from repro.train.train_loop import make_train_step
 
 
@@ -96,12 +96,84 @@ def bench_engine(*, workers: int = 4, dims=(256, 1024), iters: int = 10,
             csv(f"engine/{backend}/sync/d{dim}", us_sync, "")
         results["sizes"][str(dim)] = row
     results["backend"] = jax.default_backend()
-    with open(out_path, "w") as f:
-        json.dump(results, f, indent=1)
-    print(f"wrote {os.path.abspath(out_path)}")
+    _merge_json(out_path, results)
     return results
+
+
+def _merge_json(out_path: str, updates: dict) -> None:
+    """Update BENCH_engine.json in place (bench_engine and
+    bench_hierarchical each own disjoint top-level keys)."""
+    data = {}
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                data = json.load(f)
+        except ValueError:
+            data = {}
+    data.update(updates)
+    with open(out_path, "w") as f:
+        json.dump(data, f, indent=1)
+    print(f"wrote {os.path.abspath(out_path)}")
+
+
+def bench_hierarchical(*, grid=(2, 2), k1: int = 2, k2: int = 4,
+                       dims=(256, 1024), iters: int = 10,
+                       out_path: str = "BENCH_engine.json") -> dict:
+    """Two-level engine, fused flat-buffer vs reference tree path.
+
+    Times one local step (both Δ corrections fused in), each sync level
+    alone, and the composed k2-boundary — the numbers land under
+    ``hierarchical`` in BENCH_engine.json next to bench_engine's flat rows.
+    """
+    p_, d_ = grid
+    hier = {"grid": list(grid), "k1": k1, "k2": k2, "sizes": {}}
+    for dim in dims:
+        params = _mlp_template(jax.random.PRNGKey(0), dim)
+        n_params = sum(p.size for p in jax.tree.leaves(params))
+        grads = jax.tree.map(
+            lambda x: jnp.broadcast_to(jnp.sin(x), (p_, d_, *x.shape)),
+            params)
+        cfg = VRLConfig(algorithm="hier_vrl_sgd", learning_rate=0.01,
+                        weight_decay=1e-4, update_backend="fused",
+                        hier=HierConfig(k1=k1, k2=k2, grid=grid))
+        row = {"n_params": int(n_params)}
+
+        eng = make_engine(cfg, jax.eval_shape(lambda: params))
+        state = eng.init(params, p_ * d_)
+        flocal = jax.jit(eng.local_step)
+        fs1, fs2 = jax.jit(eng.sync1), jax.jit(eng.sync2)
+        fsync = jax.jit(eng.sync)
+        fused = {
+            "local_us": timeit(lambda: flocal(state, grads), iters=iters),
+            "sync1_us": timeit(lambda: fs1(state), iters=iters),
+            "sync2_us": timeit(lambda: fs2(state), iters=iters),
+            "sync_us": timeit(lambda: fsync(state), iters=iters),
+        }
+
+        rstate = hierarchical.init(cfg, params, grid)
+        rlocal = jax.jit(lambda s, g: hierarchical.local_step(cfg, s, g))
+        rs1 = jax.jit(lambda s: hierarchical.sync_level1(cfg, s))
+        rs2 = jax.jit(lambda s: hierarchical.sync_level2(cfg, s))
+        rsync = jax.jit(lambda s: hierarchical.sync(cfg, s))
+        ref = {
+            "local_us": timeit(lambda: rlocal(rstate, grads), iters=iters),
+            "sync1_us": timeit(lambda: rs1(rstate), iters=iters),
+            "sync2_us": timeit(lambda: rs2(rstate), iters=iters),
+            "sync_us": timeit(lambda: rsync(rstate), iters=iters),
+        }
+        row["fused"] = {k: round(v, 1) for k, v in fused.items()}
+        row["reference"] = {k: round(v, 1) for k, v in ref.items()}
+        hier["sizes"][str(dim)] = row
+        for backend, us in [("fused", fused), ("reference", ref)]:
+            csv(f"engine/hier/{backend}/local_step/d{dim}", us["local_us"],
+                f"{n_params/1e6:.2f}M params x {p_}x{d_} grid")
+            csv(f"engine/hier/{backend}/sync1/d{dim}", us["sync1_us"], "")
+            csv(f"engine/hier/{backend}/sync2/d{dim}", us["sync2_us"], "")
+    _merge_json(out_path, {"hierarchical": hier})
+    return hier
 
 
 if __name__ == "__main__":
     main()
     bench_engine()
+    bench_hierarchical()

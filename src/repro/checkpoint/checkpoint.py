@@ -75,27 +75,42 @@ def load_meta(path: str) -> dict:
 
 
 # ----------------------------------------------------- flat-engine states
-# The fused engine's FlatWorkerState is an ordinary pytree of buffers, so
-# save()/restore() work unchanged — but a flat buffer is meaningless without
-# its unravel spec (leaf paths/shapes/offsets + tiling).  These helpers
-# persist the spec's JSON description alongside the arrays and refuse to
-# restore into an engine whose layout disagrees (e.g. different lane width,
-# model revision, or block auto-choice).
+# The fused engine's FlatWorkerState / HierFlatState is an ordinary pytree
+# of buffers, so save()/restore() work unchanged — but a flat buffer is
+# meaningless without its unravel spec (leaf paths/shapes/offsets + tiling),
+# and a pod-major hierarchical buffer additionally without its (P, D)
+# worker grid.  These helpers persist both alongside the arrays and refuse
+# to restore into an engine whose layout disagrees (e.g. different lane
+# width, model revision, block auto-choice, or pod grid).
 
-def save_flat_state(path: str, state: Any, spec, meta: dict | None = None
-                    ) -> None:
-    """Save a core.engine.FlatWorkerState plus its flat.FlatSpec layout."""
+def save_flat_state(path: str, state: Any, spec, meta: dict | None = None,
+                    grid=None) -> None:
+    """Save a fused-engine state plus its flat.FlatSpec layout.
+
+    ``grid``: the pod-major (P, D) worker grid for hierarchical states
+    (``engine.Engine.grid``); omit for flat (W, R, C) states.
+    """
     m = dict(meta or {})
     m["flat_spec"] = spec.meta()
+    if grid is not None:
+        m["worker_grid"] = [int(g) for g in grid]
     save(path, state, meta=m)
 
 
-def restore_flat_state(path: str, state_like: Any, spec) -> Any:
-    """Restore a FlatWorkerState, validating the recorded unravel spec."""
-    recorded = load_meta(path)["meta"].get("flat_spec")
-    if recorded is not None and recorded != spec.meta():
+def restore_flat_state(path: str, state_like: Any, spec, grid=None) -> Any:
+    """Restore a fused-engine state, validating the recorded unravel spec
+    (and, for hierarchical states, the recorded (P, D) worker grid)."""
+    recorded = load_meta(path)["meta"]
+    rec_spec = recorded.get("flat_spec")
+    if rec_spec is not None and rec_spec != spec.meta():
         raise ValueError(
             "checkpoint flat-buffer layout does not match the engine's "
-            f"unravel spec:\n  checkpoint: {recorded}\n  engine:     "
+            f"unravel spec:\n  checkpoint: {rec_spec}\n  engine:     "
             f"{spec.meta()}")
+    rec_grid = recorded.get("worker_grid")
+    if (rec_grid is not None and grid is not None
+            and [int(g) for g in grid] != rec_grid):
+        raise ValueError(
+            f"checkpoint worker grid {rec_grid} does not match the "
+            f"engine's grid {list(grid)}")
     return restore(path, state_like)

@@ -1,0 +1,78 @@
+"""jax version compatibility shims (single home for every API probe).
+
+The repo targets the modern mesh API (``jax.set_mesh``, ``jax.sharding
+.AxisType``, ``jax.sharding.get_abstract_mesh``); the pinned container ships
+jax 0.4.37 where the ambient mesh is the legacy ``with mesh:`` thread-local
+and ``jit`` only accepts concrete ``Sharding`` objects.  Everything that
+touches the ambient mesh goes through this module so the rest of the code
+reads as if only one jax existed.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with explicit (Auto) axis types where supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names, devices=devices,
+                                 axis_types=(axis_type.Auto,) * len(axis_names))
+        except TypeError:
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+def set_mesh(mesh):
+    """Ambient-mesh context manager.
+
+    New jax: ``jax.set_mesh(mesh)``.  Old jax: ``Mesh`` is itself a context
+    manager that installs the thread-local physical mesh (the thing
+    ``with_sharding_constraint`` and shard_map resolve against).
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def get_abstract_mesh():
+    """The ambient mesh, with ``.empty`` / ``.axis_names`` / ``.axis_sizes``.
+
+    Falls back to the legacy thread-local physical mesh (set by
+    ``with mesh:``) when ``jax.sharding.get_abstract_mesh`` is missing.
+    """
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is not None:
+        return getter()
+    from jax._src import mesh as mesh_lib
+    return mesh_lib.thread_resources.env.physical_mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """``jax.shard_map`` / ``jax.experimental.shard_map.shard_map``.
+
+    ``check_vma`` (new name) maps onto ``check_rep`` (old name); None
+    leaves the library default.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as legacy_sm
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return legacy_sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     **kw)
+
+
+def shardings(mesh, spec_tree: Any):
+    """PartitionSpec pytree -> NamedSharding pytree.
+
+    ``jit(in_shardings=...)`` on old jax rejects bare PartitionSpecs even
+    under an ambient mesh; wrapping is portable across every version.
+    """
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, PartitionSpec))

@@ -162,10 +162,29 @@ class EngineConfig:
 
 
 @dataclass(frozen=True)
+class HierConfig:
+    """Two-level hierarchical VRL-SGD (beyond-paper, STL-SGD direction).
+
+    The worker population is a pod-major ``grid = (P pods, D workers/pod)``.
+    Intra-pod sync (cheap ICI links) runs every ``k1`` steps, cross-pod sync
+    (slow DCI links) every ``k2 >= k1``; each level carries its own VRL
+    correction (Δ1 per worker, Δ2 per pod).  ``axes`` names the mesh axes
+    backing each level as (cross-pod axis, intra-pod axis): level-1 sync
+    lowers to one psum over ``axes[1]``, level-2 to one psum over
+    ``axes[0]``.
+    """
+
+    k1: int = 5
+    k2: int = 20
+    grid: Tuple[int, int] = (2, 4)
+    axes: Tuple[str, str] = ("pod", "data")
+
+
+@dataclass(frozen=True)
 class VRLConfig:
     """The paper's algorithm knobs."""
 
-    algorithm: str = "vrl_sgd"      # vrl_sgd | local_sgd | ssgd | easgd
+    algorithm: str = "vrl_sgd"  # vrl_sgd | local_sgd | ssgd | easgd | hier_vrl_sgd
     comm_period: int = 20           # k
     warmup: bool = True             # VRL-SGD-W (Remark 5.3): first period k=1
     learning_rate: float = 0.01
@@ -180,9 +199,9 @@ class VRLConfig:
     # sync); "reference" runs the per-leaf jax.tree.map path.
     update_backend: str = "reference"   # fused | reference
     engine: EngineConfig = EngineConfig()
-    # hierarchical (beyond-paper): per-axis comm periods, e.g.
-    # {"pod": 20, "data": 1} syncs across data every step, across pods every 20
-    axis_periods: Optional[Tuple[Tuple[str, int], ...]] = None
+    # two-level hierarchical periods/grid (required when algorithm ==
+    # "hier_vrl_sgd"; ignored by the flat algorithms)
+    hier: Optional[HierConfig] = None
 
 
 @dataclass(frozen=True)

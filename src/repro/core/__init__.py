@@ -11,6 +11,9 @@ from repro.core.engine import (  # noqa: F401
     AlgoSpec,
     Engine,
     FlatWorkerState,
+    HierFlatState,
+    hier_config,
     make_engine,
+    state_partition_specs,
 )
-from repro.core.types import WorkerState  # noqa: F401
+from repro.core.types import HierState, WorkerState  # noqa: F401

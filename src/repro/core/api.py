@@ -15,7 +15,7 @@ from __future__ import annotations
 
 from typing import Any, Callable, NamedTuple
 
-from repro.core import easgd, engine, local_sgd, ssgd, vrl_sgd
+from repro.core import easgd, engine, hierarchical, local_sgd, ssgd, vrl_sgd
 
 
 class Algorithm(NamedTuple):
@@ -32,6 +32,7 @@ _ALGS = {
     "local_sgd": local_sgd,
     "ssgd": ssgd,
     "easgd": easgd,
+    "hier_vrl_sgd": hierarchical,
 }
 
 
@@ -45,7 +46,7 @@ def get_algorithm(name: str) -> Algorithm:
         train_step=m.train_step,
         local_step=m.local_step,
         sync=m.sync,
-        average_model=engine.average_model,
+        average_model=getattr(m, "average_model", engine.average_model),
     )
 
 

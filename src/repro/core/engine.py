@@ -41,6 +41,20 @@ configured worker axes: the sync's model average lowers to exactly one
 all-reduce per sync and none in local steps (asserted in
 ``tests/test_engine_collectives.py``).
 
+Two-level hierarchy
+-------------------
+
+``hier_vrl_sgd`` (sync rule "vrl2", ``configs.base.HierConfig``) runs the
+same loop over a pod-major (P, D, R, C) worker grid with one correction per
+link tier: Δ1 per worker (intra-pod, period k1) and Δ2 per pod carried as a
+(P, 1, R, C) buffer (cross-pod, period k2 ≥ k1).  On a mesh the level-1
+sync lowers to one ``psum`` over the intra-pod axis and the level-2 sync to
+one ``psum`` over the cross-pod axis (``HierConfig.axes``), so the slow DCI
+tier is touched k2/k1 times less often than flat VRL-SGD at k1.  Both
+executors cover it: the per-leaf reference path over ``types.HierState``
+and the fused path over ``HierFlatState`` with the
+``kernels/vrl_update.fused_hier_*`` / ``fused_sync_hier{1,2}`` kernels.
+
 Backend selection
 -----------------
 
@@ -58,21 +72,27 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import VRLConfig
+from repro import compat
+from repro.configs.base import HierConfig, VRLConfig
 from repro.core import flat
-from repro.core.types import WorkerState
+from repro.core.types import HierState, WorkerState
 from repro.kernels import vrl_update as vu
 from repro.optim.optimizers import AdamState, make_inner
 
 
 # ===================================================================== specs
 class AlgoSpec(NamedTuple):
-    """An algorithm as a description over the shared engine."""
+    """An algorithm as a description over the shared engine.
+
+    ``sync`` names the rule that runs at period boundaries; "vrl2" is the
+    two-level rule (intra-pod "vrl" at k1, cross-pod "vrl" at k2) whose
+    state lives on a pod-major worker grid instead of a flat worker axis.
+    """
 
     name: str
     use_delta: bool        # local step applies v = g − Δ (eq. 6)
     grad_all_reduce: bool  # S-SGD: mean gradients over workers every step
-    sync: str              # "vrl" | "average" | "elastic" | "none"
+    sync: str              # "vrl" | "average" | "elastic" | "none" | "vrl2"
     has_center: bool       # EASGD center variable x̃
     warmup_aware: bool     # honors VRLConfig.warmup (first period k=1)
 
@@ -87,7 +107,17 @@ ALGO_SPECS = {
                      sync="none", has_center=False, warmup_aware=False),
     "easgd": AlgoSpec("easgd", use_delta=False, grad_all_reduce=False,
                       sync="elastic", has_center=True, warmup_aware=False),
+    "hier_vrl_sgd": AlgoSpec("hier_vrl_sgd", use_delta=True,
+                             grad_all_reduce=False, sync="vrl2",
+                             has_center=False, warmup_aware=False),
 }
+
+
+def hier_config(cfg: VRLConfig) -> HierConfig:
+    """The two-level periods/grid; defaults to the flat period at k1=k2."""
+    if cfg.hier is not None:
+        return cfg.hier
+    return HierConfig(k1=cfg.comm_period, k2=cfg.comm_period)
 
 
 def get_spec(name: str) -> AlgoSpec:
@@ -219,6 +249,100 @@ def ref_train_step(spec: AlgoSpec, cfg: VRLConfig, state: WorkerState,
         lambda s: ref_sync(spec, cfg, s), lambda s: s, state)
 
 
+# ---------------------------------------------- reference executor ("vrl2")
+# The two-level rule over a pod-major (P, D, ...) tree state — the oracle
+# for the fused hierarchical path (``core/hierarchical.py`` is a thin
+# wrapper over these).
+
+def ref_hier_init(cfg: VRLConfig, params: Any,
+                  grid: Tuple[int, int]) -> HierState:
+    p, d = grid
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (p, d, *x.shape)).copy(), params)
+    dt = jnp.dtype(cfg.delta_dtype)
+    z = lambda x: jnp.zeros_like(x, dtype=dt)
+    d2 = jax.tree.map(lambda x: jnp.zeros((p, 1, *x.shape[2:]), dt), stacked)
+    inner = make_inner(cfg).init(stacked)
+    return HierState(params=stacked, delta1=jax.tree.map(z, stacked),
+                     delta2=d2, inner=inner,
+                     step=jnp.zeros((), jnp.int32),
+                     last_sync1=jnp.zeros((), jnp.int32),
+                     last_sync2=jnp.zeros((), jnp.int32))
+
+
+def ref_hier_local_step(cfg: VRLConfig, state: HierState,
+                        grads: Any) -> HierState:
+    """x ← inner_opt(x, g − Δ1 − Δ2): zero cross-worker communication."""
+    v = jax.tree.map(
+        lambda g, d1, d2: g - d1.astype(g.dtype) - d2.astype(g.dtype),
+        grads, state.delta1, state.delta2)
+    new_params, new_inner = make_inner(cfg).update(state.params, v,
+                                                  state.inner)
+    return state._replace(params=new_params, inner=new_inner,
+                          step=state.step + 1)
+
+
+def ref_hier_sync1(cfg: VRLConfig, state: HierState) -> HierState:
+    """Intra-pod sync: mean over axis 1 (the pod-internal worker axis)."""
+    k_eff = jnp.maximum(state.step - state.last_sync1, 1).astype(jnp.float32)
+    xbar = jax.tree.map(lambda x: jnp.mean(x, axis=1, keepdims=True),
+                        state.params)
+
+    def upd(d, x, xb):
+        return (d.astype(jnp.float32)
+                + (xb.astype(jnp.float32) - x.astype(jnp.float32))
+                / (k_eff * cfg.learning_rate)).astype(d.dtype)
+
+    new_d1 = jax.tree.map(upd, state.delta1, state.params, xbar)
+    new_p = jax.tree.map(
+        lambda x, xb: jnp.broadcast_to(xb, x.shape).astype(x.dtype),
+        state.params, xbar)
+    return state._replace(params=new_p, delta1=new_d1,
+                          last_sync1=state.step)
+
+
+def ref_hier_sync2(cfg: VRLConfig, state: HierState) -> HierState:
+    """Cross-pod sync. Assumes a level-1 sync at the same step (so every
+    worker already holds its pod average)."""
+    k_eff = jnp.maximum(state.step - state.last_sync2, 1).astype(jnp.float32)
+    pod_avg = jax.tree.map(lambda x: jnp.mean(x, axis=1, keepdims=True),
+                           state.params)
+    glob = jax.tree.map(lambda x: jnp.mean(x, axis=(0, 1), keepdims=True),
+                        state.params)
+
+    def upd(d2, pa, g):
+        return (d2.astype(jnp.float32)
+                + (g.astype(jnp.float32) - pa.astype(jnp.float32))
+                / (k_eff * cfg.learning_rate)).astype(d2.dtype)
+
+    new_d2 = jax.tree.map(upd, state.delta2, pod_avg, glob)
+    new_p = jax.tree.map(
+        lambda x, g: jnp.broadcast_to(g, x.shape).astype(x.dtype),
+        state.params, glob)
+    return state._replace(params=new_p, delta2=new_d2,
+                          last_sync2=state.step)
+
+
+def ref_hier_train_step(cfg: VRLConfig, state: HierState, grads: Any, *,
+                        k1: Optional[int] = None,
+                        k2: Optional[int] = None) -> HierState:
+    hcfg = hier_config(cfg)
+    k1 = hcfg.k1 if k1 is None else k1
+    k2 = hcfg.k2 if k2 is None else k2
+    state = ref_hier_local_step(cfg, state, grads)
+    do1 = (state.step - state.last_sync1) >= k1
+    do2 = (state.step - state.last_sync2) >= k2
+    state = jax.lax.cond(do1 | do2, lambda s: ref_hier_sync1(cfg, s),
+                         lambda s: s, state)
+    return jax.lax.cond(do2, lambda s: ref_hier_sync2(cfg, s),
+                        lambda s: s, state)
+
+
+def hier_average_model(state: HierState) -> Any:
+    """x̂ — the evaluation model, averaged over the whole (P, D) grid."""
+    return jax.tree.map(lambda x: jnp.mean(x, axis=(0, 1)), state.params)
+
+
 # ============================================================ fused executor
 class FlatWorkerState(NamedTuple):
     """Worker-stacked algorithm state as contiguous flat buffers.
@@ -237,18 +361,40 @@ class FlatWorkerState(NamedTuple):
     last_sync: jax.Array
 
 
+class HierFlatState(NamedTuple):
+    """Two-level algorithm state as pod-major contiguous flat buffers.
+
+    ``params``/``delta1``/moments: (P, D, R, C); ``delta2``: (P, 1, R, C) —
+    one shared cross-pod correction per pod, broadcast over the intra-pod
+    axis by kernel index maps rather than materialized.  Invariants tested
+    on this layout: Σ_d Δ1[p, d] = 0 within every pod after a level-1 sync,
+    Σ_p Δ2[p] = 0 after a level-2 sync.
+    """
+
+    params: jax.Array
+    delta1: jax.Array
+    delta2: jax.Array
+    inner: Any
+    step: jax.Array
+    last_sync1: jax.Array
+    last_sync2: jax.Array
+
+
 class Engine(NamedTuple):
     """Bound fused-executor closures for one (algorithm, model) pair."""
 
     algorithm: str
     spec: flat.FlatSpec
     algo: AlgoSpec
-    init: Callable              # (params_tree, num_workers) -> FlatWorkerState
+    init: Callable              # (params_tree, num_workers) -> state
     train_step: Callable        # (state, grads_tree) -> state
     local_step: Callable        # (state, grads_tree) -> state
-    sync: Callable              # (state,) -> state
+    sync: Callable              # (state,) -> state (hier: level-1 + level-2)
     average_model: Callable     # (state,) -> single-model pytree
     params_tree: Callable       # (state,) -> worker-stacked params pytree
+    sync1: Any = None           # hier only: intra-pod sync alone
+    sync2: Any = None           # hier only: cross-pod sync alone
+    grid: Any = None            # hier only: the (P, D) worker grid
 
 
 # Adam moment/bias-correction bases.  Must equal optimizers.adam's defaults
@@ -284,6 +430,32 @@ def _state_pspecs(state, axes) -> Any:
     return jax.tree.map(one, state)
 
 
+def _hier_pspecs(state: HierFlatState, pod_axis, data_axis) -> HierFlatState:
+    """PartitionSpecs for the pod-major state: (P, D, R, C) leaves shard
+    (pod, data); the per-pod Δ2 shards only the pod axis (its intra-pod dim
+    is 1); scalars replicate."""
+    wspec = P(pod_axis, data_axis, None, None)
+    inner = jax.tree.map(
+        lambda x: wspec if getattr(x, "ndim", 0) == 4 else P(), state.inner)
+    return HierFlatState(params=wspec, delta1=wspec,
+                         delta2=P(pod_axis, None, None, None), inner=inner,
+                         step=P(), last_sync1=P(), last_sync2=P())
+
+
+def state_partition_specs(state, worker_axes,
+                          hier_axes: Tuple[str, str] = ("pod", "data")):
+    """PartitionSpec pytree for a fused-engine state (flat or hierarchical).
+
+    The launch layer (``launch/dryrun.py``) and the HLO-collective tests use
+    this to place engine states on the production mesh: flat (W, R, C)
+    buffers shard their worker axis over ``worker_axes``; hierarchical
+    (P, D, R, C) buffers shard pod-major over ``hier_axes``.
+    """
+    if isinstance(state, HierFlatState):
+        return _hier_pspecs(state, *hier_axes)
+    return _state_pspecs(state, worker_axes)
+
+
 def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
                 worker_axes: Tuple[str, ...] = ("data",)) -> Engine:
     """Build the fused engine for ``cfg.algorithm`` over ``template`` (a
@@ -305,6 +477,11 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
     kind, beta = _inner_kind(cfg)
     lr, wd = cfg.learning_rate, cfg.weight_decay
     delta_dt = jnp.dtype(cfg.delta_dtype)
+
+    if algo.sync == "vrl2":
+        return _make_hier_engine(cfg, algo, fspec, mesh=mesh, kind=kind,
+                                 beta=beta, lr=lr, wd=wd, delta_dt=delta_dt,
+                                 block=block, interpret=interpret)
 
     axis_names = None
     axis_size = 1
@@ -380,11 +557,10 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
         if algo.sync == "elastic":
             n = state.params.shape[0] * axis_size
             a = cfg.easgd_alpha / n
-            p32 = state.params.astype(jnp.float32)
-            xbar = _wmean(p32)
-            new_p = (p32 - a * (p32 - state.center[None])
-                     ).astype(state.params.dtype)
-            new_c = (1.0 - n * a) * state.center + n * a * xbar
+            xbar = _wmean(state.params.astype(jnp.float32))
+            new_p, new_c = vu.fused_sync_easgd(
+                state.params, xbar, state.center, a=a, na=n * a,
+                block=block, interpret=interpret)
             return state._replace(params=new_p, center=new_c,
                                   last_sync=state.step)
         xbar = _wmean(state.params)
@@ -414,14 +590,14 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
     def _sharded(fn, with_grads: bool):
         if axis_names is None:
             return fn
-        from jax.experimental.shard_map import shard_map
 
         def wrapped(state, *rest):
             sspec = _state_pspecs(state, axis_names)
             ax = axis_names[0] if len(axis_names) == 1 else axis_names
             in_specs = (sspec, P(ax, None, None)) if with_grads else (sspec,)
-            return shard_map(fn, mesh=mesh, in_specs=in_specs,
-                             out_specs=sspec, check_rep=False)(state, *rest)
+            return compat.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                    out_specs=sspec,
+                                    check_vma=False)(state, *rest)
 
         return wrapped
 
@@ -453,3 +629,169 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
                   init=init, train_step=train_step, local_step=local_step,
                   sync=sync, average_model=avg_model,
                   params_tree=params_tree)
+
+
+# ================================================ fused executor ("vrl2")
+def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
+                      *, mesh, kind: str, beta: float, lr: float, wd: float,
+                      delta_dt, block: int, interpret: bool) -> Engine:
+    """The two-level engine over pod-major (P, D, R, C) flat buffers.
+
+    Level-1 sync averages within each pod (one psum over the intra-pod mesh
+    axis) and folds the Δ1 update into the same fused pass; level-2
+    averages across pods (one psum over the cross-pod axis) and folds the
+    Δ2 update in.  Local steps touch no cross-worker axis at all.
+    """
+    hcfg = hier_config(cfg)
+    p_total, d_total = hcfg.grid
+    k1, k2 = hcfg.k1, hcfg.k2
+    pod_axis = data_axis = None
+    if mesh is not None:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        if sizes.get(hcfg.axes[0], 1) > 1:
+            pod_axis = hcfg.axes[0]
+        if sizes.get(hcfg.axes[1], 1) > 1:
+            data_axis = hcfg.axes[1]
+
+    def _pod_mean(buf):
+        """(P_l, D_l, R, C) -> (P_l, 1, R, C).  THE intra-pod all-reduce."""
+        s = jnp.sum(buf, axis=1, keepdims=True)
+        if data_axis is not None:
+            s = jax.lax.psum(s, data_axis)
+        return s / d_total
+
+    def _cross_mean(pod_avg):
+        """(P_l, 1, R, C) pod averages -> (R, C).  THE cross-pod
+        all-reduce."""
+        s = jnp.sum(pod_avg, axis=(0, 1))
+        if pod_axis is not None:
+            s = jax.lax.psum(s, pod_axis)
+        return s / p_total
+
+    # ------------------------------------------------------------- init
+    def init(params: Any, num_workers: int) -> HierFlatState:
+        if num_workers != p_total * d_total:
+            raise ValueError(
+                f"hier grid {hcfg.grid} holds {p_total * d_total} workers, "
+                f"init asked for {num_workers}")
+        flat1 = flat.flatten_tree(fspec, params)
+        stacked = jnp.broadcast_to(
+            flat1, (p_total, d_total, *flat1.shape)).copy()
+        delta1 = jnp.zeros(stacked.shape, delta_dt)
+        delta2 = jnp.zeros((p_total, 1, *flat1.shape), delta_dt)
+        if kind == "sgd":
+            inner = ()
+        elif kind == "momentum":
+            inner = jnp.zeros(stacked.shape, jnp.float32)
+        else:
+            z = jnp.zeros(stacked.shape, jnp.float32)
+            inner = AdamState(z, z, jnp.zeros((), jnp.int32))
+        return HierFlatState(params=stacked, delta1=delta1, delta2=delta2,
+                             inner=inner, step=jnp.zeros((), jnp.int32),
+                             last_sync1=jnp.zeros((), jnp.int32),
+                             last_sync2=jnp.zeros((), jnp.int32))
+
+    # ------------------------------------------------- core step functions
+    def _core_local(state: HierFlatState, g: jax.Array) -> HierFlatState:
+        if kind == "sgd":
+            new_p = vu.fused_hier_local_sgd(
+                state.params, g, state.delta1, state.delta2, lr=lr, wd=wd,
+                block=block, interpret=interpret)
+            new_inner = state.inner
+        elif kind == "momentum":
+            new_p, new_inner = vu.fused_hier_local_momentum(
+                state.params, g, state.delta1, state.delta2, state.inner,
+                lr=lr, beta=beta, wd=wd, block=block, interpret=interpret)
+        else:
+            count = state.inner.count + 1
+            t = count.astype(jnp.float32)
+            scal = jnp.stack([1.0 - _ADAM_B1 ** t, 1.0 - _ADAM_B2 ** t]
+                             ).reshape(1, 2).astype(jnp.float32)
+            new_p, new_mu, new_nu = vu.fused_hier_local_adam(
+                state.params, g, state.delta1, state.delta2, state.inner.mu,
+                state.inner.nu, scal, lr=lr, b1=_ADAM_B1, b2=_ADAM_B2,
+                wd=wd, block=block, interpret=interpret)
+            new_inner = AdamState(new_mu, new_nu, count)
+        return state._replace(params=new_p, inner=new_inner,
+                              step=state.step + 1)
+
+    def _core_sync1(state: HierFlatState) -> HierFlatState:
+        k_eff = jnp.maximum(state.step - state.last_sync1, 1
+                            ).astype(jnp.float32)
+        xbar = _pod_mean(state.params)
+        scal = (k_eff * lr).reshape(1, 1).astype(jnp.float32)
+        new_p, new_d1 = vu.fused_sync_hier1(
+            state.params, xbar.astype(state.params.dtype), state.delta1,
+            scal, block=block, interpret=interpret)
+        return state._replace(params=new_p, delta1=new_d1,
+                              last_sync1=state.step)
+
+    def _core_sync2(state: HierFlatState) -> HierFlatState:
+        # Assumes a level-1 sync at this step: params ARE the pod averages,
+        # so the global mean needs only the cross-pod axis.
+        k_eff = jnp.maximum(state.step - state.last_sync2, 1
+                            ).astype(jnp.float32)
+        glob = _cross_mean(state.params[:, :1])
+        scal = (k_eff * lr).reshape(1, 1).astype(jnp.float32)
+        new_p, new_d2 = vu.fused_sync_hier2(
+            state.params, glob.astype(state.params.dtype), state.delta2,
+            scal, block=block, interpret=interpret)
+        return state._replace(params=new_p, delta2=new_d2,
+                              last_sync2=state.step)
+
+    def _core_sync(state: HierFlatState) -> HierFlatState:
+        return _core_sync2(_core_sync1(state))
+
+    def _core_train(state: HierFlatState, g: jax.Array) -> HierFlatState:
+        state = _core_local(state, g)
+        do1 = (state.step - state.last_sync1) >= k1
+        do2 = (state.step - state.last_sync2) >= k2
+        state = jax.lax.cond(do1 | do2, _core_sync1, lambda s: s, state)
+        return jax.lax.cond(do2, _core_sync2, lambda s: s, state)
+
+    # ----------------------------------------------------- shard_map wrap
+    def _sharded(fn, with_grads: bool):
+        if mesh is None or (pod_axis is None and data_axis is None):
+            return fn
+
+        def wrapped(state, *rest):
+            sspec = _hier_pspecs(state, pod_axis, data_axis)
+            gspec = P(pod_axis, data_axis, None, None)
+            in_specs = (sspec, gspec) if with_grads else (sspec,)
+            return compat.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                    out_specs=sspec,
+                                    check_vma=False)(state, *rest)
+
+        return wrapped
+
+    local_core = _sharded(_core_local, with_grads=True)
+    train_core = _sharded(_core_train, with_grads=True)
+    sync_core = _sharded(_core_sync, with_grads=False)
+    sync1_core = _sharded(_core_sync1, with_grads=False)
+    sync2_core = _sharded(_core_sync2, with_grads=False)
+
+    # --------------------------------------------------------- public API
+    def _gbuf(grads: Any) -> jax.Array:
+        return flat.flatten_grid(fspec, grads, dtype=fspec.dtype)
+
+    def local_step(state, grads):
+        return local_core(state, _gbuf(grads))
+
+    def train_step(state, grads):
+        return train_core(state, _gbuf(grads))
+
+    def params_tree(state):
+        """Grid-stacked parameter pytree view ((P, D, ...) leaves)."""
+        return flat.unflatten_grid(fspec, state.params)
+
+    def avg_model(state):
+        return flat.unflatten_tree(fspec,
+                                   jnp.mean(state.params, axis=(0, 1)))
+
+    return Engine(algorithm=cfg.algorithm, spec=fspec, algo=algo,
+                  init=init, train_step=train_step, local_step=local_step,
+                  sync=lambda s: sync_core(s), average_model=avg_model,
+                  params_tree=params_tree,
+                  sync1=lambda s: sync1_core(s),
+                  sync2=lambda s: sync2_core(s),
+                  grid=(p_total, d_total))

@@ -175,3 +175,29 @@ def unflatten_stacked(spec: FlatSpec, buf: jax.Array,
         piece = vec[:, l.offset:l.offset + l.size].reshape((w,) + l.shape)
         leaves.append(piece.astype(l.dtype) if cast else piece)
     return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+# ------------------------------------------------- pod-major (P, D, R, C)
+# The hierarchical engine carries its worker population as a pod-major grid:
+# axis 0 indexes pods (slow cross-pod links), axis 1 the workers inside a
+# pod (fast intra-pod links).  The flat layout per worker is IDENTICAL to
+# the (W, R, C) one — a grid buffer is just the stacked buffer with its
+# worker axis split (P, D) — so these are exact reshapes around the stacked
+# converters and the same FlatSpec round-trips both.
+
+def flatten_grid(spec: FlatSpec, tree: Any,
+                 dtype: Optional[Any] = None) -> jax.Array:
+    """Grid-stacked pytree ((P, D, ...) leaves) -> (P, D, R, C)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    p, d = leaves[0].shape[:2]
+    stacked = jax.tree.map(lambda x: x.reshape((p * d,) + x.shape[2:]), tree)
+    buf = flatten_stacked(spec, stacked, dtype=dtype)
+    return buf.reshape(p, d, spec.rows, spec.lanes)
+
+
+def unflatten_grid(spec: FlatSpec, buf: jax.Array,
+                   cast: bool = True) -> Any:
+    """(P, D, R, C) buffer -> grid-stacked pytree ((P, D, ...) leaves)."""
+    p, d, r, c = buf.shape
+    tree = unflatten_stacked(spec, buf.reshape(p * d, r, c), cast=cast)
+    return jax.tree.map(lambda x: x.reshape((p, d) + x.shape[1:]), tree)

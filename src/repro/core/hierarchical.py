@@ -1,4 +1,4 @@
-"""Hierarchical VRL-SGD (beyond-paper extension).
+"""Hierarchical (two-level) VRL-SGD — a thin spec over the shared engine.
 
 On a multi-pod cluster the two communication domains have ~10x different
 bandwidth (intra-pod ICI vs cross-pod DCI). The paper uses ONE period k; we
@@ -12,115 +12,87 @@ generalize to a two-level scheme, one VRL correction per level:
       Δ2_p  += (x̂ − x̂_pod) / (k2 γ)    (one Δ2 per pod, shared)
       x_i    = x̂
 
-  local step:  x_i ← x_i − γ (∇f_i(x_i, ξ) − Δ1_i − Δ2_p)
+  local step:  x_i ← inner_opt(x_i, ∇f_i(x_i, ξ) − Δ1_i − Δ2_p)
 
-Properties (tested):
+Execution lives in ``core/engine.py`` under the ``AlgoSpec`` sync rule
+"vrl2" — this module only re-exports the reference executor under the
+historical names.  Two interchangeable executors:
+
+  * reference — per-leaf tree math over ``types.HierState`` ((P, D, ...)
+    pod-major leaves); the oracle (``engine.ref_hier_*``).
+  * fused — ``engine.make_engine`` on ``VRLConfig(algorithm=
+    "hier_vrl_sgd", hier=HierConfig(k1, k2, grid))``: state is an
+    ``engine.HierFlatState`` of contiguous pod-major (P, D, R, C) buffers
+    (layout: ``core/flat.flatten_grid``) with Δ2 carried as (P, 1, R, C),
+    the local step is one fused Pallas pass subtracting both corrections
+    (``kernels/vrl_update.fused_hier_local_*``), and each sync level is one
+    fused pass + ONE ``psum`` over its own mesh axis (level 1: the
+    intra-pod axis; level 2: the cross-pod axis) under ``shard_map``.
+
+Properties (tested on BOTH executors, tests/test_hierarchical.py and
+tests/test_engine_parity.py):
   * Σ_i Δ1_i = 0 within each pod; Σ_p Δ2_p = 0 across pods.
   * The global average x̂ still follows exact SGD on the mean gradient
     (the paper's eq. 8 survives the composition).
-  * k1 = k2 = k with one pod reduces to the paper's Algorithm 1.
+  * k1 = k2 = k with one pod reduces exactly to the paper's Algorithm 1
+    (the flat ``vrl_sgd`` spec), fused path included.
 
 Cross-pod bytes drop by k2/k1 relative to flat VRL-SGD at period k1 while
 keeping the intra-pod variance correction tight — the right trade on
-hardware where DCI is the bottleneck (see EXPERIMENTS.md §Perf).
+hardware where DCI is the bottleneck (benchmarks/comm_complexity.py
+reports the measured per-axis bytes from the compiled production-mesh HLO).
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Tuple
-
-import jax
-import jax.numpy as jnp
+from typing import Any, Optional, Tuple, Union
 
 from repro.configs.base import VRLConfig
-from repro.optim.optimizers import make_inner
+from repro.core import engine
+from repro.core.types import HierState  # noqa: F401  (historical home)
 
 
-class HierState(NamedTuple):
-    params: Any        # (P, D, ...) pod-major worker grid
-    delta1: Any        # (P, D, ...) intra-pod corrections
-    delta2: Any        # (P, 1, ...) cross-pod corrections (shared in pod)
-    inner: Any
-    step: jax.Array
-    last_sync1: jax.Array
-    last_sync2: jax.Array
-
-
-def init(cfg: VRLConfig, params: Any, grid: Tuple[int, int]) -> HierState:
-    p, d = grid
-    stacked = jax.tree.map(
-        lambda x: jnp.broadcast_to(x, (p, d, *x.shape)).copy(), params)
-    dt = jnp.dtype(cfg.delta_dtype)
-    z = lambda x: jnp.zeros_like(x, dtype=dt)
-    d2 = jax.tree.map(
-        lambda x: jnp.zeros((p, 1, *x.shape[2:]), dt), stacked)
-    inner = make_inner(cfg).init(stacked)
-    return HierState(params=stacked, delta1=jax.tree.map(z, stacked),
-                     delta2=d2, inner=inner,
-                     step=jnp.zeros((), jnp.int32),
-                     last_sync1=jnp.zeros((), jnp.int32),
-                     last_sync2=jnp.zeros((), jnp.int32))
+def init(cfg: VRLConfig, params: Any,
+         grid: Union[int, Tuple[int, int]]) -> HierState:
+    """``grid``: the pod-major (P, D) worker grid; a plain worker count is
+    accepted for the uniform Algorithm interface and validated against
+    ``cfg.hier.grid``."""
+    if isinstance(grid, int):
+        hcfg = engine.hier_config(cfg)
+        if hcfg.grid[0] * hcfg.grid[1] != grid:
+            raise ValueError(f"hier grid {hcfg.grid} holds "
+                             f"{hcfg.grid[0] * hcfg.grid[1]} workers, "
+                             f"init asked for {grid}")
+        grid = hcfg.grid
+    return engine.ref_hier_init(cfg, params, grid)
 
 
 def local_step(cfg: VRLConfig, state: HierState, grads: Any) -> HierState:
-    v = jax.tree.map(
-        lambda g, d1, d2: g - d1.astype(g.dtype) - d2.astype(g.dtype),
-        grads, state.delta1, state.delta2)
-    opt = make_inner(cfg)
-    new_params, new_inner = opt.update(state.params, v, state.inner)
-    return state._replace(params=new_params, inner=new_inner,
-                          step=state.step + 1)
+    return engine.ref_hier_local_step(cfg, state, grads)
 
 
 def sync_level1(cfg: VRLConfig, state: HierState) -> HierState:
     """Intra-pod sync: mean over axis 1 (the pod-internal worker axis)."""
-    k_eff = jnp.maximum(state.step - state.last_sync1, 1).astype(jnp.float32)
-    xbar = jax.tree.map(lambda x: jnp.mean(x, axis=1, keepdims=True),
-                        state.params)
-
-    def upd(d, x, xb):
-        return (d.astype(jnp.float32)
-                + (xb.astype(jnp.float32) - x.astype(jnp.float32))
-                / (k_eff * cfg.learning_rate)).astype(d.dtype)
-
-    new_d1 = jax.tree.map(upd, state.delta1, state.params, xbar)
-    new_p = jax.tree.map(lambda x, xb: jnp.broadcast_to(xb, x.shape).astype(x.dtype),
-                         state.params, xbar)
-    return state._replace(params=new_p, delta1=new_d1,
-                          last_sync1=state.step)
+    return engine.ref_hier_sync1(cfg, state)
 
 
 def sync_level2(cfg: VRLConfig, state: HierState) -> HierState:
     """Cross-pod sync. Assumes a level-1 sync at the same step (so every
     worker already holds its pod average)."""
-    k_eff = jnp.maximum(state.step - state.last_sync2, 1).astype(jnp.float32)
-    pod_avg = jax.tree.map(lambda x: jnp.mean(x, axis=1, keepdims=True),
-                           state.params)
-    glob = jax.tree.map(lambda x: jnp.mean(x, axis=(0, 1), keepdims=True),
-                        state.params)
+    return engine.ref_hier_sync2(cfg, state)
 
-    def upd(d2, pa, g):
-        return (d2.astype(jnp.float32)
-                + (g.astype(jnp.float32) - pa.astype(jnp.float32))
-                / (k_eff * cfg.learning_rate)).astype(d2.dtype)
 
-    new_d2 = jax.tree.map(upd, state.delta2, pod_avg, glob)
-    new_p = jax.tree.map(lambda x, g: jnp.broadcast_to(g, x.shape).astype(x.dtype),
-                         state.params, glob)
-    return state._replace(params=new_p, delta2=new_d2,
-                          last_sync2=state.step)
+def sync(cfg: VRLConfig, state: HierState) -> HierState:
+    """The full level-2 boundary event: intra-pod then cross-pod."""
+    return sync_level2(cfg, sync_level1(cfg, state))
 
 
 def train_step(cfg: VRLConfig, state: HierState, grads: Any, *,
-               k1: int, k2: int) -> HierState:
-    state = local_step(cfg, state, grads)
-    do1 = (state.step - state.last_sync1) >= k1
-    do2 = (state.step - state.last_sync2) >= k2
-    state = jax.lax.cond(do1 | do2, lambda s: sync_level1(cfg, s),
-                         lambda s: s, state)
-    state = jax.lax.cond(do2, lambda s: sync_level2(cfg, s),
-                         lambda s: s, state)
-    return state
+               k1: Optional[int] = None, k2: Optional[int] = None
+               ) -> HierState:
+    """Local step + conditional per-level syncs (periods from ``cfg.hier``
+    unless overridden)."""
+    return engine.ref_hier_train_step(cfg, state, grads, k1=k1, k2=k2)
 
 
 def average_model(state: HierState) -> Any:
-    return jax.tree.map(lambda x: jnp.mean(x, axis=(0, 1)), state.params)
+    return engine.hier_average_model(state)

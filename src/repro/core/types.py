@@ -28,5 +28,21 @@ class WorkerState(NamedTuple):
     last_sync: jax.Array     # scalar int32: step index of the last sync
 
 
+class HierState(NamedTuple):
+    """Two-level hierarchical VRL-SGD state (reference tree executor).
+
+    Leaves carry a pod-major (P, D, ...) worker grid; the fused executor's
+    counterpart is ``core.engine.HierFlatState`` on (P, D, R, C) buffers.
+    """
+
+    params: Any              # (P, D, ...) pod-major worker grid
+    delta1: Any              # (P, D, ...) intra-pod corrections
+    delta2: Any              # (P, 1, ...) cross-pod corrections (per pod)
+    inner: Any
+    step: jax.Array
+    last_sync1: jax.Array    # step of the last level-1 (intra-pod) sync
+    last_sync2: jax.Array    # step of the last level-2 (cross-pod) sync
+
+
 def swap_dims(tree, a: int = 0, b: int = 1):
     return jax.tree.map(lambda x: x.swapaxes(a, b), tree)

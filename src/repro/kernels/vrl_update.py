@@ -12,13 +12,24 @@ Two families live here:
 
   * ``vrl_local_update`` / ``vrl_sync_update`` — the original per-leaf 2D
     tile kernels (used by ``ops.py``'s tree wrappers and their tests).
-  * ``fused_local_{sgd,momentum,adam}`` / ``fused_sync_vrl`` — the engine's
-    worker-stacked (W, R, C) kernels.  One grid step per (worker, row-tile);
-    the inner-optimizer moment update is fused into the same HBM pass, and
-    dynamic scalars (Adam bias correction, the sync-time k_eff·γ) ride in as
-    a tiny (1, n) operand so the compiled kernel never retraces per step.
-    All math is fp32 in-register with per-buffer output casts, matching the
-    reference tree path bit-for-bit in fp32.
+  * ``fused_local_{sgd,momentum,adam}`` / ``fused_sync_vrl`` /
+    ``fused_sync_easgd`` — the engine's worker-stacked (W, R, C) kernels.
+    One grid step per (worker, row-tile); the inner-optimizer moment update
+    is fused into the same HBM pass, and dynamic scalars (Adam bias
+    correction, the sync-time k_eff·γ) ride in as a tiny (1, n) operand so
+    the compiled kernel never retraces per step.  All math is fp32
+    in-register with per-buffer output casts, matching the reference tree
+    path bit-for-bit in fp32.
+  * ``fused_hier_local_{sgd,momentum,adam}`` / ``fused_sync_hier{1,2}`` —
+    the two-level hierarchical engine's pod-major (P, D, R, C) kernels.
+    The local step subtracts BOTH corrections (v = g − Δ1 − Δ2) in the same
+    pass; Δ2 is carried as a per-pod (P, 1, R, C) buffer whose blocks are
+    broadcast over the intra-pod axis by the index map, never materialized
+    at (P, D) size in HBM.
+
+State buffers are donated (``input_output_aliases``) so every update is
+in-place: the kernels read each block exactly once before overwriting it,
+and XLA falls back to a copy when a donated buffer has another consumer.
 
 ``block``/``interpret`` come from the engine config (``configs.base
 .EngineConfig``); the (R, C) layout and auto block choice from
@@ -139,6 +150,7 @@ def fused_local_sgd(p, g, d=None, *, lr: float, wd: float = 0.0,
         in_specs=specs,
         out_specs=specs[0],
         out_shape=jax.ShapeDtypeStruct((w, r, c), p.dtype),
+        input_output_aliases={0: 0},
         interpret=interpret,
     )(*ins)
 
@@ -177,6 +189,7 @@ def fused_local_momentum(p, g, d, m, *, lr: float, beta: float,
         out_specs=[specs[0], specs[0]],
         out_shape=[jax.ShapeDtypeStruct((w, r, c), p.dtype),
                    jax.ShapeDtypeStruct((w, r, c), m.dtype)],
+        input_output_aliases={0: 0, len(ins) - 1: 1},
         interpret=interpret,
     )(*ins)
 
@@ -225,6 +238,7 @@ def fused_local_adam(p, g, d, mu, nu, scal, *, lr: float, b1: float = 0.9,
         out_shape=[jax.ShapeDtypeStruct((w, r, c), p.dtype),
                    jax.ShapeDtypeStruct((w, r, c), mu.dtype),
                    jax.ShapeDtypeStruct((w, r, c), nu.dtype)],
+        input_output_aliases={0: 0, len(ins) - 2: 1, len(ins) - 1: 2},
         interpret=interpret,
     )(*ins, scal)
 
@@ -257,5 +271,248 @@ def fused_sync_vrl(p, xbar, d, scal, *, block: int = 1024, interpret=None):
         out_specs=[s3[0], s3[0]],
         out_shape=[jax.ShapeDtypeStruct((w, r, c), p.dtype),
                    jax.ShapeDtypeStruct((w, r, c), d.dtype)],
+        input_output_aliases={0: 0, 2: 1},
         interpret=interpret,
     )(p, xbar, d, scal)
+
+
+def _easgd_worker_kernel(p_ref, c_ref, po_ref, *, a: float):
+    p = _f32(p_ref)
+    c = _f32(c_ref)[None]       # (block, C) broadcast over the worker dim
+    po_ref[...] = (p - a * (p - c)).astype(po_ref.dtype)
+
+
+def _easgd_center_kernel(c_ref, xb_ref, co_ref, *, na: float):
+    co_ref[...] = ((1.0 - na) * _f32(c_ref)
+                   + na * _f32(xb_ref)).astype(co_ref.dtype)
+
+
+def fused_sync_easgd(p, xbar, center, *, a: float, na: float,
+                     block: int = 1024, interpret=None):
+    """Elastic sync (Zhang et al.) fused on flat buffers; returns (p', c').
+
+      p' = p − a·(p − x̃)            a  = easgd_alpha / N
+      c' = (1 − N·a)·x̃ + N·a·x̂     na = N·a
+
+    ``p``: (W, R, C); ``xbar``/``center``: (R, C) fp32 (x̂ is the worker
+    mean — THE all-reduce — computed by the caller before this pass).  Two
+    single-pass kernels so both p and x̃ can be donated; the p' pass reads
+    the OLD center, so XLA's alias analysis orders it before (or copies
+    around) the in-place center update.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    w, r, c = p.shape
+    pspec = _grid_specs(w, r, c, block, 1)[0]
+    cspec = pl.BlockSpec((block, c), lambda wi, i: (i, 0))
+    new_p = pl.pallas_call(
+        functools.partial(_easgd_worker_kernel, a=a),
+        grid=(w, r // block),
+        in_specs=[pspec, cspec],
+        out_specs=pspec,
+        out_shape=jax.ShapeDtypeStruct((w, r, c), p.dtype),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(p, center)
+    flat2 = pl.BlockSpec((block, c), lambda i: (i, 0))
+    new_c = pl.pallas_call(
+        functools.partial(_easgd_center_kernel, na=na),
+        grid=(r // block,),
+        in_specs=[flat2, flat2],
+        out_specs=flat2,
+        out_shape=jax.ShapeDtypeStruct((r, c), center.dtype),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(center, xbar)
+    return new_p, new_c
+
+
+# ================================================== hierarchical (P, D, R, C)
+# Pod-major worker-grid kernels for the two-level engine.  Grid =
+# (P, D, R/block); per-worker buffers stream as (1, 1, block, C) tiles while
+# the per-pod Δ2 / pod-average tiles are broadcast over the intra-pod grid
+# dim by their index map (one HBM read, no (P, D)-sized materialization).
+
+def _grid4_specs(block: int, c: int, n: int):
+    return [pl.BlockSpec((1, 1, block, c), lambda pi, di, i: (pi, di, i, 0))
+            for _ in range(n)]
+
+
+def _pod4_spec(block: int, c: int):
+    """(P, 1, R, C) operand: every worker in pod pi reads block (pi, 0, i)."""
+    return pl.BlockSpec((1, 1, block, c), lambda pi, di, i: (pi, 0, i, 0))
+
+
+def _scal4_spec(n: int):
+    return pl.BlockSpec((1, n), lambda pi, di, i: (0, 0))
+
+
+def _hier_sgd_kernel(p_ref, g_ref, d1_ref, d2_ref, o_ref, *, lr, wd):
+    v = _f32(g_ref) - _f32(d1_ref) - _f32(d2_ref)
+    p = _f32(p_ref)
+    if wd:
+        v = v + wd * p
+    o_ref[...] = (p - lr * v).astype(o_ref.dtype)
+
+
+def fused_hier_local_sgd(p, g, d1, d2, *, lr: float, wd: float = 0.0,
+                         block: int = 1024, interpret=None):
+    """p' = p − γ((g − Δ1 − Δ2) + wd·p) on (P, D, R, C) buffers."""
+    if interpret is None:
+        interpret = default_interpret()
+    pp, dd, r, c = p.shape
+    specs = _grid4_specs(block, c, 3)
+    return pl.pallas_call(
+        functools.partial(_hier_sgd_kernel, lr=lr, wd=wd),
+        grid=(pp, dd, r // block),
+        in_specs=[specs[0], specs[1], specs[2], _pod4_spec(block, c)],
+        out_specs=specs[0],
+        out_shape=jax.ShapeDtypeStruct(p.shape, p.dtype),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(p, g, d1, d2)
+
+
+def _hier_momentum_kernel(p_ref, g_ref, d1_ref, d2_ref, m_ref, po_ref,
+                          mo_ref, *, lr, beta, wd, nesterov):
+    v = _f32(g_ref) - _f32(d1_ref) - _f32(d2_ref)
+    p = _f32(p_ref)
+    if wd:
+        v = v + wd * p
+    m_new = beta * _f32(m_ref) + v
+    step_dir = v + beta * m_new if nesterov else m_new
+    po_ref[...] = (p - lr * step_dir).astype(po_ref.dtype)
+    mo_ref[...] = m_new.astype(mo_ref.dtype)
+
+
+def fused_hier_local_momentum(p, g, d1, d2, m, *, lr: float, beta: float,
+                              wd: float = 0.0, nesterov: bool = False,
+                              block: int = 1024, interpret=None):
+    """Momentum inner step with both Δ corrections; returns (p', m')."""
+    if interpret is None:
+        interpret = default_interpret()
+    pp, dd, r, c = p.shape
+    specs = _grid4_specs(block, c, 4)
+    return pl.pallas_call(
+        functools.partial(_hier_momentum_kernel, lr=lr, beta=beta, wd=wd,
+                          nesterov=nesterov),
+        grid=(pp, dd, r // block),
+        in_specs=[specs[0], specs[1], specs[2], _pod4_spec(block, c),
+                  specs[3]],
+        out_specs=[specs[0], specs[3]],
+        out_shape=[jax.ShapeDtypeStruct(p.shape, p.dtype),
+                   jax.ShapeDtypeStruct(m.shape, m.dtype)],
+        input_output_aliases={0: 0, 4: 1},
+        interpret=interpret,
+    )(p, g, d1, d2, m)
+
+
+def _hier_adam_kernel(p_ref, g_ref, d1_ref, d2_ref, mu_ref, nu_ref, s_ref,
+                      po, muo, nuo, *, lr, b1, b2, eps, wd):
+    v = _f32(g_ref) - _f32(d1_ref) - _f32(d2_ref)
+    p = _f32(p_ref)
+    c1 = s_ref[0, 0]
+    c2 = s_ref[0, 1]
+    mu = b1 * _f32(mu_ref) + (1.0 - b1) * v
+    nu = b2 * _f32(nu_ref) + (1.0 - b2) * v * v
+    step = lr * (mu / c1) / (jnp.sqrt(nu / c2) + eps)
+    if wd:
+        step = step + lr * wd * p
+    po[...] = (p - step).astype(po.dtype)
+    muo[...] = mu.astype(muo.dtype)
+    nuo[...] = nu.astype(nuo.dtype)
+
+
+def fused_hier_local_adam(p, g, d1, d2, mu, nu, scal, *, lr: float,
+                          b1: float = 0.9, b2: float = 0.999,
+                          eps: float = 1e-8, wd: float = 0.0,
+                          block: int = 1024, interpret=None):
+    """Adam inner step with both Δ corrections; returns (p', mu', nu')."""
+    if interpret is None:
+        interpret = default_interpret()
+    pp, dd, r, c = p.shape
+    specs = _grid4_specs(block, c, 5)
+    return pl.pallas_call(
+        functools.partial(_hier_adam_kernel, lr=lr, b1=b1, b2=b2, eps=eps,
+                          wd=wd),
+        grid=(pp, dd, r // block),
+        in_specs=[specs[0], specs[1], specs[2], _pod4_spec(block, c),
+                  specs[3], specs[4], _scal4_spec(2)],
+        out_specs=[specs[0], specs[3], specs[4]],
+        out_shape=[jax.ShapeDtypeStruct(p.shape, p.dtype),
+                   jax.ShapeDtypeStruct(mu.shape, mu.dtype),
+                   jax.ShapeDtypeStruct(nu.shape, nu.dtype)],
+        input_output_aliases={0: 0, 4: 1, 5: 2},
+        interpret=interpret,
+    )(p, g, d1, d2, mu, nu, scal)
+
+
+def _hier_sync1_kernel(p_ref, xb_ref, d_ref, s_ref, po_ref, do_ref):
+    p = _f32(p_ref)
+    xb = _f32(xb_ref)
+    kg = s_ref[0, 0]            # k1_eff · γ  (k1_eff is traced)
+    do_ref[...] = (_f32(d_ref) + (xb - p) / kg).astype(do_ref.dtype)
+    po_ref[...] = xb.astype(po_ref.dtype)
+
+
+def fused_sync_hier1(p, xbar_pod, d1, scal, *, block: int = 1024,
+                     interpret=None):
+    """Level-1 (intra-pod) sync: Δ1' = Δ1 + (x̂_pod − p)/(k1γ); p' = x̂_pod.
+
+    ``xbar_pod``: (P, 1, R, C) — the pod average the caller produced with
+    the single intra-pod all-reduce.  One pass over (P, D, R, C); p and Δ1
+    are donated.  Returns (p', Δ1').
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    pp, dd, r, c = p.shape
+    specs = _grid4_specs(block, c, 2)
+    return pl.pallas_call(
+        _hier_sync1_kernel,
+        grid=(pp, dd, r // block),
+        in_specs=[specs[0], _pod4_spec(block, c), specs[1], _scal4_spec(1)],
+        out_specs=[specs[0], specs[1]],
+        out_shape=[jax.ShapeDtypeStruct(p.shape, p.dtype),
+                   jax.ShapeDtypeStruct(d1.shape, d1.dtype)],
+        input_output_aliases={0: 0, 2: 1},
+        interpret=interpret,
+    )(p, xbar_pod, d1, scal)
+
+
+def _hier_sync2_kernel(p_ref, g_ref, d2_ref, s_ref, po_ref, do_ref):
+    pod = _f32(p_ref)           # own params == pod average (post level-1)
+    glob = _f32(g_ref)[None]
+    kg = s_ref[0, 0]            # k2_eff · γ
+    do_ref[...] = (_f32(d2_ref) + (glob - pod) / kg).astype(do_ref.dtype)
+    po_ref[...] = jnp.broadcast_to(glob, po_ref.shape).astype(po_ref.dtype)
+
+
+def fused_sync_hier2(p, glob, d2, scal, *, block: int = 1024,
+                     interpret=None):
+    """Level-2 (cross-pod) sync: Δ2' = Δ2 + (x̂ − x̂_pod)/(k2γ); p' = x̂.
+
+    Assumes a level-1 sync at the same step, so every worker's params ARE
+    its pod average — each grid step reads its OWN (pi, di) block as x̂_pod
+    (never a block another step may have overwritten in-place).  ``glob``:
+    (R, C) — produced by the caller's single cross-pod all-reduce.  The
+    intra-pod grid dim is innermost so the D revisits of each Δ2' block are
+    consecutive; every revisit writes the same value (Δ2 itself is NOT
+    donated — aliasing it would feed step di+1 the already-updated block).
+    Returns (p', Δ2') with p donated.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    pp, dd, r, c = p.shape
+    wspec = pl.BlockSpec((1, 1, block, c), lambda pi, i, di: (pi, di, i, 0))
+    podspec = pl.BlockSpec((1, 1, block, c), lambda pi, i, di: (pi, 0, i, 0))
+    gspec = pl.BlockSpec((block, c), lambda pi, i, di: (i, 0))
+    return pl.pallas_call(
+        _hier_sync2_kernel,
+        grid=(pp, r // block, dd),
+        in_specs=[wspec, gspec, podspec, _scal4_spec(1)],
+        out_specs=[wspec, podspec],
+        out_shape=[jax.ShapeDtypeStruct(p.shape, p.dtype),
+                   jax.ShapeDtypeStruct(d2.shape, d2.dtype)],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(p, glob, d2, scal)

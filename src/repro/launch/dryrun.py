@@ -33,8 +33,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import InputShape, MeshConfig, VRLConfig
+from repro import compat
+from repro.configs.base import HierConfig, InputShape, MeshConfig, VRLConfig
 from repro.configs import registry
+from repro.core import engine as engine_mod
 from repro.launch import roofline as rl
 from repro.launch.mesh import make_production_mesh
 from repro.models import transformer
@@ -47,9 +49,8 @@ from repro.train.train_loop import make_train_step
 # --------------------------------------------------------------------- mesh
 def build_mesh(mesh_cfg: MeshConfig):
     n = math.prod(mesh_cfg.shape)
-    return jax.make_mesh(
-        mesh_cfg.shape, mesh_cfg.axis_names, devices=jax.devices()[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(mesh_cfg.axis_names))
+    return compat.make_mesh(mesh_cfg.shape, mesh_cfg.axis_names,
+                            devices=jax.devices()[:n])
 
 
 def _data_axes(mesh_cfg: MeshConfig):
@@ -233,12 +234,20 @@ def lower_one(arch_id: str, shape_id: str, *, multi_pod: bool,
               vrl_cfg: Optional[VRLConfig] = None,
               fn_kind: Optional[str] = None, verbose: bool = True,
               unrolled: bool = False, algorithm: str = "vrl_sgd",
-              comm_period: int = 20,
+              comm_period: int = 20, k1: int = 5, k2: int = 20,
+              backend: str = "fused",
               mesh_override: Optional[dict] = None,
               cfg_override: Optional[dict] = None, tag: str = "",
               last_only: bool = False, no_remat: bool = False):
     """Lower+compile one combination. fn_kind in
-    {train, local, sync, prefill, decode} (default by shape kind).
+    {train, local, sync, sync1, sync2, prefill, decode} (default by shape
+    kind; sync1/sync2 are the hierarchical per-level syncs and require
+    ``algorithm="hier_vrl_sgd"``).
+
+    The train family lowers through ``backend`` ("fused" default: the
+    flat-buffer engine, so the memory/cost/collective-bytes artifacts
+    reflect the production update path — one flat all-reduce per sync, one
+    per-axis all-reduce per hierarchical sync level).
 
     ``unrolled=True`` unrolls the layer scan so cost_analysis() counts every
     layer (XLA's HLO cost analysis counts a while-loop body ONCE); use the
@@ -254,8 +263,15 @@ def lower_one(arch_id: str, shape_id: str, *, multi_pod: bool,
     if cfg_override:
         cfg = dataclasses.replace(cfg, **cfg_override)
     shape = registry.get_shape(shape_id)
+    hier = None
+    if algorithm == "hier_vrl_sgd" and vrl_cfg is None:
+        sizes = dict(zip(mesh_cfg.axis_names, mesh_cfg.shape))
+        pods = sizes.get("pod", 1)
+        hier = HierConfig(k1=k1, k2=k2,
+                          grid=(pods, mesh_cfg.num_workers // pods))
     vrl_cfg = vrl_cfg or VRLConfig(
-        algorithm=algorithm, comm_period=comm_period,
+        algorithm=algorithm, comm_period=comm_period, hier=hier,
+        update_backend=backend,
         delta_dtype="bfloat16" if (arch_id in registry._FSDP_ARCHS
                                    or os.environ.get("VRL_DELTA_BF16"))
         else "float32")
@@ -275,15 +291,27 @@ def lower_one(arch_id: str, shape_id: str, *, multi_pod: bool,
     if tag:
         name += f"/{tag}"
 
-    with jax.set_mesh(mesh):
-        if fn_kind in ("train", "local", "sync"):
+    with compat.set_mesh(mesh):
+        if fn_kind in ("train", "local", "sync", "sync1", "sync2"):
+            fused = vrl_cfg.update_backend == "fused"
             bundle = make_train_step(cfg, vrl_cfg,
                                      remat=not no_remat, unroll=unroll,
-                                     param_dtype=jnp.bfloat16)
-            st_spec = state_specs(cfg, mesh_cfg, vrl_cfg)
+                                     param_dtype=jnp.bfloat16,
+                                     mesh=mesh if fused else None,
+                                     worker_axes=mesh_cfg.worker_axes)
             state_abs = jax.eval_shape(
                 lambda: bundle.init_state(jax.random.PRNGKey(0),
                                           mesh_cfg.num_workers))
+            if fused:
+                # hier axes resolve against THIS mesh: the single mesh has
+                # no "pod" axis, so its (1, W) grid shards data only
+                haxes = tuple(a if a in mesh_cfg.axis_names else None
+                              for a in engine_mod.hier_config(vrl_cfg).axes)
+                st_spec = engine_mod.state_partition_specs(
+                    state_abs, mesh_cfg.worker_axes, hier_axes=haxes)
+            else:
+                st_spec = state_specs(cfg, mesh_cfg, vrl_cfg)
+            sts = compat.shardings(mesh, st_spec)
             extra = 2 if cfg.frontend == "codec" else 1
             tok_spec = batch_sharding_spec(
                 mesh_cfg, shape.global_batch // mesh_cfg.num_workers,
@@ -291,19 +319,28 @@ def lower_one(arch_id: str, shape_id: str, *, multi_pod: bool,
             lab_spec = batch_sharding_spec(
                 mesh_cfg, shape.global_batch // mesh_cfg.num_workers,
                 1, worker_stacked=True)
-            if fn_kind == "sync":
-                fn = jax.jit(bundle.sync_step, in_shardings=(st_spec,),
-                             out_shardings=st_spec)
+            if fn_kind in ("sync", "sync1", "sync2"):
+                step_fn = {"sync": bundle.sync_step,
+                           "sync1": bundle.sync1_step,
+                           "sync2": bundle.sync2_step}[fn_kind]
+                if step_fn is None:
+                    raise ValueError(
+                        f"fn_kind {fn_kind!r} requires hier_vrl_sgd")
+                fn = jax.jit(step_fn, in_shardings=(sts,),
+                             out_shardings=sts)
                 lowered = fn.lower(state_abs)
             else:
                 step = (bundle.train_step if fn_kind == "train"
                         else bundle.local_step)
                 fn = jax.jit(step,
-                             in_shardings=(st_spec, tok_spec, lab_spec),
-                             out_shardings=(st_spec, P()))
+                             in_shardings=(sts,
+                                           compat.shardings(mesh, tok_spec),
+                                           compat.shardings(mesh, lab_spec)),
+                             out_shardings=(sts,
+                                            compat.shardings(mesh, P())))
                 lowered = fn.lower(state_abs, ins["tokens"], ins["labels"])
             mf = _model_flops_train(cfg, shape)
-            if fn_kind == "sync":
+            if fn_kind in ("sync", "sync1", "sync2"):
                 mf = 0.0
         elif fn_kind == "prefill":
             pdefs = transformer.model_defs(cfg)
@@ -320,8 +357,11 @@ def lower_one(arch_id: str, shape_id: str, *, multi_pod: bool,
             eff = cfg.attn_window or shape.seq_len
             c_spec = cache_specs(cfg, mesh_cfg, shape.global_batch,
                                  seq_len=min(eff, shape.seq_len))
-            fn = jax.jit(prefill_fn, in_shardings=(pspec, tok_spec),
-                         out_shardings=(logits_spec, c_spec))
+            fn = jax.jit(prefill_fn,
+                         in_shardings=compat.shardings(
+                             mesh, (pspec, tok_spec)),
+                         out_shardings=compat.shardings(
+                             mesh, (logits_spec, c_spec)))
             lowered = fn.lower(params_abs, ins["tokens"])
             mf = _model_flops_prefill(cfg, shape)
         elif fn_kind == "decode":
@@ -340,8 +380,10 @@ def lower_one(arch_id: str, shape_id: str, *, multi_pod: bool,
             vax = _maybe(tuple(mesh_cfg.tensor_axes), cfg.vocab_size, mesh_cfg)
             logits_spec = P(bax, None, vax)
             fn = jax.jit(serve_fn,
-                         in_shardings=(pspec, c_spec, tok_spec, P()),
-                         out_shardings=(logits_spec, c_spec))
+                         in_shardings=compat.shardings(
+                             mesh, (pspec, c_spec, tok_spec, P())),
+                         out_shardings=compat.shardings(
+                             mesh, (logits_spec, c_spec)))
             lowered = fn.lower(params_abs, ins["cache"], ins["tokens"],
                                ins["pos"])
             mf = _model_flops_decode(cfg, shape)
@@ -390,13 +432,22 @@ def main(argv=None) -> int:
     ap.add_argument("--mesh", choices=["single", "multi", "both"],
                     default="single")
     ap.add_argument("--fn", default=None,
-                    help="train|local|sync|prefill|decode (default by shape)")
+                    help="train|local|sync|sync1|sync2|prefill|decode "
+                         "(default by shape; sync1/sync2 need hier_vrl_sgd)")
     ap.add_argument("--all", action="store_true",
                     help="run the full arch x shape matrix")
     ap.add_argument("--unrolled", action="store_true",
                     help="unroll the layer scan (accurate roofline flops)")
     ap.add_argument("--algorithm", default="vrl_sgd",
-                    choices=["vrl_sgd", "local_sgd", "ssgd", "easgd"])
+                    choices=["vrl_sgd", "local_sgd", "ssgd", "easgd",
+                             "hier_vrl_sgd"])
+    ap.add_argument("--backend", default="fused",
+                    choices=["fused", "reference"],
+                    help="update-math backend for the train lowerings")
+    ap.add_argument("--k1", type=int, default=5,
+                    help="hier_vrl_sgd intra-pod period")
+    ap.add_argument("--k2", type=int, default=20,
+                    help="hier_vrl_sgd cross-pod period")
     ap.add_argument("--worker-axes", default=None,
                     help="comma list overriding VRL worker mesh axes")
     ap.add_argument("--fsdp-axes", default=None)
@@ -446,6 +497,7 @@ def main(argv=None) -> int:
                             arch, shape, multi_pod=multi, fn_kind=fn_kind,
                             unrolled=args.unrolled or args.two_layer,
                             algorithm=args.algorithm,
+                            backend=args.backend, k1=args.k1, k2=args.k2,
                             mesh_override=mesh_override or None,
                             cfg_override=cfg_override or None,
                             tag=args.tag or ("u2" if args.two_layer else ""),

@@ -7,6 +7,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -14,12 +16,13 @@ def make_production_mesh(*, multi_pod: bool = False):
     import math
     n = math.prod(shape)
     devices = jax.devices()[:n]
-    return jax.make_mesh(
-        shape, axes, devices=devices,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, devices=devices)
 
 
 # TPU v5e hardware constants (per chip) used by the roofline model.
 PEAK_FLOPS_BF16 = 197e12     # FLOP/s
 HBM_BW = 819e9               # B/s
-ICI_LINK_BW = 50e9           # B/s per link
+ICI_LINK_BW = 50e9           # B/s per link (intra-pod)
+DCI_LINK_BW = 6.25e9         # B/s per link (cross-pod data-center tier) —
+#                              the ~10x-slower tier whose traffic the
+#                              hierarchical k2 period amortizes

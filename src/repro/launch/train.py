@@ -1,12 +1,21 @@
 """Training driver (real execution, CPU-scale).
 
-Runs VRL-SGD (or a baseline) on a selectable architecture's reduced or full
-config with the synthetic non-iid LM pipeline, periodic checkpointing, and
-average-model evaluation — the same code path the dry-run lowers for the
-production mesh.
+Runs VRL-SGD (or a baseline, or two-level hierarchical VRL-SGD) on a
+selectable architecture's reduced or full config with the synthetic non-iid
+LM pipeline, periodic checkpointing, and average-model evaluation — the
+same code path the dry-run lowers for the production mesh.
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
       --workers 4 --steps 50 --k 10 --algorithm vrl_sgd
+
+Hierarchical on a placeholder pod grid (devices permitting, ``--mesh-grid``
+shard_maps the pod-major worker grid so level-1 syncs all-reduce only the
+intra-pod axis and level-2 only the cross-pod axis):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
+      --workers 8 --pods 2 --algorithm hier_vrl_sgd --k1 2 --k2 8 \
+      --mesh-grid
 """
 from __future__ import annotations
 
@@ -18,8 +27,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint as ckpt
+from repro import compat
 from repro.configs import registry
-from repro.configs.base import EngineConfig, VRLConfig
+from repro.configs.base import EngineConfig, HierConfig, VRLConfig
 from repro.data import lm_token_stream
 from repro.models import transformer as T
 from repro.train.loss import cross_entropy_lm
@@ -33,7 +43,8 @@ def main(argv=None) -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-runnable)")
     ap.add_argument("--algorithm", default="vrl_sgd",
-                    choices=["vrl_sgd", "local_sgd", "ssgd", "easgd"])
+                    choices=["vrl_sgd", "local_sgd", "ssgd", "easgd",
+                             "hier_vrl_sgd"])
     ap.add_argument("--backend", default="fused",
                     choices=["fused", "reference"],
                     help="update math: flat-buffer fused Pallas engine "
@@ -45,6 +56,15 @@ def main(argv=None) -> int:
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--k", type=int, default=10, help="communication period")
+    ap.add_argument("--pods", type=int, default=2,
+                    help="hier_vrl_sgd: pods P (workers split as P x W/P)")
+    ap.add_argument("--k1", type=int, default=0,
+                    help="hier_vrl_sgd intra-pod period (default: --k)")
+    ap.add_argument("--k2", type=int, default=0,
+                    help="hier_vrl_sgd cross-pod period (default: 4*k1)")
+    ap.add_argument("--mesh-grid", action="store_true",
+                    help="build a (pods, W/pods) device mesh with axes "
+                         "(pod, data) and shard the worker grid over it")
     ap.add_argument("--lr", type=float, default=0.2)
     ap.add_argument("--warmup", action="store_true")
     ap.add_argument("--alpha", type=float, default=0.05,
@@ -60,11 +80,36 @@ def main(argv=None) -> int:
            else registry.get_arch(args.arch))
     print(f"arch: {registry.describe(args.arch)}"
           f"{' [reduced smoke variant]' if args.smoke else ''}")
+    hier = None
+    if args.algorithm == "hier_vrl_sgd":
+        if args.workers % args.pods:
+            raise SystemExit(f"--workers {args.workers} not divisible by "
+                             f"--pods {args.pods}")
+        k1 = args.k1 or args.k
+        k2 = args.k2 or 4 * k1
+        hier = HierConfig(k1=k1, k2=k2,
+                          grid=(args.pods, args.workers // args.pods))
+        print(f"hier: {hier.grid[0]} pods x {hier.grid[1]} workers, "
+              f"k1={k1} (intra-pod), k2={k2} (cross-pod)")
     vrl = VRLConfig(algorithm=args.algorithm, comm_period=args.k,
                     learning_rate=args.lr, warmup=args.warmup,
                     update_backend=args.backend,
-                    engine=EngineConfig(block=args.block))
-    bundle = make_train_step(cfg, vrl, remat=not args.smoke)
+                    engine=EngineConfig(block=args.block), hier=hier)
+    mesh = None
+    worker_axes = ("data",)
+    if args.mesh_grid:
+        shape = hier.grid if hier else (1, args.workers)
+        n = shape[0] * shape[1]
+        if len(jax.devices()) < n:
+            raise SystemExit(f"--mesh-grid needs {n} devices, have "
+                             f"{len(jax.devices())} (set XLA_FLAGS="
+                             f"--xla_force_host_platform_device_count={n})")
+        mesh = compat.make_mesh(shape, ("pod", "data"),
+                                devices=jax.devices()[:n])
+        worker_axes = ("pod", "data")
+        print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    bundle = make_train_step(cfg, vrl, remat=not args.smoke, mesh=mesh,
+                             worker_axes=worker_axes)
     state = bundle.init_state(jax.random.PRNGKey(args.seed), args.workers)
     n_params = (bundle.engine.spec.size if bundle.engine is not None else
                 sum(p.size for p in jax.tree.leaves(state.params))
@@ -102,7 +147,7 @@ def main(argv=None) -> int:
             meta = {"step": t + 1, "arch": args.arch}
             if bundle.engine is not None:
                 ckpt.save_flat_state(args.ckpt, state, bundle.engine.spec,
-                                     meta=meta)
+                                     meta=meta, grid=bundle.engine.grid)
             else:
                 ckpt.save(args.ckpt, state, meta=meta)
             print(f"checkpointed -> {args.ckpt}")

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ModelConfig
 from repro.models import moe as moe_ref
 
@@ -97,7 +98,7 @@ def moe_mlp_shardmap(cfg: ModelConfig, p: dict, x: jax.Array, mesh,
         aux = jax.lax.pmean(aux, data_axis)
         return y, aux
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         block, mesh=mesh,
         in_specs=(P(data_axis, None),            # tokens
                   P(None, None),                 # router (replicated)

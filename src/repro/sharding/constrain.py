@@ -4,11 +4,13 @@ from __future__ import annotations
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import get_abstract_mesh
+
 
 def maybe_constrain(x, *spec_parts):
     """with_sharding_constraint iff an ambient mesh with a "model" axis is
     set (no-op in single-device tests). Divisibility-guarded."""
-    m = jax.sharding.get_abstract_mesh()
+    m = get_abstract_mesh()
     if m.empty or "model" not in m.axis_names:
         return x
     sizes = dict(zip(m.axis_names, m.axis_sizes))
@@ -28,7 +30,7 @@ def maybe_constrain(x, *spec_parts):
 
 
 def axis_size(name: str) -> int:
-    m = jax.sharding.get_abstract_mesh()
+    m = get_abstract_mesh()
     if m.empty or name not in m.axis_names:
         return 1 << 30
     return dict(zip(m.axis_names, m.axis_sizes))[name]

@@ -15,6 +15,13 @@ production mesh that axis is sharded over the worker mesh axes so local steps
 compile with no cross-worker collectives, which is exactly the property the
 paper's communication complexity counts.
 
+Hierarchical (``vrl_cfg.algorithm == "hier_vrl_sgd"``): the worker
+population is the pod-major (P, D) grid of ``vrl_cfg.hier`` and the vmap is
+doubled over it — tokens still arrive worker-stacked (W, ...) and are folded
+to (P, D, ...) here.  ``sync1_step``/``sync2_step`` expose the per-level
+syncs (intra-pod / cross-pod) for the dry-run's per-axis collective-bytes
+artifacts.
+
 Backend selection: ``vrl_cfg.update_backend``.
 
   "reference" — tree-structured WorkerState, per-leaf jax.tree.map update.
@@ -57,6 +64,8 @@ class StepBundle(NamedTuple):
     grads_fn: callable
     average_model: Any = None   # (state,) -> single-model pytree
     engine: Any = None          # core.engine.Engine when backend == "fused"
+    sync1_step: Any = None      # hierarchical only: intra-pod sync alone
+    sync2_step: Any = None      # hierarchical only: cross-pod sync alone
 
 
 def make_train_step(model_cfg: ModelConfig, vrl_cfg: VRLConfig,
@@ -94,6 +103,20 @@ def make_train_step(model_cfg: ModelConfig, vrl_cfg: VRLConfig,
             grads = clip_by_global_norm(grads, vrl_cfg.clip_norm)
         return grads, loss
 
+    hier = engine_mod.get_spec(vrl_cfg.algorithm).sync == "vrl2"
+    if hier:
+        hcfg = engine_mod.hier_config(vrl_cfg)
+
+        def stack_vmap(params, tokens, labels):
+            """Pod-major grid: tokens arrive worker-stacked (W, b, s) and
+            fold to (P, D, b, s); grads/losses carry (P, D) leading axes."""
+            tok = tokens.reshape(hcfg.grid + tokens.shape[1:])
+            lab = labels.reshape(hcfg.grid + labels.shape[1:])
+            return jax.vmap(jax.vmap(per_worker))(params, tok, lab)
+    else:
+        def stack_vmap(params, tokens, labels):
+            return jax.vmap(per_worker)(params, tokens, labels)
+
     if vrl_cfg.update_backend == "fused":
         template = jax.eval_shape(functools.partial(
             transformer.init_params, model_cfg, dtype=param_dtype),
@@ -103,7 +126,7 @@ def make_train_step(model_cfg: ModelConfig, vrl_cfg: VRLConfig,
 
         def grads_fn(state, tokens, labels):
             ptree = eng.params_tree(state)
-            grads, losses = jax.vmap(per_worker)(ptree, tokens, labels)
+            grads, losses = stack_vmap(ptree, tokens, labels)
             return grads, jnp.mean(losses)
 
         def train_step(state, tokens, labels):
@@ -120,10 +143,11 @@ def make_train_step(model_cfg: ModelConfig, vrl_cfg: VRLConfig,
             return eng.init(params, num_workers)
 
         return StepBundle(init_state, train_step, local_step, eng.sync,
-                          grads_fn, eng.average_model, eng)
+                          grads_fn, eng.average_model, eng,
+                          sync1_step=eng.sync1, sync2_step=eng.sync2)
 
     def grads_fn(state, tokens, labels):
-        grads, losses = jax.vmap(per_worker)(state.params, tokens, labels)
+        grads, losses = stack_vmap(state.params, tokens, labels)
         return grads, jnp.mean(losses)
 
     def train_step(state, tokens, labels):
@@ -141,5 +165,12 @@ def make_train_step(model_cfg: ModelConfig, vrl_cfg: VRLConfig,
         params = transformer.init_params(model_cfg, key, dtype=param_dtype)
         return alg.init(vrl_cfg, params, num_workers)
 
+    sync1 = sync2 = None
+    if hier:
+        from repro.core import hierarchical as H
+        sync1 = lambda s: H.sync_level1(vrl_cfg, s)       # noqa: E731
+        sync2 = lambda s: H.sync_level2(vrl_cfg, s)       # noqa: E731
+
     return StepBundle(init_state, train_step, local_step, sync_step,
-                      grads_fn, alg.average_model)
+                      grads_fn, alg.average_model,
+                      sync1_step=sync1, sync2_step=sync2)

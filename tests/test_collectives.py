@@ -1,9 +1,15 @@
-"""The paper's central systems property, verified on compiled HLO:
+"""The paper's central systems property, verified on compiled HLO — now
+measured through the FUSED flat-buffer backend (the production update path):
 
-  * a VRL-SGD LOCAL step contains ZERO collectives over the worker axis
-    (pure data parallelism would all-reduce gradients every step);
-  * the SYNC step contains exactly the model-averaging all-reduce;
-  * S-SGD's train step all-reduces every step.
+  * a VRL-SGD LOCAL step contains ZERO worker-axis collectives (pure data
+    parallelism would all-reduce gradients every step);
+  * the SYNC step contains exactly the model-averaging all-reduce — ONE
+    all-reduce of the flat buffer spanning all 8 devices;
+  * S-SGD's train step all-reduces every step;
+  * hierarchical VRL-SGD on a 2x4 pod grid: the level-1 sync is exactly ONE
+    all-reduce whose replica groups span only the intra-pod axis (2 groups
+    of 4), the level-2 sync exactly ONE all-reduce over the cross-pod axis
+    (4 groups of 2), and local steps stay communication-free.
 
 Runs in a subprocess because the 8-device placeholder env must be set
 before jax initializes (the test process already owns a 1-device jax).
@@ -18,64 +24,127 @@ SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import json
+    import re
     import jax
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
 
+    from repro import compat
     from repro.configs import registry
-    from repro.configs.base import MeshConfig, VRLConfig
+    from repro.configs.base import HierConfig, VRLConfig
+    from repro.core import engine as engine_mod
     from repro.launch import roofline as rl
-    from repro.launch.dryrun import state_specs, batch_sharding_spec
     from repro.train.train_loop import make_train_step
 
-    mesh_cfg = MeshConfig(shape=(8,), axis_names=("data",),
-                          worker_axes=("data",), fsdp_axes=(),
-                          tensor_axes=())
     cfg = registry.smoke_arch("granite-3-2b")
-    mesh = jax.make_mesh((8,), ("data",), devices=jax.devices(),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((2, 4), ("pod", "data"), devices=jax.devices())
+    axes = ("pod", "data")
+
+    def all_reduce_groups(hlo):
+        groups = []
+        for line in hlo.splitlines():
+            if "all-reduce(" not in line and "all-reduce-start(" not in line:
+                continue
+            m = re.search(r"replica_groups=\\{\\{(.+?)\\}\\}", line)
+            if m:
+                groups.append(sorted(
+                    len(g.split(",")) for g in m.group(1).split("},{")))
+                continue
+            m = re.search(r"replica_groups=\\[(\\d+),(\\d+)\\]", line)
+            if m:
+                groups.append([int(m.group(2))] * int(m.group(1)))
+        return groups
+
+    def lower(bundle, state_abs, name, fn, with_data=False):
+        sts = compat.shardings(
+            mesh, engine_mod.state_partition_specs(state_abs, axes))
+        if with_data:
+            dspec = compat.shardings(mesh, P(axes, None, None))
+            c = jax.jit(fn, in_shardings=(sts, dspec, dspec),
+                        out_shardings=(sts, compat.shardings(mesh, P()))
+                        ).lower(state_abs, toks, toks).compile()
+        else:
+            c = jax.jit(fn, in_shardings=(sts,), out_shardings=sts
+                        ).lower(state_abs).compile()
+        hlo = c.as_text()
+        return {"bytes": rl.collective_bytes(hlo),
+                "ar_groups": all_reduce_groups(hlo)}
+
+    toks = jax.ShapeDtypeStruct((8, 2, 32), jnp.int32)
     out = {}
-    for alg in ["vrl_sgd", "ssgd"]:
-        vrl = VRLConfig(algorithm=alg, comm_period=4, learning_rate=0.01)
-        bundle = make_train_step(cfg, vrl, remat=False)
-        st_spec = state_specs(cfg, mesh_cfg, vrl)
+    with compat.set_mesh(mesh):
+        for alg in ["vrl_sgd", "ssgd"]:
+            vrl = VRLConfig(algorithm=alg, comm_period=4, learning_rate=0.01,
+                            update_backend="fused")
+            bundle = make_train_step(cfg, vrl, remat=False, mesh=mesh,
+                                     worker_axes=axes)
+            state_abs = jax.eval_shape(
+                lambda: bundle.init_state(jax.random.PRNGKey(0), 8))
+            out[f"{alg}/local"] = lower(bundle, state_abs, alg,
+                                        bundle.local_step, with_data=True)
+            out[f"{alg}/sync"] = lower(bundle, state_abs, alg,
+                                       bundle.sync_step)
+
+        vrl_h = VRLConfig(algorithm="hier_vrl_sgd", learning_rate=0.01,
+                          update_backend="fused",
+                          hier=HierConfig(k1=2, k2=8, grid=(2, 4),
+                                          axes=axes))
+        bundle = make_train_step(cfg, vrl_h, remat=False, mesh=mesh,
+                                 worker_axes=axes)
         state_abs = jax.eval_shape(
             lambda: bundle.init_state(jax.random.PRNGKey(0), 8))
-        toks = jax.ShapeDtypeStruct((8, 2, 32), jnp.int32)
-        with jax.set_mesh(mesh):
-            for name, fn in [("local", bundle.local_step),
-                             ("sync", bundle.sync_step)]:
-                if name == "sync":
-                    c = jax.jit(fn, in_shardings=(st_spec,),
-                                out_shardings=st_spec).lower(state_abs).compile()
-                else:
-                    c = jax.jit(fn,
-                                in_shardings=(st_spec, P("data", None, None),
-                                              P("data", None, None)),
-                                out_shardings=(st_spec, P())
-                                ).lower(state_abs, toks, toks).compile()
-                out[f"{alg}/{name}"] = rl.collective_bytes(c.as_text())
+        out["hier/local"] = lower(bundle, state_abs, "hier",
+                                  bundle.local_step, with_data=True)
+        out["hier/sync1"] = lower(bundle, state_abs, "hier",
+                                  bundle.sync1_step)
+        out["hier/sync2"] = lower(bundle, state_abs, "hier",
+                                  bundle.sync2_step)
     print(json.dumps(out))
 """)
 
 
-def test_local_step_has_no_worker_collectives():
-    env = dict(os.environ, PYTHONPATH="src")
-    res = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
-                         capture_output=True, text=True, timeout=900)
-    assert res.returncode == 0, res.stderr[-2000:]
-    out = json.loads(res.stdout.strip().splitlines()[-1])
+_OUT = None
 
-    vrl_local = out["vrl_sgd/local"].get("total", 0.0)
-    vrl_sync = out["vrl_sgd/sync"].get("total", 0.0)
-    ssgd_local = out["ssgd/local"].get("total", 0.0)
+
+def _run():
+    global _OUT
+    if _OUT is None:
+        env = dict(os.environ, PYTHONPATH="src")
+        res = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                             capture_output=True, text=True, timeout=900)
+        assert res.returncode == 0, res.stderr[-2000:]
+        _OUT = json.loads(res.stdout.strip().splitlines()[-1])
+    return _OUT
+
+
+def test_fused_local_step_has_no_worker_collectives():
+    out = _run()
+    vrl_local = out["vrl_sgd/local"]["bytes"].get("total", 0.0)
+    vrl_sync = out["vrl_sgd/sync"]["bytes"].get("total", 0.0)
+    ssgd_local = out["ssgd/local"]["bytes"].get("total", 0.0)
 
     # paper's mechanism: local steps are communication-free (allowing the
     # 4-byte scalar-loss metric all-reduce — not model state) ...
     assert vrl_local <= 64.0, out
-    # ... the sync all-reduces the model ...
+    # ... the sync all-reduces the model: exactly ONE flat-buffer
+    # all-reduce spanning all 8 devices ...
     assert vrl_sync > 0.0, out
+    assert out["vrl_sgd/sync"]["ar_groups"] == [[8]], out
     # ... while S-SGD pays every step (its "local" step IS a train step)
     assert ssgd_local > 0.0, out
     # and the amortized VRL traffic at k=4 is below S-SGD's per-step traffic
     assert vrl_sync / 4 < ssgd_local, out
+
+
+def test_hierarchical_sync_levels_use_their_own_axis():
+    out = _run()
+    # level-1: exactly one all-reduce, spanning ONLY the intra-pod axis
+    # (2 pods x 4 workers -> 2 replica groups of 4)
+    assert out["hier/sync1"]["ar_groups"] == [[4, 4]], out
+    # level-2: exactly one all-reduce over the cross-pod axis (4 groups of 2)
+    assert out["hier/sync2"]["ar_groups"] == [[2, 2, 2, 2]], out
+    # local steps: no model-state collectives at either level
+    assert out["hier/local"]["bytes"].get("total", 0.0) <= 64.0, out
+    # cross-pod traffic per boundary is the flat buffer once — no extra
+    # collectives hide in the level-2 step
+    assert out["hier/sync2"]["bytes"].get("total", 0.0) > 0.0, out

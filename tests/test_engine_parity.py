@@ -12,8 +12,8 @@ import numpy as np
 import pytest
 
 from repro import checkpoint as ckpt
-from repro.configs.base import EngineConfig, VRLConfig
-from repro.core import flat, get_algorithm, make_engine
+from repro.configs.base import EngineConfig, HierConfig, VRLConfig
+from repro.core import flat, get_algorithm, hierarchical as H, make_engine
 
 ALGORITHMS = ["vrl_sgd", "local_sgd", "ssgd", "easgd"]
 INNER = ["sgd", "momentum", "adam"]
@@ -156,6 +156,119 @@ def test_train_loop_fused_backend_matches_reference():
         np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-5)
 
 
+# ----------------------------------------------------- hierarchical engine
+def _hier_grads(params, t):
+    """Non-identical pseudo-gradients over a (P, D, ...) grid; the phase
+    differs per worker so pods AND workers drift apart between syncs."""
+    def one(x):
+        p, d = x.shape[:2]
+        phase = jnp.arange(p * d, dtype=x.dtype).reshape(
+            (p, d) + (1,) * (x.ndim - 2))
+        return jnp.sin(3.0 * x + 0.7 * t + phase) + 0.1 * x
+    return jax.tree.map(one, params)
+
+
+def _hier_cfg(inner, k1, k2, grid=(2, 3)):
+    return VRLConfig(algorithm="hier_vrl_sgd", learning_rate=0.05,
+                     weight_decay=1e-3, inner_optimizer=inner,
+                     momentum=0.9 if inner == "momentum" else 0.0,
+                     warmup=False, update_backend="fused",
+                     hier=HierConfig(k1=k1, k2=k2, grid=grid))
+
+
+def _run_hier_pair(inner, k1, k2, steps=13, grid=(2, 3)):
+    cfg = _hier_cfg(inner, k1, k2, grid=grid)
+    eng = make_engine(cfg, TEMPLATE)
+    p0 = _params0()
+    sref = H.init(cfg, p0, grid)
+    sfus = eng.init(p0, grid[0] * grid[1])
+    ref_step = jax.jit(
+        lambda s, t: H.train_step(cfg, s, _hier_grads(s.params, t)))
+    fus_step = jax.jit(
+        lambda s, t: eng.train_step(s, _hier_grads(eng.params_tree(s), t)))
+    for t in range(steps):
+        tt = jnp.float32(t)
+        sref = ref_step(sref, tt)
+        sfus = fus_step(sfus, tt)
+    return eng, sref, sfus
+
+
+@pytest.mark.parametrize("inner", INNER)
+@pytest.mark.parametrize("k1,k2", [(2, 4), (3, 9), (4, 8)])
+def test_hier_fused_matches_reference(inner, k1, k2):
+    """Two-level fused vs reference trajectory parity: params, both Δ
+    levels, and the evaluation model (13 steps -> several boundaries of
+    each level at every (k1, k2))."""
+    eng, sref, sfus = _run_hier_pair(inner, k1, k2)
+    for a, b in zip(jax.tree.leaves(sref.params),
+                    jax.tree.leaves(eng.params_tree(sfus))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    for a, b in zip(jax.tree.leaves(H.average_model(sref)),
+                    jax.tree.leaves(eng.average_model(sfus))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    # Δ parity: magnitudes scale with 1/(k·γ), so param-level fp noise is
+    # amplified ~1/(k1·0.05)x — tolerance follows the same scale
+    datol = 1e-6 + 2.5e-6 / (k1 * 0.05)
+    for a, b in zip(jax.tree.leaves(sref.delta1),
+                    jax.tree.leaves(flat.unflatten_grid(eng.spec,
+                                                        sfus.delta1))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=datol)
+    for a, b in zip(jax.tree.leaves(sref.delta2),
+                    jax.tree.leaves(flat.unflatten_grid(eng.spec,
+                                                        sfus.delta2))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=datol)
+    assert int(sfus.step) == 13
+    assert int(sfus.last_sync1) == int(sref.last_sync1)
+    assert int(sfus.last_sync2) == int(sref.last_sync2)
+
+
+@pytest.mark.parametrize("inner", ["sgd", "adam"])
+def test_hier_reduces_to_flat_vrl_fused(inner):
+    """k1 = k2 = k with one pod IS the paper's Algorithm 1: the fused
+    hierarchical trajectory equals the fused flat vrl_sgd spec EXACTLY
+    (bitwise — same reductions, same kernels, Δ2 stays identically 0)."""
+    w, k, steps = 4, 4, 13
+    cfgf = _cfg("vrl_sgd", inner, k=k)
+    cfgh = _hier_cfg(inner, k, k, grid=(1, w))
+    ef = make_engine(cfgf, TEMPLATE)
+    eh = make_engine(cfgh, TEMPLATE)
+    p0 = _params0()
+    sf = ef.init(p0, w)
+    sh = eh.init(p0, w)
+    f_step = jax.jit(
+        lambda s, t: ef.train_step(s, _grads(ef.params_tree(s), t)))
+    h_step = jax.jit(
+        lambda s, t: eh.train_step(s, _hier_grads(eh.params_tree(s), t)))
+    for t in range(steps):
+        sf = f_step(sf, jnp.float32(t))
+        sh = h_step(sh, jnp.float32(t))
+    np.testing.assert_array_equal(np.asarray(sf.params),
+                                  np.asarray(sh.params)[0])
+    np.testing.assert_array_equal(np.asarray(sf.delta),
+                                  np.asarray(sh.delta1)[0])
+    assert float(jnp.max(jnp.abs(sh.delta2))) == 0.0
+
+
+def test_hier_checkpoint_roundtrip_with_grid(tmp_path):
+    """(P, D) flat state persists with its unravel spec AND worker grid;
+    a different grid refuses to restore."""
+    cfg = _hier_cfg("adam", 2, 4)
+    eng = make_engine(cfg, TEMPLATE)
+    state = eng.init(_params0(), 6)
+    state = eng.train_step(state, _hier_grads(eng.params_tree(state), 0.0))
+    ckpt.save_flat_state(str(tmp_path / "h"), state, eng.spec,
+                         meta={"step": 1}, grid=eng.grid)
+    restored = ckpt.restore_flat_state(str(tmp_path / "h"), state, eng.spec,
+                                       grid=eng.grid)
+    np.testing.assert_allclose(np.asarray(restored.params),
+                               np.asarray(state.params))
+    np.testing.assert_allclose(np.asarray(restored.delta2),
+                               np.asarray(state.delta2))
+    with pytest.raises(ValueError, match="worker grid"):
+        ckpt.restore_flat_state(str(tmp_path / "h"), state, eng.spec,
+                                grid=(3, 2))
+
+
 # ------------------------------------------------------------- flat layout
 def test_flat_roundtrip_exact():
     spec = flat.make_spec(TEMPLATE)
@@ -174,6 +287,18 @@ def test_flat_roundtrip_stacked_exact():
     buf = flat.flatten_stacked(spec, tree)
     assert buf.shape == (3, spec.rows, spec.lanes)
     out = flat.unflatten_stacked(spec, buf)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_flat_roundtrip_grid_exact():
+    spec = flat.make_spec(TEMPLATE)
+    tree = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (2, 3, *x.shape)) + jnp.arange(6.0)
+        .reshape(2, 3, *([1] * x.ndim)), _params0())
+    buf = flat.flatten_grid(spec, tree)
+    assert buf.shape == (2, 3, spec.rows, spec.lanes)
+    out = flat.unflatten_grid(spec, buf)
     for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 

@@ -1,12 +1,16 @@
-"""Hierarchical (two-level) VRL-SGD extension tests."""
+"""Hierarchical (two-level) VRL-SGD extension tests.
+
+Reference tree-path behavior (convergence, eq.-8 composition, flat-VRL
+reduction) plus the paper invariants on the FUSED pod-major flat-buffer
+path (engine ``sync="vrl2"``)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import VRLConfig
+from repro.configs.base import HierConfig, VRLConfig
 from repro.core import hierarchical as H
-from repro.core import get_algorithm
+from repro.core import get_algorithm, make_engine
 
 
 def quad_grads_grid(b):
@@ -96,3 +100,57 @@ def test_cross_pod_savings_vs_flat_quality():
     state_h = run_hier(k1=4, k2=32, steps=4000)
     xh = abs(float(H.average_model(state_h)["x"][0]))
     assert xh < 1e-3  # still converges despite 8x fewer global syncs
+
+
+# -------------------------------------------------------------- fused path
+def test_fused_hier_delta_invariants():
+    """Σ_i Δ1_i = 0 within each pod, Σ_p Δ2_p = 0 across pods — on the
+    fused (P, D, R, C) buffers (padding lanes are zero on every worker, so
+    buffer-level sums see exactly the model elements)."""
+    cfg = VRLConfig(algorithm="hier_vrl_sgd", learning_rate=0.05,
+                    weight_decay=0.0, update_backend="fused",
+                    hier=HierConfig(k1=2, k2=6, grid=(2, 3)))
+    template = {"x": jnp.zeros((7, 5))}
+    eng = make_engine(cfg, template)
+    state = eng.init({"x": jax.random.normal(jax.random.PRNGKey(0), (7, 5))},
+                     6)
+
+    def grads(params, t):
+        def one(x):
+            p, d = x.shape[:2]
+            phase = jnp.arange(p * d, dtype=x.dtype).reshape(
+                (p, d) + (1,) * (x.ndim - 2))
+            return jnp.sin(2.0 * x + 0.5 * t + phase) + 0.1 * x
+        return jax.tree.map(one, params)
+
+    step = jax.jit(lambda s, t: eng.train_step(
+        s, grads(eng.params_tree(s), t)))
+    for t in range(12):          # boundaries of both levels
+        state = step(state, jnp.float32(t))
+    assert int(state.last_sync1) == 12 and int(state.last_sync2) == 12
+    d1_pod_sum = jnp.sum(state.delta1, axis=1)      # (P, R, C)
+    assert float(jnp.max(jnp.abs(d1_pod_sum))) < 5e-5
+    d2_sum = jnp.sum(state.delta2, axis=0)          # (1, R, C)
+    assert float(jnp.max(jnp.abs(d2_sum))) < 5e-5
+    assert float(jnp.max(jnp.abs(state.delta1))) > 0.0
+    assert float(jnp.max(jnp.abs(state.delta2))) > 0.0
+
+
+def test_fused_hier_average_follows_sgd():
+    """Paper eq. 8 survives the two-level composition on the fused path:
+    the grid average tracks exact SGD on the mean gradient."""
+    cfg = VRLConfig(algorithm="hier_vrl_sgd", learning_rate=0.05,
+                    weight_decay=0.0, update_backend="fused",
+                    hier=HierConfig(k1=3, k2=9, grid=(2, 2)))
+    template = {"x": jnp.zeros((1,))}
+    eng = make_engine(cfg, template)
+    state = eng.init({"x": jnp.zeros((1,))}, 4)
+    rng = np.random.RandomState(0)
+    xhat = 0.0
+    step = jax.jit(eng.train_step)
+    for t in range(30):
+        g = jnp.asarray(rng.randn(2, 2, 1).astype(np.float32))
+        xhat -= 0.05 * float(g.mean())
+        state = step(state, {"x": g})
+        got = float(eng.average_model(state)["x"][0])
+        assert abs(got - xhat) < 1e-5
