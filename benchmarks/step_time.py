@@ -19,7 +19,8 @@ import jax.numpy as jnp
 from benchmarks.common import csv, timeit
 from repro.configs import registry
 from repro.configs.base import HierConfig, VRLConfig
-from repro.core import get_algorithm, hierarchical, make_engine
+from repro.core import flat, get_algorithm, hierarchical, make_engine, \
+    resolve_backend
 from repro.train.train_loop import make_train_step
 
 
@@ -173,7 +174,135 @@ def bench_hierarchical(*, grid=(2, 2), k1: int = 2, k2: int = 4,
     return hier
 
 
+def bench_rounds(*, workers: int = 4, k: int = 8, dims=(256, 1024),
+                 iters: int = 5, out_path: str = "BENCH_engine.json",
+                 fused_iters: int = 1) -> dict:
+    """Round execution per backend vs the reference per-step path.
+
+    A "round" is one communication period: the reference path pays k
+    python jit dispatches (one per local step) plus a sync dispatch; the
+    engine's ``round_step`` compiles the whole period into one ``lax.scan``
+    + sync.  Times one round of each at every model size for the fused
+    (Pallas — interpret-mode on CPU, so expect it to lose there), xla, and
+    reference executors, and records which backend "auto" resolves to.
+    Each path gets grads in its native layout (tree for reference,
+    pre-flattened (k, W, R, C) for the engine — ``round_step_flat``) and
+    the engine round donates its state, exactly the launch-driver
+    contract.
+
+    This is the tracked number for the PR-1 regression BENCH_engine.json
+    documents (interpret-mode "fused" ~30x slower than reference on CPU):
+    CI gates on auto/reference <= 1.2 (``--bench rounds --gate-ratio``),
+    and on CPU the auto (= xla) round must beat the reference path
+    outright.  ``fused_iters`` keeps the interpret-mode timing affordable.
+    """
+    auto = resolve_backend("auto")
+    rounds = {"workers": workers, "k": k, "auto_backend": auto, "sizes": {}}
+    for dim in dims:
+        params = _mlp_template(jax.random.PRNGKey(0), dim)
+        n_params = sum(p.size for p in jax.tree.leaves(params))
+        grads = jax.tree.map(
+            lambda x: jnp.broadcast_to(jnp.sin(x), (workers, *x.shape)),
+            params)
+        # per-step grads stack for the round path (materialized: the round
+        # consumes a prefetched (k, W, ...) buffer, as launch/train does)
+        scale = (1.0 + 0.01 * jnp.arange(k, dtype=jnp.float32))
+        grads_k = jax.tree.map(
+            lambda g: g[None] * scale.reshape((k,) + (1,) * g.ndim), grads)
+        row = {"n_params": int(n_params)}
+
+        cfg_ref = VRLConfig(algorithm="vrl_sgd", comm_period=k,
+                            learning_rate=0.01, weight_decay=1e-4,
+                            update_backend="reference")
+        alg = get_algorithm("vrl_sgd")
+        rstate = alg.init(cfg_ref, params, workers)
+        local = jax.jit(lambda s, g: alg.local_step(cfg_ref, s, g))
+        sync = jax.jit(lambda s: alg.sync(cfg_ref, s))
+
+        def ref_round(s):
+            for i in range(k):
+                s = local(s, grads)
+            return sync(s)
+
+        row["reference"] = {"round_us": round(
+            timeit(lambda: ref_round(rstate), iters=iters), 1)}
+
+        for backend in ["xla", "fused"]:
+            cfg = VRLConfig(algorithm="vrl_sgd", comm_period=k,
+                            learning_rate=0.01, weight_decay=1e-4,
+                            update_backend=backend)
+            eng = make_engine(cfg, jax.eval_shape(lambda: params))
+            gk_buf = jax.jit(lambda g: jax.vmap(
+                lambda t: flat.flatten_stacked(eng.spec, t,
+                                               dtype=eng.spec.dtype)
+            )(g))(grads_k)
+            rstep = jax.jit(eng.round_step_flat, donate_argnums=(0,))
+            # donation chains: every call's input is the previous call's
+            # (freshly allocated) output, so the donated buffers stay live
+            box = [eng.init(params, workers)]
+
+            def one_round():
+                box[0] = rstep(box[0], gk_buf)
+                return box[0]
+
+            it = fused_iters if backend == "fused" else iters
+            row[backend] = {"round_us": round(
+                timeit(one_round, iters=it, warmup_iters=1), 1)}
+        for backend in ["reference", "xla", "fused"]:
+            csv(f"engine/rounds/{backend}/d{dim}",
+                row[backend]["round_us"],
+                f"{n_params/1e6:.2f}M params x {workers} workers, k={k}")
+        row["fused_over_reference"] = round(
+            row["fused"]["round_us"] / row["reference"]["round_us"], 3)
+        row["auto_over_reference"] = round(
+            row[auto]["round_us"] / row["reference"]["round_us"], 3)
+        rounds["sizes"][str(dim)] = row
+    _merge_json(out_path, {"rounds": rounds})
+    return rounds
+
+
+def gate_rounds(rounds: dict, ratio: float) -> int:
+    """CI gate: the auto backend's round must stay within ``ratio`` x the
+    reference per-step path at every size.  Returns a process exit code."""
+    bad = []
+    for dim, row in rounds["sizes"].items():
+        if row["auto_over_reference"] > ratio:
+            bad.append((dim, row["auto_over_reference"]))
+    if bad:
+        print(f"ROUND GATE FAILED: auto ({rounds['auto_backend']}) round "
+              f"exceeds {ratio}x the reference path at: "
+              + ", ".join(f"d{d} ({r}x)" for d, r in bad))
+        return 1
+    print(f"round gate OK: auto ({rounds['auto_backend']}) / reference <= "
+          f"{ratio} at all sizes")
+    return 0
+
+
 if __name__ == "__main__":
-    main()
-    bench_engine()
-    bench_hierarchical()
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="all",
+                    choices=["paper", "engine", "hier", "rounds", "all"])
+    ap.add_argument("--dims", default="256,1024",
+                    help="comma list of model sizes (dim of the MLP bench)")
+    ap.add_argument("--k", type=int, default=8,
+                    help="bench_rounds communication period")
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--gate-ratio", type=float, default=0.0,
+                    help="bench_rounds: exit 1 if auto/reference round "
+                         "time exceeds this at any size (0 = no gate)")
+    args = ap.parse_args()
+    dims = tuple(int(d) for d in args.dims.split(","))
+
+    if args.bench in ("paper", "all"):
+        main()
+    if args.bench in ("engine", "all"):
+        bench_engine(dims=dims)
+    if args.bench in ("hier", "all"):
+        bench_hierarchical(dims=dims)
+    if args.bench in ("rounds", "all"):
+        rounds = bench_rounds(dims=dims, k=args.k, iters=args.iters)
+        if args.gate_ratio:
+            sys.exit(gate_rounds(rounds, args.gate_ratio))

@@ -9,7 +9,6 @@ import numpy as np
 
 from repro.configs import registry
 from repro.configs.base import VRLConfig
-from repro.core import get_algorithm
 from repro.data import lm_token_stream
 from repro.models import transformer as T
 from repro.train.loss import cross_entropy_lm
@@ -25,13 +24,12 @@ def train(algorithm: str, data) -> list[float]:
     vrl = VRLConfig(algorithm=algorithm, comm_period=K, learning_rate=0.2,
                     warmup=True)
     bundle = make_train_step(cfg, vrl, remat=False)
-    alg = get_algorithm(algorithm)
     state = bundle.init_state(jax.random.PRNGKey(0), WORKERS)
     step = jax.jit(bundle.train_step)
 
     @jax.jit
     def eval_avg(state, toks, labels):
-        logits, _ = T.forward(cfg, alg.average_model(state),
+        logits, _ = T.forward(cfg, bundle.average_model(state),
                               toks.reshape(-1, SEQ))
         return cross_entropy_lm(logits, labels.reshape(-1, SEQ))
 

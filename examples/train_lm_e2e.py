@@ -19,7 +19,6 @@ import numpy as np
 from repro import checkpoint as ckpt
 from repro.configs import registry
 from repro.configs.base import VRLConfig
-from repro.core import get_algorithm
 from repro.data import lm_token_stream
 from repro.models import transformer as T
 from repro.train.loss import cross_entropy_lm
@@ -55,7 +54,6 @@ def main():
                     learning_rate=1.0, warmup=True, clip_norm=5.0,
                     inner_optimizer="sgd", weight_decay=0.0)
     bundle = make_train_step(cfg, vrl, remat=args.full_width)
-    alg = get_algorithm("vrl_sgd")
     state = bundle.init_state(jax.random.PRNGKey(0), args.workers)
     n = sum(p.size for p in jax.tree.leaves(state.params)) // args.workers
     print(f"model: {cfg.num_layers}L d={cfg.d_model} vocab={cfg.vocab_size} "
@@ -68,7 +66,7 @@ def main():
 
     @jax.jit
     def eval_ppl(state, toks, labels):
-        logits, _ = T.forward(cfg, alg.average_model(state),
+        logits, _ = T.forward(cfg, bundle.average_model(state),
                               toks.reshape(-1, args.seq))
         return jnp.exp(cross_entropy_lm(logits, labels.reshape(-1, args.seq)))
 

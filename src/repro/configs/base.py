@@ -152,13 +152,18 @@ class EngineConfig:
 
     ``block=0`` auto-sizes the Pallas row tile (pad toward 1024-row
     multiples, capping padding waste at ``max_pad_waste``); ``interpret=None``
-    runs kernel bodies in python everywhere except real TPU backends.
+    runs kernel bodies in python everywhere except real TPU/GPU backends.
+    ``round_scan=True`` makes the *round* the unit of compilation in the
+    launch drivers: k local steps run under a single ``lax.scan`` (state
+    donated, losses buffered device-side) followed by the round-closing
+    sync, compiled once per (k, shape) instead of k python dispatches.
     """
 
     block: int = 0                  # Pallas tile height; 0 = auto
     lanes: int = 256                # flat-buffer lane (last-dim) width
     interpret: Optional[bool] = None
     max_pad_waste: float = 0.25
+    round_scan: bool = True         # launch drivers use round_step
 
 
 @dataclass(frozen=True)
@@ -194,10 +199,15 @@ class VRLConfig:
     momentum: float = 0.0
     easgd_alpha: float = 0.3        # elastic coefficient (EASGD baseline)
     delta_dtype: str = "float32"    # accumulator dtype for Δ
-    # execution backend for the update math: "fused" runs the flat-buffer
-    # Pallas engine (one HBM pass per local step, one flat all-reduce per
-    # sync); "reference" runs the per-leaf jax.tree.map path.
-    update_backend: str = "reference"   # fused | reference
+    # execution backend for the update math over flat buffers:
+    #   "fused"     — Pallas kernels (one explicit HBM pass per local step;
+    #                 interpret-mode python on backends without Pallas)
+    #   "xla"       — the same (W, R, C) elementwise math as plain jnp (XLA
+    #                 fuses the chain; no interpret-mode penalty)
+    #   "auto"      — fused on TPU/GPU, xla elsewhere (CPU)
+    #   "reference" — the per-leaf jax.tree.map oracle path
+    # Resolution lives in core.engine.resolve_backend.
+    update_backend: str = "auto"    # auto | fused | xla | reference
     engine: EngineConfig = EngineConfig()
     # two-level hierarchical periods/grid (required when algorithm ==
     # "hier_vrl_sgd"; ignored by the flat algorithms)

@@ -14,6 +14,7 @@ from repro.core.engine import (  # noqa: F401
     HierFlatState,
     hier_config,
     make_engine,
+    resolve_backend,
     state_partition_specs,
 )
 from repro.core.types import HierState, WorkerState  # noqa: F401

@@ -7,9 +7,10 @@
 
 Every algorithm is a thin ``engine.AlgoSpec`` description executed by
 ``repro.core.engine``.  ``get_algorithm`` returns the per-leaf *reference*
-executor (tree-structured state, easy to inspect); the production fused
-flat-buffer executor is built with ``engine.make_engine`` (selected by
-``VRLConfig.update_backend = "fused"`` in the train loop).
+executor (tree-structured state, easy to inspect); the production
+flat-buffer executors (Pallas "fused" and plain-jnp "xla") are built with
+``engine.make_engine`` (selected by ``VRLConfig.update_backend`` in the
+train loop — "auto" default: fused on TPU/GPU, xla elsewhere).
 """
 from __future__ import annotations
 

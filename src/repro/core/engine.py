@@ -58,14 +58,42 @@ and the fused path over ``HierFlatState`` with the
 Backend selection
 -----------------
 
-``VRLConfig.update_backend`` ("fused" | "reference") threads from
-``configs/base.py`` through ``train/train_loop.py`` to ``launch/train.py``
-(where "fused" is the default).  Tiling knobs (``block``, ``lanes``,
-``interpret``) live in ``configs.base.EngineConfig``.
+``VRLConfig.update_backend`` ("auto" | "fused" | "xla" | "reference")
+threads from ``configs/base.py`` through ``train/train_loop.py`` to the
+launch drivers.  The flat-buffer engine has TWO interchangeable executors
+over the same state layout:
+
+  * "fused" — the Pallas kernels (``kernels/vrl_update``): explicit HBM
+    passes, the right choice where Pallas compiles (TPU/GPU).  On other
+    backends Pallas falls back to interpret mode (python per block) and is
+    orders of magnitude slower than either alternative.
+  * "xla" — the identical (W, R, C) elementwise math as plain jnp
+    (``kernels/xla_update``): XLA fuses the chain into one pass, so it is
+    the fast executor on CPU (and a portable fallback anywhere).
+
+``resolve_backend`` maps "auto" to fused on TPU/GPU and xla elsewhere;
+forcing "fused" where interpret mode would run emits a one-line warning.
+Tiling knobs (``block``, ``lanes``, ``interpret``) live in
+``configs.base.EngineConfig``.
+
+Round execution
+---------------
+
+``Engine.round_step(state, grads_k)`` makes the *communication round* the
+unit of compilation: k local steps run under one ``lax.scan`` over
+pre-flattened (k, ...) gradient buffers — no per-step python dispatch, no
+host sync — followed by ``round_end`` (flat: the sync; hierarchical: the
+level-1 sync plus the level-2 sync whenever the k2 cadence is due, which
+requires k2 % k1 == 0).  Jit it with ``donate_argnums=(0,)`` and the
+compiled HLO aliases every state buffer in place (asserted in
+``tests/test_round_scan.py``); on a mesh the whole round still lowers to
+exactly one sync collective per k steps
+(``tests/test_engine_collectives.py``).
 """
 from __future__ import annotations
 
 import math
+import warnings
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
@@ -77,7 +105,27 @@ from repro.configs.base import HierConfig, VRLConfig
 from repro.core import flat
 from repro.core.types import HierState, WorkerState
 from repro.kernels import vrl_update as vu
+from repro.kernels import xla_update as xu
 from repro.optim.optimizers import AdamState, make_inner
+
+
+BACKENDS = ("auto", "fused", "xla", "reference")
+
+
+def resolve_backend(cfg_or_name) -> str:
+    """Resolve ``update_backend`` to a concrete executor name.
+
+    "auto" picks the Pallas kernels where they compile (TPU/GPU) and the
+    XLA executor elsewhere (CPU) — never the interpret-mode fallback.
+    Accepts a VRLConfig or a bare string.
+    """
+    name = getattr(cfg_or_name, "update_backend", cfg_or_name)
+    if name not in BACKENDS:
+        raise ValueError(f"unknown update_backend {name!r}; known: "
+                         f"{BACKENDS}")
+    if name == "auto":
+        return "fused" if jax.default_backend() in ("tpu", "gpu") else "xla"
+    return name
 
 
 # ===================================================================== specs
@@ -381,7 +429,7 @@ class HierFlatState(NamedTuple):
 
 
 class Engine(NamedTuple):
-    """Bound fused-executor closures for one (algorithm, model) pair."""
+    """Bound flat-buffer-executor closures for one (algorithm, model) pair."""
 
     algorithm: str
     spec: flat.FlatSpec
@@ -395,6 +443,13 @@ class Engine(NamedTuple):
     sync1: Any = None           # hier only: intra-pod sync alone
     sync2: Any = None           # hier only: cross-pod sync alone
     grid: Any = None            # hier only: the (P, D) worker grid
+    round_step: Any = None      # (state, grads_k) -> state: k scanned local
+                                # steps + round_end, one compilation unit
+    round_end: Any = None       # (state,) -> state: the round-closing sync
+                                # (hier: sync1 + conditional k2-cadence sync2)
+    round_step_flat: Any = None  # (state, gk_buf) -> state: round over a
+                                 # pre-flattened (k, W/grid, R, C) buffer
+    backend: str = "fused"      # resolved executor: "fused" | "xla"
 
 
 # Adam moment/bias-correction bases.  Must equal optimizers.adam's defaults
@@ -473,13 +528,26 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
                            max_waste=ecfg.max_pad_waste)
     interpret = (vu.default_interpret() if ecfg.interpret is None
                  else ecfg.interpret)
+    backend = resolve_backend(cfg)
+    if backend == "reference":
+        raise ValueError("make_engine builds the flat-buffer executors; "
+                         "the reference tree path lives in train_loop "
+                         "(update_backend='reference')")
+    if cfg.update_backend == "fused" and interpret:
+        warnings.warn(
+            f"update_backend='fused' runs interpret-mode Pallas on the "
+            f"{jax.default_backend()!r} backend (orders of magnitude "
+            f"slower); use update_backend='auto' to get the XLA executor "
+            f"here", stacklevel=2)
+    ops = vu if backend == "fused" else xu
     block = fspec.block
     kind, beta = _inner_kind(cfg)
     lr, wd = cfg.learning_rate, cfg.weight_decay
     delta_dt = jnp.dtype(cfg.delta_dtype)
 
     if algo.sync == "vrl2":
-        return _make_hier_engine(cfg, algo, fspec, mesh=mesh, kind=kind,
+        return _make_hier_engine(cfg, algo, fspec, mesh=mesh, ops=ops,
+                                 backend=backend, kind=kind,
                                  beta=beta, lr=lr, wd=wd, delta_dt=delta_dt,
                                  block=block, interpret=interpret)
 
@@ -527,11 +595,11 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
             g = jnp.broadcast_to(_wmean(g)[None], g.shape)
         d = state.delta if algo.use_delta else None
         if kind == "sgd":
-            new_p = vu.fused_local_sgd(state.params, g, d, lr=lr, wd=wd,
-                                       block=block, interpret=interpret)
+            new_p = ops.fused_local_sgd(state.params, g, d, lr=lr, wd=wd,
+                                        block=block, interpret=interpret)
             new_inner = state.inner
         elif kind == "momentum":
-            new_p, new_m = vu.fused_local_momentum(
+            new_p, new_m = ops.fused_local_momentum(
                 state.params, g, d, state.inner, lr=lr, beta=beta, wd=wd,
                 block=block, interpret=interpret)
             new_inner = new_m
@@ -540,7 +608,7 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
             t = count.astype(jnp.float32)
             scal = jnp.stack([1.0 - _ADAM_B1 ** t, 1.0 - _ADAM_B2 ** t]
                              ).reshape(1, 2).astype(jnp.float32)
-            new_p, new_mu, new_nu = vu.fused_local_adam(
+            new_p, new_mu, new_nu = ops.fused_local_adam(
                 state.params, g, d, state.inner.mu, state.inner.nu, scal,
                 lr=lr, b1=_ADAM_B1, b2=_ADAM_B2, wd=wd, block=block,
                 interpret=interpret)
@@ -558,7 +626,7 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
             n = state.params.shape[0] * axis_size
             a = cfg.easgd_alpha / n
             xbar = _wmean(state.params.astype(jnp.float32))
-            new_p, new_c = vu.fused_sync_easgd(
+            new_p, new_c = ops.fused_sync_easgd(
                 state.params, xbar, state.center, a=a, na=n * a,
                 block=block, interpret=interpret)
             return state._replace(params=new_p, center=new_c,
@@ -572,7 +640,7 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
         k_eff = jnp.maximum(state.step - state.last_sync, 1
                             ).astype(jnp.float32)
         scal = (k_eff * lr).reshape(1, 1).astype(jnp.float32)
-        new_p, new_d = vu.fused_sync_vrl(
+        new_p, new_d = ops.fused_sync_vrl(
             state.params, xbar.astype(state.params.dtype), state.delta,
             scal, block=block, interpret=interpret)
         return state._replace(params=new_p, delta=new_d,
@@ -586,24 +654,36 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
             should_sync(algo, cfg, state.step, state.last_sync),
             _core_sync, lambda s: s, state)
 
+    def _core_round(state: FlatWorkerState, gk: jax.Array) -> FlatWorkerState:
+        """k local steps under one scan over (k, W, R, C) grads, then the
+        round-closing sync.  The round IS the communication period — the
+        caller sizes gk (warmup's first k=1 period is a 1-step round)."""
+        state, _ = jax.lax.scan(lambda s, g: (_core_local(s, g), None),
+                                state, gk)
+        return _core_sync(state)
+
     # ----------------------------------------------------- shard_map wrap
-    def _sharded(fn, with_grads: bool):
+    ax = None
+    if axis_names is not None:
+        ax = axis_names[0] if len(axis_names) == 1 else axis_names
+
+    def _sharded(fn, gspec: Optional[P] = None):
         if axis_names is None:
             return fn
 
         def wrapped(state, *rest):
             sspec = _state_pspecs(state, axis_names)
-            ax = axis_names[0] if len(axis_names) == 1 else axis_names
-            in_specs = (sspec, P(ax, None, None)) if with_grads else (sspec,)
+            in_specs = (sspec,) if gspec is None else (sspec, gspec)
             return compat.shard_map(fn, mesh=mesh, in_specs=in_specs,
                                     out_specs=sspec,
                                     check_vma=False)(state, *rest)
 
         return wrapped
 
-    local_core = _sharded(_core_local, with_grads=True)
-    sync_core = _sharded(_core_sync, with_grads=False)
-    train_core = _sharded(_core_train, with_grads=True)
+    local_core = _sharded(_core_local, gspec=P(ax, None, None))
+    sync_core = _sharded(_core_sync)
+    train_core = _sharded(_core_train, gspec=P(ax, None, None))
+    round_core = _sharded(_core_round, gspec=P(None, ax, None, None))
 
     # --------------------------------------------------------- public API
     def _gbuf(grads: Any) -> jax.Array:
@@ -618,6 +698,24 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
     def sync(state: FlatWorkerState) -> FlatWorkerState:
         return sync_core(state)
 
+    def round_step(state: FlatWorkerState, grads_k: Any) -> FlatWorkerState:
+        """One communication round: scan k local steps + sync, one jit unit.
+
+        ``grads_k``: worker-stacked grads pytree with an extra leading step
+        axis ((k, W, ...) leaves).  Jit with ``donate_argnums=(0,)`` so the
+        flat state buffers update in place across rounds.
+        """
+        gk = jax.vmap(
+            lambda t: flat.flatten_stacked(fspec, t, dtype=fspec.dtype)
+        )(grads_k)
+        return round_core(state, gk)
+
+    def round_step_flat(state: FlatWorkerState, gk: jax.Array
+                        ) -> FlatWorkerState:
+        """``round_step`` over an already-flattened (k, W, R, C) grads
+        buffer — no pytree-flatten pass (the layout-native hot path)."""
+        return round_core(state, gk)
+
     def params_tree(state: FlatWorkerState) -> Any:
         """Worker-stacked parameter pytree view (for the model forward)."""
         return flat.unflatten_stacked(fspec, state.params)
@@ -628,12 +726,15 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
     return Engine(algorithm=cfg.algorithm, spec=fspec, algo=algo,
                   init=init, train_step=train_step, local_step=local_step,
                   sync=sync, average_model=avg_model,
-                  params_tree=params_tree)
+                  params_tree=params_tree,
+                  round_step=round_step, round_end=sync,
+                  round_step_flat=round_step_flat, backend=backend)
 
 
 # ================================================ fused executor ("vrl2")
 def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
-                      *, mesh, kind: str, beta: float, lr: float, wd: float,
+                      *, mesh, ops, backend: str, kind: str, beta: float,
+                      lr: float, wd: float,
                       delta_dt, block: int, interpret: bool) -> Engine:
     """The two-level engine over pod-major (P, D, R, C) flat buffers.
 
@@ -694,12 +795,12 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
     # ------------------------------------------------- core step functions
     def _core_local(state: HierFlatState, g: jax.Array) -> HierFlatState:
         if kind == "sgd":
-            new_p = vu.fused_hier_local_sgd(
+            new_p = ops.fused_hier_local_sgd(
                 state.params, g, state.delta1, state.delta2, lr=lr, wd=wd,
                 block=block, interpret=interpret)
             new_inner = state.inner
         elif kind == "momentum":
-            new_p, new_inner = vu.fused_hier_local_momentum(
+            new_p, new_inner = ops.fused_hier_local_momentum(
                 state.params, g, state.delta1, state.delta2, state.inner,
                 lr=lr, beta=beta, wd=wd, block=block, interpret=interpret)
         else:
@@ -707,7 +808,7 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
             t = count.astype(jnp.float32)
             scal = jnp.stack([1.0 - _ADAM_B1 ** t, 1.0 - _ADAM_B2 ** t]
                              ).reshape(1, 2).astype(jnp.float32)
-            new_p, new_mu, new_nu = vu.fused_hier_local_adam(
+            new_p, new_mu, new_nu = ops.fused_hier_local_adam(
                 state.params, g, state.delta1, state.delta2, state.inner.mu,
                 state.inner.nu, scal, lr=lr, b1=_ADAM_B1, b2=_ADAM_B2,
                 wd=wd, block=block, interpret=interpret)
@@ -720,7 +821,7 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
                             ).astype(jnp.float32)
         xbar = _pod_mean(state.params)
         scal = (k_eff * lr).reshape(1, 1).astype(jnp.float32)
-        new_p, new_d1 = vu.fused_sync_hier1(
+        new_p, new_d1 = ops.fused_sync_hier1(
             state.params, xbar.astype(state.params.dtype), state.delta1,
             scal, block=block, interpret=interpret)
         return state._replace(params=new_p, delta1=new_d1,
@@ -733,7 +834,7 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
                             ).astype(jnp.float32)
         glob = _cross_mean(state.params[:, :1])
         scal = (k_eff * lr).reshape(1, 1).astype(jnp.float32)
-        new_p, new_d2 = vu.fused_sync_hier2(
+        new_p, new_d2 = ops.fused_sync_hier2(
             state.params, glob.astype(state.params.dtype), state.delta2,
             scal, block=block, interpret=interpret)
         return state._replace(params=new_p, delta2=new_d2,
@@ -749,26 +850,43 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
         state = jax.lax.cond(do1 | do2, _core_sync1, lambda s: s, state)
         return jax.lax.cond(do2, _core_sync2, lambda s: s, state)
 
+    def _core_round_end(state: HierFlatState) -> HierFlatState:
+        """Round-closing sync: a round is one k1 period, so level-1 always
+        fires; level-2 fires whenever the k2 cadence is due (k2 % k1 == 0,
+        checked at the public boundary — the per-step oracle is
+        ``_core_train``)."""
+        state = _core_sync1(state)
+        do2 = (state.step - state.last_sync2) >= k2
+        return jax.lax.cond(do2, _core_sync2, lambda s: s, state)
+
+    def _core_round(state: HierFlatState, gk: jax.Array) -> HierFlatState:
+        state, _ = jax.lax.scan(lambda s, g: (_core_local(s, g), None),
+                                state, gk)
+        return _core_round_end(state)
+
     # ----------------------------------------------------- shard_map wrap
-    def _sharded(fn, with_grads: bool):
+    def _sharded(fn, gspec: Optional[P] = None):
         if mesh is None or (pod_axis is None and data_axis is None):
             return fn
 
         def wrapped(state, *rest):
             sspec = _hier_pspecs(state, pod_axis, data_axis)
-            gspec = P(pod_axis, data_axis, None, None)
-            in_specs = (sspec, gspec) if with_grads else (sspec,)
+            in_specs = (sspec,) if gspec is None else (sspec, gspec)
             return compat.shard_map(fn, mesh=mesh, in_specs=in_specs,
                                     out_specs=sspec,
                                     check_vma=False)(state, *rest)
 
         return wrapped
 
-    local_core = _sharded(_core_local, with_grads=True)
-    train_core = _sharded(_core_train, with_grads=True)
-    sync_core = _sharded(_core_sync, with_grads=False)
-    sync1_core = _sharded(_core_sync1, with_grads=False)
-    sync2_core = _sharded(_core_sync2, with_grads=False)
+    gspec = P(pod_axis, data_axis, None, None)
+    local_core = _sharded(_core_local, gspec=gspec)
+    train_core = _sharded(_core_train, gspec=gspec)
+    sync_core = _sharded(_core_sync)
+    sync1_core = _sharded(_core_sync1)
+    sync2_core = _sharded(_core_sync2)
+    round_core = _sharded(_core_round,
+                          gspec=P(None, pod_axis, data_axis, None, None))
+    round_end_core = _sharded(_core_round_end)
 
     # --------------------------------------------------------- public API
     def _gbuf(grads: Any) -> jax.Array:
@@ -779,6 +897,33 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
 
     def train_step(state, grads):
         return train_core(state, _gbuf(grads))
+
+    def _check_round():
+        if k2 % k1:
+            raise ValueError(
+                f"round execution treats one k1 period as the unit and "
+                f"nests the level-2 cadence, which needs k2 % k1 == 0; "
+                f"got k1={k1}, k2={k2}")
+
+    def round_step(state, grads_k):
+        """One k1 round: scan k1 local steps + sync1 (+ sync2 when the k2
+        cadence is due).  ``grads_k``: grid-stacked grads pytree with an
+        extra leading step axis ((k1, P, D, ...) leaves)."""
+        _check_round()
+        gk = jax.vmap(
+            lambda t: flat.flatten_grid(fspec, t, dtype=fspec.dtype)
+        )(grads_k)
+        return round_core(state, gk)
+
+    def round_step_flat(state, gk):
+        """``round_step`` over an already-flattened (k1, P, D, R, C)
+        grads buffer — no pytree-flatten pass."""
+        _check_round()
+        return round_core(state, gk)
+
+    def round_end(state):
+        _check_round()
+        return round_end_core(state)
 
     def params_tree(state):
         """Grid-stacked parameter pytree view ((P, D, ...) leaves)."""
@@ -794,4 +939,6 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
                   params_tree=params_tree,
                   sync1=lambda s: sync1_core(s),
                   sync2=lambda s: sync2_core(s),
-                  grid=(p_total, d_total))
+                  grid=(p_total, d_total),
+                  round_step=round_step, round_end=round_end,
+                  round_step_flat=round_step_flat, backend=backend)

@@ -45,8 +45,11 @@ from jax.experimental import pallas as pl
 
 
 def default_interpret() -> bool:
-    """Interpret-mode (python body) everywhere but real TPU backends."""
-    return jax.default_backend() != "tpu"
+    """Interpret-mode (python body) everywhere Pallas cannot compile —
+    i.e. anything but real TPU/GPU backends.  Interpret mode is orders of
+    magnitude slower than compiled code; ``update_backend="auto"`` picks
+    the XLA executor (``kernels/xla_update``) on such backends instead."""
+    return jax.default_backend() not in ("tpu", "gpu")
 
 
 def _local_kernel(p_ref, g_ref, d_ref, o_ref, *, lr: float):

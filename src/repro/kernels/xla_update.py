@@ -1,0 +1,176 @@
+"""XLA executor for the engine's fused update math — plain jnp twins of
+every ``kernels/vrl_update.fused_*`` Pallas kernel.
+
+The engine's update math is a short chain of elementwise ops over flat
+(W, R, C) / (P, D, R, C) buffers.  On TPU the Pallas kernels win by
+controlling HBM traffic explicitly; on backends where Pallas would fall
+back to interpret mode (CPU today — see ``vrl_update.default_interpret``)
+the same chain expressed as jnp is fused by XLA into one loop anyway, with
+none of the interpret-mode python-per-block overhead that made the "fused"
+default ~30x slower than the reference path (BENCH_engine.json, PR 1-2).
+
+Every function here mirrors its ``vrl_update`` namesake exactly: same
+signature (``block``/``interpret`` accepted and ignored so the engine can
+dispatch on a module object), same fp32-in-register math, same output
+casts.  Parity with the reference tree path is asserted in
+``tests/test_engine_parity.py``; round-scan parity in
+``tests/test_round_scan.py``.
+
+In-place updates come from the jit boundary instead of
+``input_output_aliases``: the round jit donates the state buffers
+(``donate_argnums``) and ``lax.scan`` reuses the carry, which XLA lowers
+to the same no-copy behaviour the Pallas path gets from kernel aliasing
+(asserted on compiled HLO in ``tests/test_round_scan.py``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _f32(x):
+    return x.astype(jnp.float32)
+
+
+# ================================================== flat (W, R, C) executors
+def fused_local_sgd(p, g, d=None, *, lr: float, wd: float = 0.0,
+                    block: int = 0, interpret=None):
+    """p' = p − γ((g − Δ) + wd·p) on (W, R, C) buffers.  d=None ⇒ Δ ≡ 0."""
+    del block, interpret
+    v = _f32(g) if d is None else _f32(g) - _f32(d)
+    p32 = _f32(p)
+    if wd:
+        v = v + wd * p32
+    return (p32 - lr * v).astype(p.dtype)
+
+
+def fused_local_momentum(p, g, d, m, *, lr: float, beta: float,
+                         wd: float = 0.0, nesterov: bool = False,
+                         block: int = 0, interpret=None):
+    """Momentum inner step fused with the Δ correction; returns (p', m')."""
+    del block, interpret
+    v = _f32(g) if d is None else _f32(g) - _f32(d)
+    p32 = _f32(p)
+    if wd:
+        v = v + wd * p32
+    m_new = beta * _f32(m) + v
+    step_dir = v + beta * m_new if nesterov else m_new
+    return (p32 - lr * step_dir).astype(p.dtype), m_new.astype(m.dtype)
+
+
+def fused_local_adam(p, g, d, mu, nu, scal, *, lr: float, b1: float = 0.9,
+                     b2: float = 0.999, eps: float = 1e-8, wd: float = 0.0,
+                     block: int = 0, interpret=None):
+    """Adam inner step fused with the Δ correction; returns (p', mu', nu').
+
+    ``scal``: (1, 2) fp32 = [1 − b1^t, 1 − b2^t] (traced bias corrections).
+    """
+    del block, interpret
+    v = _f32(g) if d is None else _f32(g) - _f32(d)
+    p32 = _f32(p)
+    c1 = scal[0, 0]
+    c2 = scal[0, 1]
+    mu_new = b1 * _f32(mu) + (1.0 - b1) * v
+    nu_new = b2 * _f32(nu) + (1.0 - b2) * v * v
+    step = lr * (mu_new / c1) / (jnp.sqrt(nu_new / c2) + eps)
+    if wd:
+        step = step + lr * wd * p32
+    return ((p32 - step).astype(p.dtype), mu_new.astype(mu.dtype),
+            nu_new.astype(nu.dtype))
+
+
+def fused_sync_vrl(p, xbar, d, scal, *, block: int = 0, interpret=None):
+    """Δ' = Δ + (x̂ − p)/(k_eff γ); p' = x̂ on (W, R, C) buffers.
+
+    ``xbar``: (R, C); ``scal``: (1, 1) fp32 holding k_eff·γ.
+    Returns (p', Δ').
+    """
+    del block, interpret
+    xb = _f32(xbar)[None]
+    kg = scal[0, 0]
+    new_d = (_f32(d) + (xb - _f32(p)) / kg).astype(d.dtype)
+    new_p = jnp.broadcast_to(xb, p.shape).astype(p.dtype)
+    return new_p, new_d
+
+
+def fused_sync_easgd(p, xbar, center, *, a: float, na: float,
+                     block: int = 0, interpret=None):
+    """Elastic sync (Zhang et al.); returns (p', c').  Math and operand
+    contract identical to ``vrl_update.fused_sync_easgd``."""
+    del block, interpret
+    p32 = _f32(p)
+    c = _f32(center)[None]
+    new_p = (p32 - a * (p32 - c)).astype(p.dtype)
+    new_c = ((1.0 - na) * _f32(center) + na * _f32(xbar)
+             ).astype(center.dtype)
+    return new_p, new_c
+
+
+# ========================================== hierarchical (P, D, R, C) twins
+def fused_hier_local_sgd(p, g, d1, d2, *, lr: float, wd: float = 0.0,
+                         block: int = 0, interpret=None):
+    """p' = p − γ((g − Δ1 − Δ2) + wd·p); Δ2 (P, 1, R, C) broadcasts."""
+    del block, interpret
+    v = _f32(g) - _f32(d1) - _f32(d2)
+    p32 = _f32(p)
+    if wd:
+        v = v + wd * p32
+    return (p32 - lr * v).astype(p.dtype)
+
+
+def fused_hier_local_momentum(p, g, d1, d2, m, *, lr: float, beta: float,
+                              wd: float = 0.0, nesterov: bool = False,
+                              block: int = 0, interpret=None):
+    del block, interpret
+    v = _f32(g) - _f32(d1) - _f32(d2)
+    p32 = _f32(p)
+    if wd:
+        v = v + wd * p32
+    m_new = beta * _f32(m) + v
+    step_dir = v + beta * m_new if nesterov else m_new
+    return (p32 - lr * step_dir).astype(p.dtype), m_new.astype(m.dtype)
+
+
+def fused_hier_local_adam(p, g, d1, d2, mu, nu, scal, *, lr: float,
+                          b1: float = 0.9, b2: float = 0.999,
+                          eps: float = 1e-8, wd: float = 0.0,
+                          block: int = 0, interpret=None):
+    del block, interpret
+    v = _f32(g) - _f32(d1) - _f32(d2)
+    p32 = _f32(p)
+    c1 = scal[0, 0]
+    c2 = scal[0, 1]
+    mu_new = b1 * _f32(mu) + (1.0 - b1) * v
+    nu_new = b2 * _f32(nu) + (1.0 - b2) * v * v
+    step = lr * (mu_new / c1) / (jnp.sqrt(nu_new / c2) + eps)
+    if wd:
+        step = step + lr * wd * p32
+    return ((p32 - step).astype(p.dtype), mu_new.astype(mu.dtype),
+            nu_new.astype(nu.dtype))
+
+
+def fused_sync_hier1(p, xbar_pod, d1, scal, *, block: int = 0,
+                     interpret=None):
+    """Level-1 sync: Δ1' = Δ1 + (x̂_pod − p)/(k1γ); p' = x̂_pod.
+    ``xbar_pod``: (P, 1, R, C).  Returns (p', Δ1')."""
+    del block, interpret
+    xb = _f32(xbar_pod)
+    kg = scal[0, 0]
+    new_d1 = (_f32(d1) + (xb - _f32(p)) / kg).astype(d1.dtype)
+    new_p = jnp.broadcast_to(xb, p.shape).astype(p.dtype)
+    return new_p, new_d1
+
+
+def fused_sync_hier2(p, glob, d2, scal, *, block: int = 0, interpret=None):
+    """Level-2 sync: Δ2' = Δ2 + (x̂ − x̂_pod)/(k2γ); p' = x̂.
+
+    Assumes a level-1 sync at the same step, so every worker's params ARE
+    its pod average — the (P, 1, R, C) pod average is read off worker 0 of
+    each pod.  ``glob``: (R, C).  Returns (p', Δ2').
+    """
+    del block, interpret
+    glob32 = _f32(glob)[None, None]
+    pod = _f32(p[:, :1])
+    kg = scal[0, 0]
+    new_d2 = (_f32(d2) + (glob32 - pod) / kg).astype(d2.dtype)
+    new_p = jnp.broadcast_to(glob32, p.shape).astype(p.dtype)
+    return new_p, new_d2

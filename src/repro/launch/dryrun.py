@@ -26,6 +26,7 @@ import json
 import math
 import sys
 import time
+import warnings
 from typing import Optional
 
 import jax
@@ -240,14 +241,18 @@ def lower_one(arch_id: str, shape_id: str, *, multi_pod: bool,
               cfg_override: Optional[dict] = None, tag: str = "",
               last_only: bool = False, no_remat: bool = False):
     """Lower+compile one combination. fn_kind in
-    {train, local, sync, sync1, sync2, prefill, decode} (default by shape
-    kind; sync1/sync2 are the hierarchical per-level syncs and require
-    ``algorithm="hier_vrl_sgd"``).
+    {train, local, sync, sync1, sync2, round, prefill, decode} (default by
+    shape kind; sync1/sync2 are the hierarchical per-level syncs and require
+    ``algorithm="hier_vrl_sgd"``; "round" lowers ``bundle.round_step`` — one
+    scanned communication period with the state donated, tokens stacked
+    (k, W, b, s)).
 
     The train family lowers through ``backend`` ("fused" default: the
     flat-buffer engine, so the memory/cost/collective-bytes artifacts
-    reflect the production update path — one flat all-reduce per sync, one
-    per-axis all-reduce per hierarchical sync level).
+    reflect the production TPU update path even when lowering on a CPU
+    host; "auto"/"xla" lower the plain-jnp executor, "reference" the
+    per-leaf tree path — one flat all-reduce per sync and one per-axis
+    all-reduce per hierarchical sync level in every engine variant).
 
     ``unrolled=True`` unrolls the layer scan so cost_analysis() counts every
     layer (XLA's HLO cost analysis counts a while-loop body ONCE); use the
@@ -292,13 +297,20 @@ def lower_one(arch_id: str, shape_id: str, *, multi_pod: bool,
         name += f"/{tag}"
 
     with compat.set_mesh(mesh):
-        if fn_kind in ("train", "local", "sync", "sync1", "sync2"):
-            fused = vrl_cfg.update_backend == "fused"
-            bundle = make_train_step(cfg, vrl_cfg,
-                                     remat=not no_remat, unroll=unroll,
-                                     param_dtype=jnp.bfloat16,
-                                     mesh=mesh if fused else None,
-                                     worker_axes=mesh_cfg.worker_axes)
+        if fn_kind in ("train", "local", "sync", "sync1", "sync2", "round"):
+            fused = engine_mod.resolve_backend(vrl_cfg) != "reference"
+            with warnings.catch_warnings():
+                # dryrun's fused default deliberately lowers the Pallas
+                # path on a CPU host (artifacts reflect the TPU plan;
+                # nothing executes) — the engine's interpret-mode perf
+                # warning does not apply to compile-only lowering
+                warnings.filterwarnings(
+                    "ignore", message=".*interpret-mode Pallas.*")
+                bundle = make_train_step(cfg, vrl_cfg,
+                                         remat=not no_remat, unroll=unroll,
+                                         param_dtype=jnp.bfloat16,
+                                         mesh=mesh if fused else None,
+                                         worker_axes=mesh_cfg.worker_axes)
             state_abs = jax.eval_shape(
                 lambda: bundle.init_state(jax.random.PRNGKey(0),
                                           mesh_cfg.num_workers))
@@ -329,6 +341,24 @@ def lower_one(arch_id: str, shape_id: str, *, multi_pod: bool,
                 fn = jax.jit(step_fn, in_shardings=(sts,),
                              out_shardings=sts)
                 lowered = fn.lower(state_abs)
+            elif fn_kind == "round":
+                # one scanned communication period: (k, W, ...) stacks,
+                # state donated — the artifacts show the no-copy round
+                hcfg = engine_mod.hier_config(vrl_cfg)
+                rk = (hcfg.k1 if algorithm == "hier_vrl_sgd"
+                      else vrl_cfg.comm_period)
+                stk = jax.ShapeDtypeStruct(
+                    (rk, *ins["tokens"].shape), ins["tokens"].dtype)
+                slb = jax.ShapeDtypeStruct(
+                    (rk, *ins["labels"].shape), ins["labels"].dtype)
+                tks = compat.shardings(mesh, P(None, *tok_spec))
+                lbs = compat.shardings(mesh, P(None, *lab_spec))
+                fn = jax.jit(bundle.round_step, donate_argnums=(0,),
+                             in_shardings=(sts, tks, lbs),
+                             out_shardings=(sts,
+                                            compat.shardings(mesh,
+                                                             P(None))))
+                lowered = fn.lower(state_abs, stk, slb)
             else:
                 step = (bundle.train_step if fn_kind == "train"
                         else bundle.local_step)
@@ -342,6 +372,8 @@ def lower_one(arch_id: str, shape_id: str, *, multi_pod: bool,
             mf = _model_flops_train(cfg, shape)
             if fn_kind in ("sync", "sync1", "sync2"):
                 mf = 0.0
+            elif fn_kind == "round":
+                mf = mf * rk
         elif fn_kind == "prefill":
             pdefs = transformer.model_defs(cfg)
             params_abs = abstract_params(pdefs, jnp.bfloat16)
@@ -432,8 +464,9 @@ def main(argv=None) -> int:
     ap.add_argument("--mesh", choices=["single", "multi", "both"],
                     default="single")
     ap.add_argument("--fn", default=None,
-                    help="train|local|sync|sync1|sync2|prefill|decode "
-                         "(default by shape; sync1/sync2 need hier_vrl_sgd)")
+                    help="train|local|sync|sync1|sync2|round|prefill|decode "
+                         "(default by shape; sync1/sync2 need hier_vrl_sgd; "
+                         "round = one scanned comm period, state donated)")
     ap.add_argument("--all", action="store_true",
                     help="run the full arch x shape matrix")
     ap.add_argument("--unrolled", action="store_true",
@@ -442,8 +475,11 @@ def main(argv=None) -> int:
                     choices=["vrl_sgd", "local_sgd", "ssgd", "easgd",
                              "hier_vrl_sgd"])
     ap.add_argument("--backend", default="fused",
-                    choices=["fused", "reference"],
-                    help="update-math backend for the train lowerings")
+                    choices=["fused", "reference", "xla", "auto"],
+                    help="update-math backend for the train lowerings "
+                         "(fused default: artifacts reflect the production "
+                         "TPU Pallas path; auto resolves by the HOST jax "
+                         "backend — xla on a CPU host)")
     ap.add_argument("--k1", type=int, default=5,
                     help="hier_vrl_sgd intra-pod period")
     ap.add_argument("--k2", type=int, default=20,

@@ -5,6 +5,13 @@ selectable architecture's reduced or full config with the synthetic non-iid
 LM pipeline, periodic checkpointing, and average-model evaluation — the
 same code path the dry-run lowers for the production mesh.
 
+Execution is ROUND-based by default (``EngineConfig.round_scan``): each
+communication period runs as ONE jit dispatch (k scanned local steps +
+sync, state donated), tokens are prefetched per round, and losses stay
+device-side until a logging boundary — ``--log-every`` counts rounds.
+``--no-round`` falls back to one dispatch per local step (and per-step
+loss fetch), which is the old behaviour.
+
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
       --workers 4 --steps 50 --k 10 --algorithm vrl_sgd
 
@@ -30,6 +37,7 @@ from repro import checkpoint as ckpt
 from repro import compat
 from repro.configs import registry
 from repro.configs.base import EngineConfig, HierConfig, VRLConfig
+from repro.core import engine as engine_mod
 from repro.data import lm_token_stream
 from repro.models import transformer as T
 from repro.train.loss import cross_entropy_lm
@@ -45,12 +53,17 @@ def main(argv=None) -> int:
     ap.add_argument("--algorithm", default="vrl_sgd",
                     choices=["vrl_sgd", "local_sgd", "ssgd", "easgd",
                              "hier_vrl_sgd"])
-    ap.add_argument("--backend", default="fused",
-                    choices=["fused", "reference"],
-                    help="update math: flat-buffer fused Pallas engine "
-                         "(default) or the per-leaf reference path")
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "fused", "xla", "reference"],
+                    help="update math: auto (Pallas where it compiles, "
+                         "XLA elsewhere), fused Pallas, plain-jnp xla, or "
+                         "the per-leaf reference path")
     ap.add_argument("--block", type=int, default=0,
                     help="engine Pallas tile height (0 = auto)")
+    ap.add_argument("--no-round", dest="round", action="store_false",
+                    default=True,
+                    help="dispatch every local step from python instead of "
+                         "compiling one scan-fused round per comm period")
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--batch", type=int, default=8, help="per-worker batch")
     ap.add_argument("--seq", type=int, default=64)
@@ -94,7 +107,8 @@ def main(argv=None) -> int:
     vrl = VRLConfig(algorithm=args.algorithm, comm_period=args.k,
                     learning_rate=args.lr, warmup=args.warmup,
                     update_backend=args.backend,
-                    engine=EngineConfig(block=args.block), hier=hier)
+                    engine=EngineConfig(block=args.block,
+                                        round_scan=args.round), hier=hier)
     mesh = None
     worker_axes = ("data",)
     if args.mesh_grid:
@@ -114,8 +128,12 @@ def main(argv=None) -> int:
     n_params = (bundle.engine.spec.size if bundle.engine is not None else
                 sum(p.size for p in jax.tree.leaves(state.params))
                 // args.workers)
+    resolved = engine_mod.resolve_backend(vrl)
     print(f"params: {n_params/1e6:.2f}M x {args.workers} workers, "
-          f"algorithm={args.algorithm}, k={args.k}, backend={args.backend}")
+          f"algorithm={args.algorithm}, k={args.k}, "
+          f"backend={args.backend}"
+          + (f" -> {resolved}" if resolved != args.backend else "")
+          + f", round_scan={args.round}")
     if bundle.engine is not None:
         es = bundle.engine.spec
         print(f"engine: flat buffer {es.rows}x{es.lanes} "
@@ -125,7 +143,6 @@ def main(argv=None) -> int:
                            steps=args.steps, batch=args.batch,
                            alpha=args.alpha, identical=args.identical,
                            seed=args.seed)
-    step = jax.jit(bundle.train_step)
 
     @jax.jit
     def eval_avg(state, toks, labels):
@@ -133,24 +150,73 @@ def main(argv=None) -> int:
         logits, _ = T.forward(cfg, avg, toks.reshape(-1, args.seq))
         return cross_entropy_lm(logits, labels.reshape(-1, args.seq))
 
+    def checkpoint(t):
+        meta = {"step": t, "arch": args.arch}
+        if bundle.engine is not None:
+            ckpt.save_flat_state(args.ckpt, state, bundle.engine.spec,
+                                 meta=meta, grid=bundle.engine.grid)
+        else:
+            ckpt.save(args.ckpt, state, meta=meta)
+        print(f"checkpointed -> {args.ckpt}")
+
     t0 = time.time()
-    for t in range(args.steps):
-        toks = jnp.asarray(data[t])
-        labels = jnp.roll(toks, -1, axis=-1)
-        state, loss = step(state, toks, labels)
-        if (t + 1) % args.log_every == 0 or t == 0:
-            el = eval_avg(state, toks, labels)
-            print(f"step {t+1:5d}  local_loss {float(loss):.4f}  "
-                  f"avg_model_loss {float(el):.4f}  "
-                  f"({(time.time()-t0)/(t+1):.2f}s/step)")
-        if args.ckpt and (t + 1) % args.ckpt_every == 0:
-            meta = {"step": t + 1, "arch": args.arch}
-            if bundle.engine is not None:
-                ckpt.save_flat_state(args.ckpt, state, bundle.engine.spec,
-                                     meta=meta, grid=bundle.engine.grid)
-            else:
-                ckpt.save(args.ckpt, state, meta=meta)
-            print(f"checkpointed -> {args.ckpt}")
+    if args.round:
+        # Round-based execution: ONE dispatch per communication period (k
+        # scanned local steps + sync, state donated, losses buffered
+        # device-side), tokens prefetched per round.  VRL-SGD-W's warmup
+        # runs the first period as a 1-step round (compiled separately,
+        # once).  --log-every counts rounds here.
+        k_round = hier.k1 if hier else args.k
+        warm_first = (args.warmup
+                      and engine_mod.get_spec(args.algorithm).warmup_aware)
+        round_fn = jax.jit(bundle.round_step, donate_argnums=(0,))
+        t = r = 0
+        while t < args.steps:
+            rk = 1 if (warm_first and t == 0) else k_round
+            if args.steps - t < rk:
+                # tail shorter than a round: finish per-step so the sync
+                # cadence matches the per-step driver exactly (no
+                # off-cadence closing sync, no extra whole-round compile)
+                step = jax.jit(bundle.train_step)
+                while t < args.steps:
+                    toks = jnp.asarray(data[t])
+                    labels = jnp.roll(toks, -1, axis=-1)
+                    state, loss = step(state, toks, labels)
+                    t += 1
+                    if args.ckpt and t % args.ckpt_every == 0:
+                        checkpoint(t)
+                el = eval_avg(state, toks, labels)
+                print(f"step {t:5d} (tail)  "
+                      f"local_loss {float(loss):.4f}  "
+                      f"avg_model_loss {float(el):.4f}  "
+                      f"({(time.time()-t0)/t:.2f}s/step)")
+                break
+            toks = jnp.asarray(data[t:t + rk])          # (rk, W, b, s)
+            labels = jnp.roll(toks, -1, axis=-1)
+            state, losses = round_fn(state, toks, labels)
+            t += rk
+            r += 1
+            if r % args.log_every == 0 or r == 1 or t >= args.steps:
+                el = eval_avg(state, toks[-1], labels[-1])
+                print(f"step {t:5d} (round {r})  "
+                      f"local_loss {float(jnp.mean(losses)):.4f}  "
+                      f"avg_model_loss {float(el):.4f}  "
+                      f"({(time.time()-t0)/t:.2f}s/step)")
+            if args.ckpt and t // args.ckpt_every > (t - rk) // args.ckpt_every:
+                checkpoint(t)
+    else:
+        step = jax.jit(bundle.train_step)
+        for t in range(args.steps):
+            toks = jnp.asarray(data[t])
+            labels = jnp.roll(toks, -1, axis=-1)
+            state, loss = step(state, toks, labels)
+            if (t + 1) % args.log_every == 0 or t == 0:
+                el = eval_avg(state, toks, labels)
+                print(f"step {t+1:5d}  local_loss {float(loss):.4f}  "
+                      f"avg_model_loss {float(el):.4f}  "
+                      f"({(time.time()-t0)/(t+1):.2f}s/step)")
+            if args.ckpt and (t + 1) % args.ckpt_every == 0:
+                checkpoint(t + 1)
     print(f"done: {args.steps} steps in {time.time()-t0:.1f}s")
     return 0
 

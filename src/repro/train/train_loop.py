@@ -9,6 +9,16 @@ functions over worker-stacked state:
       local iteration only — zero worker-axis collectives (dry-run accounting)
   sync_step(state) -> state
       model averaging + Δ update only (the per-period communication event)
+  round_step(state, tokens_k, labels_k) -> (state, losses)
+      ONE COMMUNICATION ROUND as a single compilation unit: k local steps
+      under a ``lax.scan`` over (k, W, ...) token/label stacks — losses
+      buffered device-side, no per-step python dispatch or host sync —
+      followed by the round-closing sync.  Compiled once per (k, shape);
+      jit with ``donate_argnums=(0,)`` so the state updates in place.
+      Hierarchical: the round is one k1 period and the level-2 sync fires
+      on its k2 cadence inside round_step (requires k2 % k1 == 0).
+      Warmup (VRL-SGD-W): the caller sizes the first round k=1
+      (``launch/train.py`` does).
 
 Worker parallelism is a ``vmap`` over the leading worker axis; on the
 production mesh that axis is sharded over the worker mesh axes so local steps
@@ -22,7 +32,8 @@ to (P, D, ...) here.  ``sync1_step``/``sync2_step`` expose the per-level
 syncs (intra-pod / cross-pod) for the dry-run's per-axis collective-bytes
 artifacts.
 
-Backend selection: ``vrl_cfg.update_backend``.
+Backend selection: ``vrl_cfg.update_backend`` (resolved by
+``core.engine.resolve_backend``).
 
   "reference" — tree-structured WorkerState, per-leaf jax.tree.map update.
   "fused"     — flat-buffer engine (core/engine.py): state is a
@@ -31,6 +42,10 @@ Backend selection: ``vrl_cfg.update_backend``.
                 step), and with ``mesh=`` given the sync lowers to a single
                 all-reduce of the flat buffer via shard_map.  The model
                 forward still sees a normal pytree (engine.params_tree).
+  "xla"       — the same flat-buffer engine with the update math as plain
+                jnp (kernels/xla_update): XLA fuses the elementwise chain,
+                so this is the fast executor where Pallas would interpret.
+  "auto"      — fused on TPU/GPU, xla elsewhere (the default).
 """
 from __future__ import annotations
 
@@ -63,9 +78,11 @@ class StepBundle(NamedTuple):
     sync_step: callable
     grads_fn: callable
     average_model: Any = None   # (state,) -> single-model pytree
-    engine: Any = None          # core.engine.Engine when backend == "fused"
+    engine: Any = None          # core.engine.Engine on the engine backends
     sync1_step: Any = None      # hierarchical only: intra-pod sync alone
     sync2_step: Any = None      # hierarchical only: cross-pod sync alone
+    round_step: Any = None      # (state, tokens_k, labels_k) ->
+                                #   (state, (k,) losses): one scanned round
 
 
 def make_train_step(model_cfg: ModelConfig, vrl_cfg: VRLConfig,
@@ -117,7 +134,24 @@ def make_train_step(model_cfg: ModelConfig, vrl_cfg: VRLConfig,
         def stack_vmap(params, tokens, labels):
             return jax.vmap(per_worker)(params, tokens, labels)
 
-    if vrl_cfg.update_backend == "fused":
+    def _make_round(grads_fn, local_fn, round_end_fn):
+        """Round factory shared by all backends: scan k (tokens, labels)
+        pairs through local steps, close with the round-ending sync, and
+        return the per-step losses as a (k,) device array."""
+
+        def round_step(state, tokens_k, labels_k):
+            def body(s, tl):
+                grads, loss = grads_fn(s, tl[0], tl[1])
+                return local_fn(s, grads), loss
+
+            state, losses = jax.lax.scan(body, state,
+                                         (tokens_k, labels_k))
+            return round_end_fn(state), losses
+
+        return round_step
+
+    backend = engine_mod.resolve_backend(vrl_cfg)
+    if backend != "reference":
         template = jax.eval_shape(functools.partial(
             transformer.init_params, model_cfg, dtype=param_dtype),
             jax.random.PRNGKey(0))
@@ -142,9 +176,13 @@ def make_train_step(model_cfg: ModelConfig, vrl_cfg: VRLConfig,
                                              dtype=param_dtype)
             return eng.init(params, num_workers)
 
+        round_step = _make_round(grads_fn,
+                                 lambda s, g: eng.local_step(s, g),
+                                 eng.round_end)
         return StepBundle(init_state, train_step, local_step, eng.sync,
                           grads_fn, eng.average_model, eng,
-                          sync1_step=eng.sync1, sync2_step=eng.sync2)
+                          sync1_step=eng.sync1, sync2_step=eng.sync2,
+                          round_step=round_step)
 
     def grads_fn(state, tokens, labels):
         grads, losses = stack_vmap(state.params, tokens, labels)
@@ -171,6 +209,23 @@ def make_train_step(model_cfg: ModelConfig, vrl_cfg: VRLConfig,
         sync1 = lambda s: H.sync_level1(vrl_cfg, s)       # noqa: E731
         sync2 = lambda s: H.sync_level2(vrl_cfg, s)       # noqa: E731
 
+        def round_end(state):
+            if hcfg.k2 % hcfg.k1:
+                raise ValueError(
+                    f"round execution needs k2 % k1 == 0; got "
+                    f"k1={hcfg.k1}, k2={hcfg.k2}")
+            state = H.sync_level1(vrl_cfg, state)
+            do2 = (state.step - state.last_sync2) >= hcfg.k2
+            return jax.lax.cond(
+                do2, lambda s: H.sync_level2(vrl_cfg, s),
+                lambda s: s, state)
+    else:
+        round_end = sync_step
+
+    round_step = _make_round(grads_fn,
+                             lambda s, g: alg.local_step(vrl_cfg, s, g),
+                             round_end)
     return StepBundle(init_state, train_step, local_step, sync_step,
                       grads_fn, alg.average_model,
-                      sync1_step=sync1, sync2_step=sync2)
+                      sync1_step=sync1, sync2_step=sync2,
+                      round_step=round_step)

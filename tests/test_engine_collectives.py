@@ -1,8 +1,10 @@
 """The engine's headline systems property, verified on compiled HLO:
 
 On a multi-device mesh the fused engine's SYNC step contains EXACTLY ONE
-all-reduce — over the flat (R, C) buffer, not one per parameter leaf — and
-its LOCAL step contains none.  This is the communication event the paper's
+all-reduce — over the flat (R, C) buffer, not one per parameter leaf — its
+LOCAL step contains none, and a whole ROUND (k scanned local steps + sync,
+one compilation unit) still contains exactly one, on both the Pallas and
+xla executors.  This is the communication event the paper's
 O(T^{1/2}N^{3/2}) complexity counts, now visible in the compiled program.
 
 Runs in a subprocess because the 8-device placeholder env must be set
@@ -57,6 +59,21 @@ SCRIPT = textwrap.dedent("""
                                      ).compile().as_text()
     out["local_all_reduce"] = count_ar(hlo_local)
 
+    # the round: k scanned local steps + sync — still exactly ONE sync
+    # all-reduce per k steps in the compiled HLO, on both engine executors
+    gk = jax.tree.map(lambda x: jnp.stack([jnp.sin(3.0 * x + t) + 0.1 * x
+                                           for t in range(4)]),
+                      eng.params_tree(state))
+    hlo_round = jax.jit(eng.round_step, donate_argnums=(0,)
+                        ).lower(state, gk).compile().as_text()
+    out["round_all_reduce"] = count_ar(hlo_round)
+    import dataclasses
+    eng_x = make_engine(dataclasses.replace(cfg, update_backend="xla"),
+                        template, mesh=mesh, worker_axes=("data",))
+    hlo_round_x = jax.jit(eng_x.round_step, donate_argnums=(0,)
+                          ).lower(state, gk).compile().as_text()
+    out["round_all_reduce_xla"] = count_ar(hlo_round_x)
+
     # numerics on the sharded mesh match the single-device reference
     step = jax.jit(lambda s, t: eng.train_step(
         s, grads(eng.params_tree(s), t)))
@@ -84,6 +101,10 @@ def test_fused_sync_is_one_flat_all_reduce():
     assert out["sync_all_reduce"] == 1, out
     # local steps stay communication-free on the worker axis
     assert out["local_all_reduce"] == 0, out
+    # a whole round (k scanned local steps + sync) compiles to exactly ONE
+    # sync collective per k steps, on both engine executors
+    assert out["round_all_reduce"] == 1, out
+    assert out["round_all_reduce_xla"] == 1, out
     # and the sharded trajectory matches the reference path (sum/N vs mean
     # rounding differs, so a slightly looser bound than the 1-device parity)
     assert out["mesh_vs_reference_err"] < 1e-5, out

@@ -1,10 +1,11 @@
-"""Fused flat-buffer engine vs reference tree path: trajectory parity.
+"""Flat-buffer engine executors vs reference tree path: trajectory parity.
 
-The engine (core/engine.py) must reproduce the reference executor exactly
-(fp32, atol 1e-5) for all four algorithms x all three inner optimizers over
-multiple sync periods, and the paper invariants must hold on the fused path.
-Also covers the flat layout (core/flat.py): exact roundtrips, auto tiling,
-and checkpoint save/restore with the unravel spec.
+Both engine executors (core/engine.py: "fused" Pallas and "xla" plain-jnp)
+must reproduce the reference executor exactly (fp32, atol 1e-5) for all
+four algorithms x all three inner optimizers over multiple sync periods,
+and the paper invariants must hold on the fused path.  Also covers the
+flat layout (core/flat.py): exact roundtrips, auto tiling, and checkpoint
+save/restore with the unravel spec.
 """
 import jax
 import jax.numpy as jnp
@@ -42,15 +43,16 @@ def _grads(params, t):
     return jax.tree.map(one, params)
 
 
-def _cfg(alg, inner, k=K, warmup=False):
+def _cfg(alg, inner, k=K, warmup=False, backend="fused"):
     return VRLConfig(algorithm=alg, comm_period=k, learning_rate=0.05,
                      weight_decay=1e-3, inner_optimizer=inner,
                      momentum=0.9 if inner == "momentum" else 0.0,
-                     warmup=warmup, update_backend="fused")
+                     warmup=warmup, update_backend=backend)
 
 
-def _run_pair(alg_name, inner, steps=STEPS, k=K, warmup=False):
-    cfg = _cfg(alg_name, inner, k=k, warmup=warmup)
+def _run_pair(alg_name, inner, steps=STEPS, k=K, warmup=False,
+              backend="fused"):
+    cfg = _cfg(alg_name, inner, k=k, warmup=warmup, backend=backend)
     alg = get_algorithm(alg_name)
     eng = make_engine(cfg, TEMPLATE)
     p0 = _params0()
@@ -78,6 +80,23 @@ def test_fused_matches_reference_trajectory(alg_name, inner):
     for a, b in zip(jax.tree.leaves(alg.average_model(sref)),
                     jax.tree.leaves(eng.average_model(sfus))):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    assert int(sfus.step) == STEPS
+    assert int(sfus.last_sync) == int(sref.last_sync)
+
+
+@pytest.mark.parametrize("inner", INNER)
+@pytest.mark.parametrize("alg_name", ALGORITHMS)
+def test_xla_matches_reference_trajectory(alg_name, inner):
+    """The xla executor (kernels/xla_update, what "auto" picks on CPU)
+    reproduces the reference tree path exactly, like the fused one."""
+    alg, eng, sref, sfus = _run_pair(alg_name, inner, backend="xla")
+    for a, b in zip(jax.tree.leaves(sref.params),
+                    jax.tree.leaves(eng.params_tree(sfus))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    for a, b in zip(jax.tree.leaves(alg.average_model(sref)),
+                    jax.tree.leaves(eng.average_model(sfus))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    assert eng.backend == "xla"
     assert int(sfus.step) == STEPS
     assert int(sfus.last_sync) == int(sref.last_sync)
 
@@ -168,16 +187,16 @@ def _hier_grads(params, t):
     return jax.tree.map(one, params)
 
 
-def _hier_cfg(inner, k1, k2, grid=(2, 3)):
+def _hier_cfg(inner, k1, k2, grid=(2, 3), backend="fused"):
     return VRLConfig(algorithm="hier_vrl_sgd", learning_rate=0.05,
                      weight_decay=1e-3, inner_optimizer=inner,
                      momentum=0.9 if inner == "momentum" else 0.0,
-                     warmup=False, update_backend="fused",
+                     warmup=False, update_backend=backend,
                      hier=HierConfig(k1=k1, k2=k2, grid=grid))
 
 
-def _run_hier_pair(inner, k1, k2, steps=13, grid=(2, 3)):
-    cfg = _hier_cfg(inner, k1, k2, grid=grid)
+def _run_hier_pair(inner, k1, k2, steps=13, grid=(2, 3), backend="fused"):
+    cfg = _hier_cfg(inner, k1, k2, grid=grid, backend=backend)
     eng = make_engine(cfg, TEMPLATE)
     p0 = _params0()
     sref = H.init(cfg, p0, grid)
@@ -218,6 +237,21 @@ def test_hier_fused_matches_reference(inner, k1, k2):
                                                         sfus.delta2))):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=datol)
     assert int(sfus.step) == 13
+    assert int(sfus.last_sync1) == int(sref.last_sync1)
+    assert int(sfus.last_sync2) == int(sref.last_sync2)
+
+
+@pytest.mark.parametrize("inner", ["sgd", "adam"])
+def test_hier_xla_matches_reference(inner):
+    """Two-level xla executor vs reference trajectory parity (params and
+    the evaluation model; Δ parity is covered by the fused matrix)."""
+    eng, sref, sfus = _run_hier_pair(inner, 2, 4, backend="xla")
+    for a, b in zip(jax.tree.leaves(sref.params),
+                    jax.tree.leaves(eng.params_tree(sfus))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    for a, b in zip(jax.tree.leaves(H.average_model(sref)),
+                    jax.tree.leaves(eng.average_model(sfus))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
     assert int(sfus.last_sync1) == int(sref.last_sync1)
     assert int(sfus.last_sync2) == int(sref.last_sync2)
 

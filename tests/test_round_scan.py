@@ -1,0 +1,197 @@
+"""Round-based execution: one compilation unit per communication period.
+
+``Engine.round_step`` (k scan-fused local steps + the round-closing sync)
+must match k sequential ``local_step`` dispatches + ``sync`` exactly, on
+both engine executors, for all four flat algorithms and the hierarchical
+(k1, k2) cadence (whose oracle is the per-step ``train_step``).  The
+train-loop-level ``StepBundle.round_step`` must reproduce the per-step
+trajectory through a real LM forward/backward.  And the round jit must
+donate the flat state buffers — the compiled HLO carries an input/output
+alias for every state array, extending the kernels' per-call
+``input_output_aliases`` guarantee to the whole scanned round.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import HierConfig, VRLConfig
+from repro.core import make_engine
+
+W, K = 4, 4
+
+TEMPLATE = {"w": jnp.zeros((8, 3)), "b": jnp.zeros((5,)),
+            "deep": {"u": jnp.zeros((2, 2, 4))}}
+
+
+def _params0():
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    return {"w": jax.random.normal(ks[0], (8, 3)),
+            "b": jax.random.normal(ks[1], (5,)),
+            "deep": {"u": jax.random.normal(ks[2], (2, 2, 4))}}
+
+
+def _grads_t(p0, t, lead=(W,)):
+    """Deterministic state-independent pseudo-gradients (the round consumes
+    a pre-supplied grads stack, so both paths must see the same inputs);
+    the phase differs per worker so workers drift apart between syncs."""
+    n = int(np.prod(lead))
+
+    def one(x):
+        phase = jnp.arange(n, dtype=x.dtype).reshape(lead + (1,) * x.ndim)
+        big = jnp.broadcast_to(x, lead + x.shape)
+        return jnp.sin(3.0 * big + 0.7 * t + phase) + 0.1 * x
+
+    return jax.tree.map(one, p0)
+
+
+def _stack(gs):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *gs)
+
+
+def _cfg(alg, backend, inner="sgd", k=K):
+    return VRLConfig(algorithm=alg, comm_period=k, learning_rate=0.05,
+                     weight_decay=1e-3, inner_optimizer=inner,
+                     momentum=0.9 if inner == "momentum" else 0.0,
+                     warmup=False, update_backend=backend)
+
+
+@pytest.mark.parametrize("backend", ["xla", "fused"])
+@pytest.mark.parametrize("alg", ["vrl_sgd", "local_sgd", "ssgd", "easgd"])
+def test_round_matches_sequential_flat(alg, backend):
+    """round_step over k steps == k local_step calls + sync (2 rounds)."""
+    cfg = _cfg(alg, backend)
+    eng = make_engine(cfg, TEMPLATE)
+    p0 = _params0()
+    s_seq, s_rnd = eng.init(p0, W), eng.init(p0, W)
+    local, sync = jax.jit(eng.local_step), jax.jit(eng.sync)
+    rstep = jax.jit(eng.round_step, donate_argnums=(0,))
+    for r in range(2):
+        gs = [_grads_t(p0, r * K + i) for i in range(K)]
+        for g in gs:
+            s_seq = local(s_seq, g)
+        s_seq = sync(s_seq)
+        s_rnd = rstep(s_rnd, _stack(gs))
+    np.testing.assert_allclose(np.asarray(s_seq.params),
+                               np.asarray(s_rnd.params), atol=1e-6)
+    if alg == "vrl_sgd":
+        np.testing.assert_allclose(np.asarray(s_seq.delta),
+                                   np.asarray(s_rnd.delta), atol=1e-6)
+    assert int(s_rnd.step) == 2 * K
+    assert int(s_rnd.last_sync) == int(s_seq.last_sync)
+
+
+@pytest.mark.parametrize("backend", ["xla", "fused"])
+def test_round_matches_per_step_hier(backend):
+    """Hierarchical rounds are one k1 period each and nest the level-2
+    k2 cadence: 4 rounds at (k1, k2) = (2, 4) cross two k2 boundaries and
+    must match the per-step train_step oracle exactly."""
+    grid = (2, 3)
+    cfg = VRLConfig(algorithm="hier_vrl_sgd", learning_rate=0.05,
+                    weight_decay=1e-3, update_backend=backend,
+                    hier=HierConfig(k1=2, k2=4, grid=grid))
+    eng = make_engine(cfg, TEMPLATE)
+    p0 = _params0()
+    s_seq, s_rnd = eng.init(p0, 6), eng.init(p0, 6)
+    tstep = jax.jit(eng.train_step)
+    rstep = jax.jit(eng.round_step, donate_argnums=(0,))
+    for r in range(4):
+        gs = [_grads_t(p0, 2 * r + i, lead=grid) for i in range(2)]
+        for g in gs:
+            s_seq = tstep(s_seq, g)
+        s_rnd = rstep(s_rnd, _stack(gs))
+    for name in ("params", "delta1", "delta2"):
+        np.testing.assert_allclose(np.asarray(getattr(s_seq, name)),
+                                   np.asarray(getattr(s_rnd, name)),
+                                   atol=1e-6, err_msg=name)
+    assert int(s_rnd.last_sync1) == int(s_seq.last_sync1) == 8
+    assert int(s_rnd.last_sync2) == int(s_seq.last_sync2) == 8
+
+
+def test_round_requires_divisible_hier_periods():
+    """k2 % k1 != 0 cannot be expressed as whole k1 rounds — refuse."""
+    cfg = VRLConfig(algorithm="hier_vrl_sgd", learning_rate=0.05,
+                    update_backend="xla",
+                    hier=HierConfig(k1=2, k2=5, grid=(2, 3)))
+    eng = make_engine(cfg, TEMPLATE)
+    state = eng.init(_params0(), 6)
+    gk = _stack([_grads_t(_params0(), i, lead=(2, 3)) for i in range(2)])
+    with pytest.raises(ValueError, match="k2 % k1"):
+        eng.round_step(state, gk)
+    with pytest.raises(ValueError, match="k2 % k1"):
+        eng.round_end(state)
+
+
+@pytest.mark.parametrize("backend", ["auto", "reference"])
+def test_train_loop_round_matches_per_step(backend):
+    """StepBundle.round_step through a real LM fwd/bwd: two k=3 rounds
+    reproduce six per-step train_step calls — same per-step losses, same
+    final parameters — on the engine ("auto") and reference backends."""
+    from repro.configs import registry
+    from repro.train.train_loop import make_train_step
+
+    cfg = registry.smoke_arch("qwen2-0.5b", num_layers=2, d_model=64,
+                              d_ff=128, vocab_size=64, num_heads=4,
+                              num_kv_heads=2, head_dim=16)
+    vrl = VRLConfig(algorithm="vrl_sgd", comm_period=3, learning_rate=0.2,
+                    weight_decay=0.0, warmup=False, update_backend=backend)
+    w, b, s, k, rounds = 2, 2, 16, 3, 2
+    toks = jax.random.randint(jax.random.PRNGKey(3), (k * rounds, w, b, s),
+                              0, 64)
+    labels = jnp.roll(toks, -1, -1)
+
+    bundle = make_train_step(cfg, vrl, remat=False)
+    s_seq = bundle.init_state(jax.random.PRNGKey(0), w)
+    s_rnd = bundle.init_state(jax.random.PRNGKey(0), w)
+    step = jax.jit(bundle.train_step)
+    rstep = jax.jit(bundle.round_step, donate_argnums=(0,))
+
+    seq_losses = []
+    for t in range(k * rounds):
+        s_seq, loss = step(s_seq, toks[t], labels[t])
+        seq_losses.append(float(loss))
+    rnd_losses = []
+    for r in range(rounds):
+        sl = slice(r * k, (r + 1) * k)
+        s_rnd, losses = rstep(s_rnd, toks[sl], labels[sl])
+        rnd_losses.extend(float(x) for x in losses)
+
+    np.testing.assert_allclose(seq_losses, rnd_losses, atol=1e-6)
+    for a, b_ in zip(jax.tree.leaves(bundle.average_model(s_seq)),
+                     jax.tree.leaves(bundle.average_model(s_rnd))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-5)
+
+
+def test_round_jit_donates_flat_state():
+    """The round jit's compiled HLO aliases EVERY flat state buffer to an
+    output (no per-round state copy) — the scan-level extension of the
+    kernels' input_output_aliases donation."""
+    cfg = _cfg("vrl_sgd", "xla", inner="momentum")
+    eng = make_engine(cfg, TEMPLATE)
+    state = eng.init(_params0(), W)
+    gk = _stack([_grads_t(_params0(), i) for i in range(K)])
+    hlo = jax.jit(eng.round_step, donate_argnums=(0,)
+                  ).lower(state, gk).compile().as_text()
+    n_state_arrays = len(jax.tree.leaves(state))     # p, Δ, m, step, last
+    assert n_state_arrays == 5
+    assert "input_output_alias" in hlo
+    assert hlo.count("may-alias") + hlo.count("must-alias") >= n_state_arrays
+
+
+def test_round_flat_matches_round_tree():
+    """round_step_flat over the pre-flattened buffer (the bench hot path)
+    equals round_step over the grads pytree."""
+    from repro.core import flat
+
+    cfg = _cfg("vrl_sgd", "xla")
+    eng = make_engine(cfg, TEMPLATE)
+    p0 = _params0()
+    gs = _stack([_grads_t(p0, i) for i in range(K)])
+    gk = jax.vmap(lambda t: flat.flatten_stacked(eng.spec, t,
+                                                 dtype=eng.spec.dtype))(gs)
+    s1 = jax.jit(eng.round_step)(eng.init(p0, W), gs)
+    s2 = jax.jit(eng.round_step_flat)(eng.init(p0, W), gk)
+    np.testing.assert_array_equal(np.asarray(s1.params),
+                                  np.asarray(s2.params))
+    np.testing.assert_array_equal(np.asarray(s1.delta),
+                                  np.asarray(s2.delta))

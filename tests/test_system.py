@@ -7,7 +7,6 @@ import numpy as np
 from repro import checkpoint as ckpt
 from repro.configs import registry
 from repro.configs.base import VRLConfig
-from repro.core import get_algorithm
 from repro.data import lm_token_stream
 from repro.serve.engine import Engine
 from repro.train.train_loop import make_train_step
@@ -41,9 +40,9 @@ def test_end_to_end_train_checkpoint_serve(tmp_path):
         np.asarray(jax.tree.leaves(restored.params)[0]),
         np.asarray(jax.tree.leaves(state.params)[0]))
 
-    # serve the averaged model
-    alg = get_algorithm("vrl_sgd")
-    model = alg.average_model(restored)
+    # serve the averaged model (bundle.average_model is backend-appropriate
+    # — the default "auto" backend carries flat-buffer engine state)
+    model = bundle.average_model(restored)
     eng = Engine(cfg, model, max_len=64)
     prompt = jnp.asarray(data[0, 0, :2, :8])        # (2, 8) prompt
     out = eng.generate(prompt, steps=6)

@@ -22,8 +22,9 @@ W, BATCH, SEQ, STEPS, K = 4, 8, 32, 150, 20
 
 def _run(alg, data, lr=0.3):
     """Returns the AVERAGE MODEL x̂'s loss per step (the paper's metric —
-    mean local loss would reward Local SGD for per-shard overfitting)."""
-    from repro.core import get_algorithm
+    mean local loss would reward Local SGD for per-shard overfitting).
+    Runs the DEFAULT backend ("auto" — the engine path), so the headline
+    convergence result is asserted on the production executor."""
     from repro.models import transformer as T
     from repro.train.loss import cross_entropy_lm
     cfg = registry.smoke_arch("qwen2-0.5b", num_layers=2, d_model=64,
@@ -32,13 +33,12 @@ def _run(alg, data, lr=0.3):
     vrl = VRLConfig(algorithm=alg, comm_period=K, learning_rate=lr,
                     weight_decay=0.0, warmup=False)
     bundle = make_train_step(cfg, vrl, remat=False)
-    alg_mod = get_algorithm(alg)
     state = bundle.init_state(jax.random.PRNGKey(0), W)
     step = jax.jit(bundle.train_step)
 
     @jax.jit
     def eval_avg(state, toks, labels):
-        avg = alg_mod.average_model(state)
+        avg = bundle.average_model(state)
         logits, _ = T.forward(cfg, avg, toks.reshape(-1, SEQ))
         return cross_entropy_lm(logits, labels.reshape(-1, SEQ))
 
