@@ -174,30 +174,10 @@ def bench_hierarchical(*, grid=(2, 2), k1: int = 2, k2: int = 4,
     return hier
 
 
-def bench_rounds(*, workers: int = 4, k: int = 8, dims=(256, 1024),
-                 iters: int = 5, out_path: str = "BENCH_engine.json",
-                 fused_iters: int = 1) -> dict:
-    """Round execution per backend vs the reference per-step path.
-
-    A "round" is one communication period: the reference path pays k
-    python jit dispatches (one per local step) plus a sync dispatch; the
-    engine's ``round_step`` compiles the whole period into one ``lax.scan``
-    + sync.  Times one round of each at every model size for the fused
-    (Pallas — interpret-mode on CPU, so expect it to lose there), xla, and
-    reference executors, and records which backend "auto" resolves to.
-    Each path gets grads in its native layout (tree for reference,
-    pre-flattened (k, W, R, C) for the engine — ``round_step_flat``) and
-    the engine round donates its state, exactly the launch-driver
-    contract.
-
-    This is the tracked number for the PR-1 regression BENCH_engine.json
-    documents (interpret-mode "fused" ~30x slower than reference on CPU):
-    CI gates on auto/reference <= 1.2 (``--bench rounds --gate-ratio``),
-    and on CPU the auto (= xla) round must beat the reference path
-    outright.  ``fused_iters`` keeps the interpret-mode timing affordable.
-    """
-    auto = resolve_backend("auto")
-    rounds = {"workers": workers, "k": k, "auto_backend": auto, "sizes": {}}
+def _bench_rounds_alg(alg_name: str, *, workers: int, k: int, dims,
+                      iters: int, fused_iters: int, auto: str) -> dict:
+    """One algorithm's round timings per backend at every model size."""
+    sizes = {}
     for dim in dims:
         params = _mlp_template(jax.random.PRNGKey(0), dim)
         n_params = sum(p.size for p in jax.tree.leaves(params))
@@ -211,10 +191,10 @@ def bench_rounds(*, workers: int = 4, k: int = 8, dims=(256, 1024),
             lambda g: g[None] * scale.reshape((k,) + (1,) * g.ndim), grads)
         row = {"n_params": int(n_params)}
 
-        cfg_ref = VRLConfig(algorithm="vrl_sgd", comm_period=k,
+        cfg_ref = VRLConfig(algorithm=alg_name, comm_period=k,
                             learning_rate=0.01, weight_decay=1e-4,
                             update_backend="reference")
-        alg = get_algorithm("vrl_sgd")
+        alg = get_algorithm(alg_name)
         rstate = alg.init(cfg_ref, params, workers)
         local = jax.jit(lambda s, g: alg.local_step(cfg_ref, s, g))
         sync = jax.jit(lambda s: alg.sync(cfg_ref, s))
@@ -228,7 +208,7 @@ def bench_rounds(*, workers: int = 4, k: int = 8, dims=(256, 1024),
             timeit(lambda: ref_round(rstate), iters=iters), 1)}
 
         for backend in ["xla", "fused"]:
-            cfg = VRLConfig(algorithm="vrl_sgd", comm_period=k,
+            cfg = VRLConfig(algorithm=alg_name, comm_period=k,
                             learning_rate=0.01, weight_decay=1e-4,
                             update_backend=backend)
             eng = make_engine(cfg, jax.eval_shape(lambda: params))
@@ -249,32 +229,76 @@ def bench_rounds(*, workers: int = 4, k: int = 8, dims=(256, 1024),
             row[backend] = {"round_us": round(
                 timeit(one_round, iters=it, warmup_iters=1), 1)}
         for backend in ["reference", "xla", "fused"]:
-            csv(f"engine/rounds/{backend}/d{dim}",
+            csv(f"engine/rounds/{alg_name}/{backend}/d{dim}",
                 row[backend]["round_us"],
                 f"{n_params/1e6:.2f}M params x {workers} workers, k={k}")
         row["fused_over_reference"] = round(
             row["fused"]["round_us"] / row["reference"]["round_us"], 3)
         row["auto_over_reference"] = round(
             row[auto]["round_us"] / row["reference"]["round_us"], 3)
-        rounds["sizes"][str(dim)] = row
+        sizes[str(dim)] = row
+    return sizes
+
+
+def bench_rounds(*, workers: int = 4, k: int = 8, dims=(256, 1024),
+                 iters: int = 5, out_path: str = "BENCH_engine.json",
+                 fused_iters: int = 1,
+                 algs=("vrl_sgd",)) -> dict:
+    """Round execution per backend vs the reference per-step path.
+
+    A "round" is one communication period: the reference path pays k
+    python jit dispatches (one per local step) plus a sync dispatch; the
+    engine's ``round_step`` compiles the whole period into one ``lax.scan``
+    + sync.  Times one round of each at every model size for the fused
+    (Pallas — interpret-mode on CPU, so expect it to lose there), xla, and
+    reference executors, and records which backend "auto" resolves to.
+    Each path gets grads in its native layout (tree for reference,
+    pre-flattened (k, W, R, C) for the engine — ``round_step_flat``) and
+    the engine round donates its state, exactly the launch-driver
+    contract.
+
+    ``algs`` extends the matrix beyond vrl_sgd (CI runs the engine-variant
+    specs stl_sgd and bvr_l_sgd through the same gate); vrl_sgd's rows
+    stay under the top-level "sizes" key so the PR-3 perf trajectory in
+    BENCH_engine.json remains comparable, and every algorithm (vrl_sgd
+    included) lands under "by_alg".
+
+    This is the tracked number for the PR-1 regression BENCH_engine.json
+    documents (interpret-mode "fused" ~30x slower than reference on CPU):
+    CI gates on auto/reference <= 1.2 (``--bench rounds --gate-ratio``),
+    and on CPU the auto (= xla) round must beat the reference path
+    outright.  ``fused_iters`` keeps the interpret-mode timing affordable.
+    """
+    auto = resolve_backend("auto")
+    rounds = {"workers": workers, "k": k, "auto_backend": auto,
+              "by_alg": {}}
+    for alg_name in algs:
+        rounds["by_alg"][alg_name] = _bench_rounds_alg(
+            alg_name, workers=workers, k=k, dims=dims, iters=iters,
+            fused_iters=fused_iters, auto=auto)
+    if "vrl_sgd" in rounds["by_alg"]:
+        rounds["sizes"] = rounds["by_alg"]["vrl_sgd"]
     _merge_json(out_path, {"rounds": rounds})
     return rounds
 
 
 def gate_rounds(rounds: dict, ratio: float) -> int:
     """CI gate: the auto backend's round must stay within ``ratio`` x the
-    reference per-step path at every size.  Returns a process exit code."""
+    reference per-step path at every size, for every benched algorithm.
+    Returns a process exit code."""
+    by_alg = rounds.get("by_alg") or {"vrl_sgd": rounds["sizes"]}
     bad = []
-    for dim, row in rounds["sizes"].items():
-        if row["auto_over_reference"] > ratio:
-            bad.append((dim, row["auto_over_reference"]))
+    for alg_name, sizes in by_alg.items():
+        for dim, row in sizes.items():
+            if row["auto_over_reference"] > ratio:
+                bad.append((alg_name, dim, row["auto_over_reference"]))
     if bad:
         print(f"ROUND GATE FAILED: auto ({rounds['auto_backend']}) round "
               f"exceeds {ratio}x the reference path at: "
-              + ", ".join(f"d{d} ({r}x)" for d, r in bad))
+              + ", ".join(f"{a}/d{d} ({r}x)" for a, d, r in bad))
         return 1
     print(f"round gate OK: auto ({rounds['auto_backend']}) / reference <= "
-          f"{ratio} at all sizes")
+          f"{ratio} at all sizes for {sorted(by_alg)}")
     return 0
 
 
@@ -289,6 +313,9 @@ if __name__ == "__main__":
                     help="comma list of model sizes (dim of the MLP bench)")
     ap.add_argument("--k", type=int, default=8,
                     help="bench_rounds communication period")
+    ap.add_argument("--algs", default="vrl_sgd",
+                    help="bench_rounds: comma list of algorithms to bench "
+                         "and gate (e.g. vrl_sgd,stl_sgd,bvr_l_sgd)")
     ap.add_argument("--iters", type=int, default=5)
     ap.add_argument("--gate-ratio", type=float, default=0.0,
                     help="bench_rounds: exit 1 if auto/reference round "
@@ -303,6 +330,8 @@ if __name__ == "__main__":
     if args.bench in ("hier", "all"):
         bench_hierarchical(dims=dims)
     if args.bench in ("rounds", "all"):
-        rounds = bench_rounds(dims=dims, k=args.k, iters=args.iters)
+        rounds = bench_rounds(dims=dims, k=args.k, iters=args.iters,
+                              algs=tuple(a for a in args.algs.split(",")
+                                         if a))
         if args.gate_ratio:
             sys.exit(gate_rounds(rounds, args.gate_ratio))

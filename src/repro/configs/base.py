@@ -189,7 +189,8 @@ class HierConfig:
 class VRLConfig:
     """The paper's algorithm knobs."""
 
-    algorithm: str = "vrl_sgd"  # vrl_sgd | local_sgd | ssgd | easgd | hier_vrl_sgd
+    # vrl_sgd | local_sgd | ssgd | easgd | hier_vrl_sgd | stl_sgd | bvr_l_sgd
+    algorithm: str = "vrl_sgd"
     comm_period: int = 20           # k
     warmup: bool = True             # VRL-SGD-W (Remark 5.3): first period k=1
     learning_rate: float = 0.01
@@ -198,6 +199,15 @@ class VRLConfig:
     clip_norm: float = 0.0          # per-worker global-norm gradient clip
     momentum: float = 0.0
     easgd_alpha: float = 0.3        # elastic coefficient (EASGD baseline)
+    # bvr_l_sgd: EMA rate of the bias control variate B (0 disables the
+    # correction — the trajectory is then bitwise vrl_sgd)
+    bvr_beta: float = 0.5
+    # stagewise round schedule (a ``repro.core.schedule.CommSchedule``;
+    # stored untyped to keep configs import-free).  None = the constant
+    # ``comm_period`` cadence, except stl_sgd which defaults to the
+    # stagewise-doubling ramp 1 → comm_period (resolution:
+    # ``core.engine.comm_schedule``).  Supersedes ``warmup`` when set.
+    comm_schedule: Optional[object] = None
     delta_dtype: str = "float32"    # accumulator dtype for Δ
     # execution backend for the update math over flat buffers:
     #   "fused"     — Pallas kernels (one explicit HBM pass per local step;

@@ -12,9 +12,19 @@ from repro.core.engine import (  # noqa: F401
     Engine,
     FlatWorkerState,
     HierFlatState,
+    RoundCache,
+    comm_schedule,
+    flat_algorithms,
     hier_config,
     make_engine,
     resolve_backend,
     state_partition_specs,
+)
+from repro.core.schedule import (  # noqa: F401
+    CommSchedule,
+    const_comm,
+    custom_stages,
+    parse_schedule,
+    stagewise_doubling,
 )
 from repro.core.types import HierState, WorkerState  # noqa: F401

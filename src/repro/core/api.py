@@ -16,7 +16,16 @@ from __future__ import annotations
 
 from typing import Any, Callable, NamedTuple
 
-from repro.core import easgd, engine, hierarchical, local_sgd, ssgd, vrl_sgd
+from repro.core import (
+    bvr_l_sgd,
+    easgd,
+    engine,
+    hierarchical,
+    local_sgd,
+    ssgd,
+    stl_sgd,
+    vrl_sgd,
+)
 
 
 class Algorithm(NamedTuple):
@@ -34,6 +43,8 @@ _ALGS = {
     "ssgd": ssgd,
     "easgd": easgd,
     "hier_vrl_sgd": hierarchical,
+    "stl_sgd": stl_sgd,
+    "bvr_l_sgd": bvr_l_sgd,
 }
 
 

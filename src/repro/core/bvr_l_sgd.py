@@ -1,0 +1,50 @@
+"""Bias-Variance Reduced Local SGD [Murata & Suzuki 2021], engine form.
+
+BVR-L-SGD augments the variance-reduction correction with a *bias*
+control variate evaluated at the communication point.  The engine sees
+exactly one gradient per local step (the train loop computes it at the
+current params), so the paper's same-sample anchor-gradient correction is
+carried in its parameter-motion form, the same telescoping that gives
+VRL-SGD its Δ:
+
+  local:  v_i = g_i − Δ_i − B_i
+  sync:   u_i = (x̂ − x_i)/(k_eff γ)      (realized drift this round)
+          Δ_i ← Δ_i + u_i                (eq. 4, unchanged)
+          B_i ← (1−β)·B_i + β·u_i        (bias-variate EMA, β = bvr_beta)
+          x_i ← x̂
+
+Δ accumulates the full drift history while B tracks its *recent* component
+— subtracting both anticipates the persistent (heterogeneity-driven) bias
+the lagged Δ has not yet absorbed.  Invariants: Σ_i B_i = 0 after every
+sync (same argument as Δ); β = 0 disables the correction at trace time and
+the trajectory is bitwise VRL-SGD (``tests/test_engine_parity.py``).
+
+Described by ``SPEC`` (Δ + B corrections, "bvr" sync rule) and executed by
+``core/engine.py`` — the sync is still a single flat all-reduce (x̂ only;
+u, Δ, B are worker-local).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.configs.base import VRLConfig
+from repro.core import engine
+from repro.core.types import WorkerState
+
+SPEC = engine.ALGO_SPECS["bvr_l_sgd"]
+
+
+def init(cfg: VRLConfig, params: Any, num_workers: int) -> WorkerState:
+    return engine.ref_init(SPEC, cfg, params, num_workers)
+
+
+def local_step(cfg: VRLConfig, state: WorkerState, grads: Any) -> WorkerState:
+    return engine.ref_local_step(SPEC, cfg, state, grads)
+
+
+def sync(cfg: VRLConfig, state: WorkerState) -> WorkerState:
+    return engine.ref_sync(SPEC, cfg, state)
+
+
+def train_step(cfg: VRLConfig, state: WorkerState, grads: Any) -> WorkerState:
+    return engine.ref_train_step(SPEC, cfg, state, grads)

@@ -12,10 +12,11 @@ O(T^{1/2}N^{3/2}) complexity counts — plus the Δ update).  The engine
 factors that loop into two orthogonal pieces:
 
   1. ``AlgoSpec`` — a thin *description* of an algorithm: does the local
-     step subtract Δ, is the gradient all-reduced every step (S-SGD), and
-     which sync rule runs at period boundaries ("vrl" | "average" |
-     "elastic" | "none").  ``core/{vrl_sgd,local_sgd,ssgd,easgd}.py`` are
-     now just named specs plus thin wrappers over this module.
+     step subtract Δ (and BVR-L-SGD's bias variate B), is the gradient
+     all-reduced every step (S-SGD), and which sync rule runs at period
+     boundaries ("vrl" | "average" | "elastic" | "none" | "bvr").
+     ``core/{vrl_sgd,local_sgd,ssgd,easgd,stl_sgd,bvr_l_sgd}.py`` are now
+     just named specs plus thin wrappers over this module.
 
   2. Two interchangeable executors over a spec:
 
@@ -89,6 +90,13 @@ compiled HLO aliases every state buffer in place (asserted in
 ``tests/test_round_scan.py``); on a mesh the whole round still lowers to
 exactly one sync collective per k steps
 (``tests/test_engine_collectives.py``).
+
+Rounds take k from the leading axis of the grads stack, so a stagewise
+``CommSchedule`` (``core/schedule.py``, ``VRLConfig.comm_schedule``) just
+feeds differently-sized stacks per stage: ``RoundCache`` keys one compiled
+round executable per distinct k, so a whole stagewise run compiles at most
+``len(stages)`` rounds, and the sync math stays exact at any period because
+it uses the true elapsed k_eff.
 """
 from __future__ import annotations
 
@@ -103,6 +111,7 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.configs.base import HierConfig, VRLConfig
 from repro.core import flat
+from repro.core import schedule as schedule_mod
 from repro.core.types import HierState, WorkerState
 from repro.kernels import vrl_update as vu
 from repro.kernels import xla_update as xu
@@ -134,15 +143,19 @@ class AlgoSpec(NamedTuple):
 
     ``sync`` names the rule that runs at period boundaries; "vrl2" is the
     two-level rule (intra-pod "vrl" at k1, cross-pod "vrl" at k2) whose
-    state lives on a pod-major worker grid instead of a flat worker axis.
+    state lives on a pod-major worker grid instead of a flat worker axis;
+    "bvr" is the VRL rule plus BVR-L-SGD's bias-variate EMA.
     """
 
     name: str
     use_delta: bool        # local step applies v = g − Δ (eq. 6)
     grad_all_reduce: bool  # S-SGD: mean gradients over workers every step
     sync: str              # "vrl" | "average" | "elastic" | "none" | "vrl2"
+                           # | "bvr"
     has_center: bool       # EASGD center variable x̃
     warmup_aware: bool     # honors VRLConfig.warmup (first period k=1)
+    use_bias: bool = False  # BVR-L-SGD: local step also subtracts B
+    stagewise: bool = False  # STL-SGD: default to a stagewise CommSchedule
 
 
 ALGO_SPECS = {
@@ -158,7 +171,55 @@ ALGO_SPECS = {
     "hier_vrl_sgd": AlgoSpec("hier_vrl_sgd", use_delta=True,
                              grad_all_reduce=False, sync="vrl2",
                              has_center=False, warmup_aware=False),
+    # STL-SGD (Shen et al., 2020): Local SGD whose communication period
+    # grows stagewise — the update structure IS local_sgd's; the stagewise
+    # cadence comes from the CommSchedule (comm_schedule() below), so with
+    # a constant schedule the trajectory is bitwise local_sgd.
+    "stl_sgd": AlgoSpec("stl_sgd", use_delta=False, grad_all_reduce=False,
+                        sync="average", has_center=False,
+                        warmup_aware=False, stagewise=True),
+    # BVR-L-SGD (Murata & Suzuki, 2021): VRL-SGD plus a bias-corrected
+    # control variate.  The engine sees one gradient per step, so the
+    # paper's same-sample anchor-gradient correction is carried in its
+    # parameter-motion form: B_i is an EMA (rate cfg.bvr_beta) of the
+    # per-round realized drift u_i = (x̂ − x_i)/(k_eff γ), subtracted in
+    # every local step alongside Δ_i.  Σ_i B_i = 0 after every sync (same
+    # argument as Δ), and bvr_beta=0 disables the correction at trace time
+    # — the trajectory is then bitwise vrl_sgd.
+    "bvr_l_sgd": AlgoSpec("bvr_l_sgd", use_delta=True,
+                          grad_all_reduce=False, sync="bvr",
+                          has_center=False, warmup_aware=True,
+                          use_bias=True),
 }
+
+
+def flat_algorithms() -> Tuple[str, ...]:
+    """Registry-derived names of the flat (non-hierarchical) algorithms —
+    tests iterate this so new specs are covered automatically."""
+    return tuple(n for n, s in sorted(ALGO_SPECS.items())
+                 if s.sync != "vrl2")
+
+
+def comm_schedule(cfg: VRLConfig):
+    """The round schedule driving this config's sync cadence.
+
+    ``cfg.comm_schedule`` when set; stl_sgd defaults to the STL-SGD
+    stagewise-doubling ramp 1 → ``comm_period``; None otherwise (the
+    constant ``comm_period`` cadence, the seed behaviour).  A schedule
+    supersedes ``warmup`` — express a warm start as an initial k=1 stage.
+    """
+    if cfg.comm_schedule is not None:
+        return cfg.comm_schedule
+    if get_spec(cfg.algorithm).stagewise:
+        return schedule_mod.stagewise_doubling(k0=1, k_max=cfg.comm_period)
+    return None
+
+
+def use_bias(spec: AlgoSpec, cfg: VRLConfig) -> bool:
+    """True when the BVR bias variate is active.  ``bvr_beta == 0`` turns
+    the whole B machinery off at trace time, so the compiled program (and
+    trajectory) is bitwise the underlying VRL-SGD."""
+    return spec.use_bias and bool(cfg.bvr_beta)
 
 
 def hier_config(cfg: VRLConfig) -> HierConfig:
@@ -179,9 +240,15 @@ def should_sync(spec: AlgoSpec, cfg: VRLConfig, step: jax.Array,
                 last_sync: jax.Array) -> jax.Array:
     """True when ``step`` (post-increment) completes a communication period.
 
+    With a ``CommSchedule`` the period is the schedule's for the round
+    starting at ``last_sync`` (stage boundaries are compile-time constants,
+    so this stays one jit); otherwise the constant ``comm_period``.
     VRL-SGD-W (Remark 5.3): with ``warmup`` the first period runs k=1.
     """
-    if spec.warmup_aware:
+    sched = comm_schedule(cfg)
+    if sched is not None:
+        k = sched.period_starting_at(last_sync)
+    elif spec.warmup_aware:
         k = jnp.where(cfg.warmup & (last_sync == 0) & (step <= 1),
                       1, cfg.comm_period)
     else:
@@ -215,9 +282,11 @@ def ref_init(spec: AlgoSpec, cfg: VRLConfig, params: Any,
     inner = make_inner(cfg).init(stacked)
     center = (jax.tree.map(lambda x: x[0].astype(jnp.float32), stacked)
               if spec.has_center else None)
+    bias = (jax.tree.map(lambda x: jnp.zeros_like(x, dtype=delta_dt),
+                         stacked) if use_bias(spec, cfg) else None)
     return WorkerState(params=stacked, delta=delta, inner=inner,
                        center=center, step=jnp.zeros((), jnp.int32),
-                       last_sync=jnp.zeros((), jnp.int32))
+                       last_sync=jnp.zeros((), jnp.int32), bias=bias)
 
 
 def corrected_grads(state: WorkerState, grads: Any) -> Any:
@@ -239,6 +308,8 @@ def ref_local_step(spec: AlgoSpec, cfg: VRLConfig, state: WorkerState,
         return state._replace(params=new_params, inner=new_inner,
                               step=state.step + 1, last_sync=state.step + 1)
     v = corrected_grads(state, grads) if spec.use_delta else grads
+    if use_bias(spec, cfg):
+        v = jax.tree.map(lambda g, b: g - b.astype(g.dtype), v, state.bias)
     new_params, new_inner = opt.update(state.params, v, state.inner)
     return state._replace(params=new_params, inner=new_inner,
                           step=state.step + 1)
@@ -274,17 +345,29 @@ def ref_sync(spec: AlgoSpec, cfg: VRLConfig, state: WorkerState
     if spec.sync == "average":
         return state._replace(params=new_params, last_sync=state.step)
 
-    # "vrl": Δ_i ← Δ_i + (x̂ − x_i)/(k_eff γ)  (eq. 4)
+    # "vrl"/"bvr": Δ_i ← Δ_i + u_i, u_i = (x̂ − x_i)/(k_eff γ)  (eq. 4)
     k_eff = jnp.maximum(state.step - state.last_sync, 1).astype(jnp.float32)
 
+    def drift(x, xb):
+        return ((xb.astype(jnp.float32) - x.astype(jnp.float32))
+                / (k_eff * cfg.learning_rate))
+
     def upd_delta(d, x, xb):
-        return (d.astype(jnp.float32)
-                + (xb.astype(jnp.float32) - x.astype(jnp.float32))
-                / (k_eff * cfg.learning_rate)).astype(d.dtype)
+        return (d.astype(jnp.float32) + drift(x, xb)).astype(d.dtype)
 
     new_delta = jax.tree.map(upd_delta, state.delta, state.params, xbar)
+    new_bias = state.bias
+    if spec.sync == "bvr" and use_bias(spec, cfg):
+        # B_i ← (1−β)·B_i + β·u_i — the bias-variate EMA of realized drift
+        beta = cfg.bvr_beta
+
+        def upd_bias(b, x, xb):
+            return ((1.0 - beta) * b.astype(jnp.float32)
+                    + beta * drift(x, xb)).astype(b.dtype)
+
+        new_bias = jax.tree.map(upd_bias, state.bias, state.params, xbar)
     return state._replace(params=new_params, delta=new_delta,
-                          last_sync=state.step)
+                          bias=new_bias, last_sync=state.step)
 
 
 def ref_train_step(spec: AlgoSpec, cfg: VRLConfig, state: WorkerState,
@@ -396,9 +479,11 @@ class FlatWorkerState(NamedTuple):
     """Worker-stacked algorithm state as contiguous flat buffers.
 
     ``params``/``delta``/moments: (W, R, C); ``center``: (R, C) fp32
-    (EASGD only); Δ is () for algorithms that never use it.  The unravel
-    spec (``flat.FlatSpec``) lives on the Engine, not in the state — it is
-    static layout, checkpointed as metadata (``checkpoint.save_flat_state``).
+    (EASGD only); Δ is () for algorithms that never use it, as is ``bias``
+    (BVR-L-SGD's (W, R, C) variate B) for every other algorithm.  The
+    unravel spec (``flat.FlatSpec``) lives on the Engine, not in the state
+    — it is static layout, checkpointed as metadata
+    (``checkpoint.save_flat_state``).
     """
 
     params: jax.Array
@@ -407,6 +492,7 @@ class FlatWorkerState(NamedTuple):
     center: Any
     step: jax.Array
     last_sync: jax.Array
+    bias: Any = ()
 
 
 class HierFlatState(NamedTuple):
@@ -450,6 +536,52 @@ class Engine(NamedTuple):
     round_step_flat: Any = None  # (state, gk_buf) -> state: round over a
                                  # pre-flattened (k, W/grid, R, C) buffer
     backend: str = "fused"      # resolved executor: "fused" | "xla"
+
+
+class RoundCache:
+    """Per-k cache of compiled round executables.
+
+    A stagewise ``CommSchedule`` changes the round length k between stages.
+    Each distinct k is a distinct input shape, so it is its own compilation
+    of ``round_step`` — this cache keys one jitted executable per k (state
+    donated), so a stagewise run compiles at most ``len(stages)`` round
+    executables and every later round of the same k reuses its executable
+    (asserted in ``tests/test_round_scan.py``).
+
+    Works over any round callable whose extra operands carry k on their
+    leading axis: ``Engine.round_step`` / ``round_step_flat`` (grads
+    stacks) and ``StepBundle.round_step`` (token/label stacks).
+
+    ``compiles`` counts actual traces (incremented at trace time), so a
+    retrace of an existing k — which would break the "one executable per
+    stage" contract — is visible too.
+    """
+
+    def __init__(self, round_step: Callable, *, donate: bool = True):
+        self._round = round_step
+        self._donate = (0,) if donate else ()
+        self._jits: dict = {}
+        self.compiles = 0
+
+    @staticmethod
+    def round_k(*stacks) -> int:
+        return int(jax.tree.leaves(stacks[0])[0].shape[0])
+
+    def __call__(self, state, *stacks):
+        k = self.round_k(*stacks)
+        fn = self._jits.get(k)
+        if fn is None:
+            def traced(s, *rest):
+                self.compiles += 1      # runs at trace time only
+                return self._round(s, *rest)
+
+            fn = jax.jit(traced, donate_argnums=self._donate)
+            self._jits[k] = fn
+        return fn(state, *stacks)
+
+    @property
+    def cached_ks(self) -> Tuple[int, ...]:
+        return tuple(sorted(self._jits))
 
 
 # Adam moment/bias-correction bases.  Must equal optimizers.adam's defaults
@@ -571,10 +703,13 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
         return s / total
 
     # ------------------------------------------------------------- init
+    bias_on = use_bias(algo, cfg)
+
     def init(params: Any, num_workers: int) -> FlatWorkerState:
         flat1 = flat.flatten_tree(fspec, params)
         stacked = jnp.broadcast_to(flat1, (num_workers, *flat1.shape)).copy()
         delta = (jnp.zeros(stacked.shape, delta_dt) if algo.use_delta else ())
+        bias = jnp.zeros(stacked.shape, delta_dt) if bias_on else ()
         if kind == "sgd":
             inner = ()
         elif kind == "momentum":
@@ -586,7 +721,8 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
         return FlatWorkerState(params=stacked, delta=delta, inner=inner,
                                center=center,
                                step=jnp.zeros((), jnp.int32),
-                               last_sync=jnp.zeros((), jnp.int32))
+                               last_sync=jnp.zeros((), jnp.int32),
+                               bias=bias)
 
     # ------------------------------------------------- core step functions
     # These see LOCAL shards (W_local, R, C) when shard_mapped.
@@ -594,14 +730,16 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
         if algo.grad_all_reduce:
             g = jnp.broadcast_to(_wmean(g)[None], g.shape)
         d = state.delta if algo.use_delta else None
+        b = state.bias if bias_on else None
         if kind == "sgd":
-            new_p = ops.fused_local_sgd(state.params, g, d, lr=lr, wd=wd,
-                                        block=block, interpret=interpret)
+            new_p = ops.fused_local_sgd(state.params, g, d, b=b, lr=lr,
+                                        wd=wd, block=block,
+                                        interpret=interpret)
             new_inner = state.inner
         elif kind == "momentum":
             new_p, new_m = ops.fused_local_momentum(
-                state.params, g, d, state.inner, lr=lr, beta=beta, wd=wd,
-                block=block, interpret=interpret)
+                state.params, g, d, state.inner, b=b, lr=lr, beta=beta,
+                wd=wd, block=block, interpret=interpret)
             new_inner = new_m
         else:
             count = state.inner.count + 1
@@ -610,7 +748,7 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
                              ).reshape(1, 2).astype(jnp.float32)
             new_p, new_mu, new_nu = ops.fused_local_adam(
                 state.params, g, d, state.inner.mu, state.inner.nu, scal,
-                lr=lr, b1=_ADAM_B1, b2=_ADAM_B2, wd=wd, block=block,
+                b=b, lr=lr, b1=_ADAM_B1, b2=_ADAM_B2, wd=wd, block=block,
                 interpret=interpret)
             new_inner = AdamState(new_mu, new_nu, count)
         out = state._replace(params=new_p, inner=new_inner,
@@ -636,10 +774,17 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
             new_p = jnp.broadcast_to(xbar[None], state.params.shape
                                      ).astype(state.params.dtype)
             return state._replace(params=new_p, last_sync=state.step)
-        # "vrl": fused Δ update + parameter broadcast, one pass
+        # "vrl"/"bvr": fused Δ (+ B) update + parameter broadcast, one pass
         k_eff = jnp.maximum(state.step - state.last_sync, 1
                             ).astype(jnp.float32)
         scal = (k_eff * lr).reshape(1, 1).astype(jnp.float32)
+        if algo.sync == "bvr" and bias_on:
+            new_p, new_d, new_b = ops.fused_sync_bvr(
+                state.params, xbar.astype(state.params.dtype), state.delta,
+                state.bias, scal, beta=cfg.bvr_beta, block=block,
+                interpret=interpret)
+            return state._replace(params=new_p, delta=new_d, bias=new_b,
+                                  last_sync=state.step)
         new_p, new_d = ops.fused_sync_vrl(
             state.params, xbar.astype(state.params.dtype), state.delta,
             scal, block=block, interpret=interpret)

@@ -1,0 +1,41 @@
+"""STL-SGD [Shen et al. 2020]: Local SGD with a stagewise communication
+period.
+
+The update structure IS Local SGD's (k local steps, periodic model
+averaging, no correction term) — what changes is the cadence: the
+communication period grows stagewise (doubling per stage in the paper), so
+the number of communication rounds over a horizon T is O(log T) stages x
+rounds_per_stage instead of T/k.  Described by ``SPEC`` (no correction,
+"average" sync, ``stagewise=True``) and executed by ``core/engine.py``;
+the schedule itself is a ``core.schedule.CommSchedule``
+(``VRLConfig.comm_schedule``; when unset, ``engine.comm_schedule`` defaults
+this algorithm to the doubling ramp 1 → ``comm_period``).
+
+With a constant schedule the trajectory is bitwise Local SGD — asserted in
+``tests/test_engine_parity.py``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.configs.base import VRLConfig
+from repro.core import engine
+from repro.core.types import WorkerState
+
+SPEC = engine.ALGO_SPECS["stl_sgd"]
+
+
+def init(cfg: VRLConfig, params: Any, num_workers: int) -> WorkerState:
+    return engine.ref_init(SPEC, cfg, params, num_workers)
+
+
+def local_step(cfg: VRLConfig, state: WorkerState, grads: Any) -> WorkerState:
+    return engine.ref_local_step(SPEC, cfg, state, grads)
+
+
+def sync(cfg: VRLConfig, state: WorkerState) -> WorkerState:
+    return engine.ref_sync(SPEC, cfg, state)
+
+
+def train_step(cfg: VRLConfig, state: WorkerState, grads: Any) -> WorkerState:
+    return engine.ref_train_step(SPEC, cfg, state, grads)

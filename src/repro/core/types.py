@@ -26,6 +26,7 @@ class WorkerState(NamedTuple):
     center: Any              # EASGD center variable x̃ (None elsewhere)
     step: jax.Array          # scalar int32: iterations completed
     last_sync: jax.Array     # scalar int32: step index of the last sync
+    bias: Any = None         # (W, ...) BVR-L-SGD bias variate B_i (else None)
 
 
 class HierState(NamedTuple):

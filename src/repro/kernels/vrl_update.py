@@ -124,31 +124,43 @@ def _f32(ref):
     return ref[...].astype(jnp.float32)
 
 
-def _fused_sgd_kernel(*refs, lr, wd, use_delta):
+def _correction(refs, start: int, use_delta: bool, use_bias: bool):
+    """v = g − [Δ] − [B] for the local kernels: the optional corrections sit
+    at ``refs[start:]`` in (Δ, B) order.  Returns (v, next ref index)."""
+    v = _f32(refs[1])
+    i = start
     if use_delta:
-        p_ref, g_ref, d_ref, o_ref = refs
-        v = _f32(g_ref) - _f32(d_ref)
-    else:
-        p_ref, g_ref, o_ref = refs
-        v = _f32(g_ref)
-    p = _f32(p_ref)
+        v = v - _f32(refs[i])
+        i += 1
+    if use_bias:
+        v = v - _f32(refs[i])
+        i += 1
+    return v, i
+
+
+def _fused_sgd_kernel(*refs, lr, wd, use_delta, use_bias):
+    v, _ = _correction(refs, 2, use_delta, use_bias)
+    p = _f32(refs[0])
     if wd:
         v = v + wd * p
+    o_ref = refs[-1]
     o_ref[...] = (p - lr * v).astype(o_ref.dtype)
 
 
 def fused_local_sgd(p, g, d=None, *, lr: float, wd: float = 0.0,
-                    block: int = 1024, interpret=None):
-    """p' = p − γ((g − Δ) + wd·p) on (W, R, C) buffers.  d=None ⇒ Δ ≡ 0."""
+                    block: int = 1024, interpret=None, b=None):
+    """p' = p − γ((g − Δ − B) + wd·p) on (W, R, C) buffers.
+
+    d=None ⇒ Δ ≡ 0; b (BVR-L-SGD's bias variate) =None ⇒ B ≡ 0."""
     if interpret is None:
         interpret = default_interpret()
     w, r, c = p.shape
-    use_delta = d is not None
-    ins = (p, g, d) if use_delta else (p, g)
+    use_delta, use_bias = d is not None, b is not None
+    ins = (p, g) + ((d,) if use_delta else ()) + ((b,) if use_bias else ())
     specs = _grid_specs(w, r, c, block, len(ins))
     return pl.pallas_call(
         functools.partial(_fused_sgd_kernel, lr=lr, wd=wd,
-                          use_delta=use_delta),
+                          use_delta=use_delta, use_bias=use_bias),
         grid=(w, r // block),
         in_specs=specs,
         out_specs=specs[0],
@@ -158,14 +170,11 @@ def fused_local_sgd(p, g, d=None, *, lr: float, wd: float = 0.0,
     )(*ins)
 
 
-def _fused_momentum_kernel(*refs, lr, beta, wd, nesterov, use_delta):
-    if use_delta:
-        p_ref, g_ref, d_ref, m_ref, po_ref, mo_ref = refs
-        v = _f32(g_ref) - _f32(d_ref)
-    else:
-        p_ref, g_ref, m_ref, po_ref, mo_ref = refs
-        v = _f32(g_ref)
-    p = _f32(p_ref)
+def _fused_momentum_kernel(*refs, lr, beta, wd, nesterov, use_delta,
+                           use_bias):
+    v, i = _correction(refs, 2, use_delta, use_bias)
+    m_ref, po_ref, mo_ref = refs[i], refs[-2], refs[-1]
+    p = _f32(refs[0])
     if wd:
         v = v + wd * p
     m_new = beta * _f32(m_ref) + v
@@ -176,17 +185,19 @@ def _fused_momentum_kernel(*refs, lr, beta, wd, nesterov, use_delta):
 
 def fused_local_momentum(p, g, d, m, *, lr: float, beta: float,
                          wd: float = 0.0, nesterov: bool = False,
-                         block: int = 1024, interpret=None):
-    """Momentum inner step fused with the Δ correction; returns (p', m')."""
+                         block: int = 1024, interpret=None, b=None):
+    """Momentum inner step fused with the corrections; returns (p', m')."""
     if interpret is None:
         interpret = default_interpret()
     w, r, c = p.shape
-    use_delta = d is not None
-    ins = (p, g, d, m) if use_delta else (p, g, m)
+    use_delta, use_bias = d is not None, b is not None
+    ins = ((p, g) + ((d,) if use_delta else ())
+           + ((b,) if use_bias else ()) + (m,))
     specs = _grid_specs(w, r, c, block, len(ins))
     return pl.pallas_call(
         functools.partial(_fused_momentum_kernel, lr=lr, beta=beta, wd=wd,
-                          nesterov=nesterov, use_delta=use_delta),
+                          nesterov=nesterov, use_delta=use_delta,
+                          use_bias=use_bias),
         grid=(w, r // block),
         in_specs=specs,
         out_specs=[specs[0], specs[0]],
@@ -197,14 +208,11 @@ def fused_local_momentum(p, g, d, m, *, lr: float, beta: float,
     )(*ins)
 
 
-def _fused_adam_kernel(*refs, lr, b1, b2, eps, wd, use_delta):
-    if use_delta:
-        p_ref, g_ref, d_ref, mu_ref, nu_ref, s_ref, po, muo, nuo = refs
-        v = _f32(g_ref) - _f32(d_ref)
-    else:
-        p_ref, g_ref, mu_ref, nu_ref, s_ref, po, muo, nuo = refs
-        v = _f32(g_ref)
-    p = _f32(p_ref)
+def _fused_adam_kernel(*refs, lr, b1, b2, eps, wd, use_delta, use_bias):
+    v, i = _correction(refs, 2, use_delta, use_bias)
+    mu_ref, nu_ref, s_ref = refs[i], refs[i + 1], refs[i + 2]
+    po, muo, nuo = refs[-3], refs[-2], refs[-1]
+    p = _f32(refs[0])
     c1 = s_ref[0, 0]    # 1 − b1^t  (dynamic: depends on the step count)
     c2 = s_ref[0, 1]    # 1 − b2^t
     mu = b1 * _f32(mu_ref) + (1.0 - b1) * v
@@ -219,8 +227,8 @@ def _fused_adam_kernel(*refs, lr, b1, b2, eps, wd, use_delta):
 
 def fused_local_adam(p, g, d, mu, nu, scal, *, lr: float, b1: float = 0.9,
                      b2: float = 0.999, eps: float = 1e-8, wd: float = 0.0,
-                     block: int = 1024, interpret=None):
-    """Adam inner step fused with the Δ correction.
+                     block: int = 1024, interpret=None, b=None):
+    """Adam inner step fused with the corrections.
 
     ``scal``: (1, 2) fp32 = [1 − b1^t, 1 − b2^t] (bias-correction terms are
     traced values, so they enter as data, not as static compile-time args).
@@ -229,12 +237,13 @@ def fused_local_adam(p, g, d, mu, nu, scal, *, lr: float, b1: float = 0.9,
     if interpret is None:
         interpret = default_interpret()
     w, r, c = p.shape
-    use_delta = d is not None
-    ins = (p, g, d, mu, nu) if use_delta else (p, g, mu, nu)
+    use_delta, use_bias = d is not None, b is not None
+    ins = ((p, g) + ((d,) if use_delta else ())
+           + ((b,) if use_bias else ()) + (mu, nu))
     specs = _grid_specs(w, r, c, block, len(ins)) + [_scal_spec(2)]
     return pl.pallas_call(
         functools.partial(_fused_adam_kernel, lr=lr, b1=b1, b2=b2, eps=eps,
-                          wd=wd, use_delta=use_delta),
+                          wd=wd, use_delta=use_delta, use_bias=use_bias),
         grid=(w, r // block),
         in_specs=specs,
         out_specs=[specs[0], specs[0], specs[0]],
@@ -277,6 +286,47 @@ def fused_sync_vrl(p, xbar, d, scal, *, block: int = 1024, interpret=None):
         input_output_aliases={0: 0, 2: 1},
         interpret=interpret,
     )(p, xbar, d, scal)
+
+
+def _fused_sync_bvr_kernel(p_ref, xb_ref, d_ref, b_ref, s_ref, po_ref,
+                           do_ref, bo_ref, *, beta: float):
+    p = _f32(p_ref)
+    xb = _f32(xb_ref)[None]     # (block, C) broadcast over the worker dim
+    kg = s_ref[0, 0]            # k_eff · γ  (k_eff is traced)
+    u = (xb - p) / kg           # realized drift this round
+    do_ref[...] = (_f32(d_ref) + u).astype(do_ref.dtype)
+    bo_ref[...] = ((1.0 - beta) * _f32(b_ref) + beta * u
+                   ).astype(bo_ref.dtype)
+    po_ref[...] = jnp.broadcast_to(xb, po_ref.shape).astype(po_ref.dtype)
+
+
+def fused_sync_bvr(p, xbar, d, b, scal, *, beta: float, block: int = 1024,
+                   interpret=None):
+    """BVR-L-SGD sync: the VRL Δ update plus the bias-variate EMA, one pass.
+
+      u  = (x̂ − p)/(k_eff γ)        Δ' = Δ + u
+      B' = (1−β)·B + β·u            p' = x̂
+
+    Same operand contract as ``fused_sync_vrl`` with the extra (W, R, C)
+    bias buffer ``b``; β is static config.  Returns (p', Δ', B') with all
+    three state buffers donated.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    w, r, c = p.shape
+    s3 = _grid_specs(w, r, c, block, 3)
+    xb_spec = pl.BlockSpec((block, c), lambda wi, i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_fused_sync_bvr_kernel, beta=beta),
+        grid=(w, r // block),
+        in_specs=[s3[0], xb_spec, s3[1], s3[2], _scal_spec(1)],
+        out_specs=[s3[0], s3[0], s3[0]],
+        out_shape=[jax.ShapeDtypeStruct((w, r, c), p.dtype),
+                   jax.ShapeDtypeStruct((w, r, c), d.dtype),
+                   jax.ShapeDtypeStruct((w, r, c), b.dtype)],
+        input_output_aliases={0: 0, 2: 1, 3: 2},
+        interpret=interpret,
+    )(p, xbar, d, b, scal)
 
 
 def _easgd_worker_kernel(p_ref, c_ref, po_ref, *, a: float):

@@ -32,11 +32,23 @@ def _f32(x):
 
 
 # ================================================== flat (W, R, C) executors
+def _corrected(g, d, b):
+    """v = g − [Δ] − [B] (same association order as the Pallas kernels)."""
+    v = _f32(g)
+    if d is not None:
+        v = v - _f32(d)
+    if b is not None:
+        v = v - _f32(b)
+    return v
+
+
 def fused_local_sgd(p, g, d=None, *, lr: float, wd: float = 0.0,
-                    block: int = 0, interpret=None):
-    """p' = p − γ((g − Δ) + wd·p) on (W, R, C) buffers.  d=None ⇒ Δ ≡ 0."""
+                    block: int = 0, interpret=None, b=None):
+    """p' = p − γ((g − Δ − B) + wd·p) on (W, R, C) buffers.
+
+    d=None ⇒ Δ ≡ 0; b (BVR-L-SGD's bias variate) =None ⇒ B ≡ 0."""
     del block, interpret
-    v = _f32(g) if d is None else _f32(g) - _f32(d)
+    v = _corrected(g, d, b)
     p32 = _f32(p)
     if wd:
         v = v + wd * p32
@@ -45,10 +57,10 @@ def fused_local_sgd(p, g, d=None, *, lr: float, wd: float = 0.0,
 
 def fused_local_momentum(p, g, d, m, *, lr: float, beta: float,
                          wd: float = 0.0, nesterov: bool = False,
-                         block: int = 0, interpret=None):
-    """Momentum inner step fused with the Δ correction; returns (p', m')."""
+                         block: int = 0, interpret=None, b=None):
+    """Momentum inner step fused with the corrections; returns (p', m')."""
     del block, interpret
-    v = _f32(g) if d is None else _f32(g) - _f32(d)
+    v = _corrected(g, d, b)
     p32 = _f32(p)
     if wd:
         v = v + wd * p32
@@ -59,13 +71,13 @@ def fused_local_momentum(p, g, d, m, *, lr: float, beta: float,
 
 def fused_local_adam(p, g, d, mu, nu, scal, *, lr: float, b1: float = 0.9,
                      b2: float = 0.999, eps: float = 1e-8, wd: float = 0.0,
-                     block: int = 0, interpret=None):
-    """Adam inner step fused with the Δ correction; returns (p', mu', nu').
+                     block: int = 0, interpret=None, b=None):
+    """Adam inner step fused with the corrections; returns (p', mu', nu').
 
     ``scal``: (1, 2) fp32 = [1 − b1^t, 1 − b2^t] (traced bias corrections).
     """
     del block, interpret
-    v = _f32(g) if d is None else _f32(g) - _f32(d)
+    v = _corrected(g, d, b)
     p32 = _f32(p)
     c1 = scal[0, 0]
     c2 = scal[0, 1]
@@ -90,6 +102,25 @@ def fused_sync_vrl(p, xbar, d, scal, *, block: int = 0, interpret=None):
     new_d = (_f32(d) + (xb - _f32(p)) / kg).astype(d.dtype)
     new_p = jnp.broadcast_to(xb, p.shape).astype(p.dtype)
     return new_p, new_d
+
+
+def fused_sync_bvr(p, xbar, d, b, scal, *, beta: float, block: int = 0,
+                   interpret=None):
+    """BVR-L-SGD sync: the VRL Δ update plus the bias-variate EMA.
+
+      u = (x̂ − p)/(k_eff γ);  Δ' = Δ + u;  B' = (1−β)·B + β·u;  p' = x̂
+
+    Returns (p', Δ', B').  Math and operand contract identical to
+    ``vrl_update.fused_sync_bvr``.
+    """
+    del block, interpret
+    xb = _f32(xbar)[None]
+    kg = scal[0, 0]
+    u = (xb - _f32(p)) / kg
+    new_d = (_f32(d) + u).astype(d.dtype)
+    new_b = ((1.0 - beta) * _f32(b) + beta * u).astype(b.dtype)
+    new_p = jnp.broadcast_to(xb, p.shape).astype(p.dtype)
+    return new_p, new_d, new_b
 
 
 def fused_sync_easgd(p, xbar, center, *, a: float, na: float,

@@ -38,6 +38,7 @@ from repro import compat
 from repro.configs.base import HierConfig, InputShape, MeshConfig, VRLConfig
 from repro.configs import registry
 from repro.core import engine as engine_mod
+from repro.core import schedule as schedule_mod
 from repro.launch import roofline as rl
 from repro.launch.mesh import make_production_mesh
 from repro.models import transformer
@@ -177,8 +178,10 @@ def state_specs(cfg, mesh_cfg: MeshConfig, vrl_cfg: VRLConfig):
     else:
         inner = wspec
     center = pspec if vrl_cfg.algorithm == "easgd" else None
+    spec = engine_mod.get_spec(vrl_cfg.algorithm)
+    bias = wspec if engine_mod.use_bias(spec, vrl_cfg) else None
     return WorkerState(params=wspec, delta=wspec, inner=inner, center=center,
-                       step=P(), last_sync=P())
+                       step=P(), last_sync=P(), bias=bias)
 
 
 # ------------------------------------------------------------------- lower
@@ -236,6 +239,7 @@ def lower_one(arch_id: str, shape_id: str, *, multi_pod: bool,
               fn_kind: Optional[str] = None, verbose: bool = True,
               unrolled: bool = False, algorithm: str = "vrl_sgd",
               comm_period: int = 20, k1: int = 5, k2: int = 20,
+              comm_schedule: Optional[str] = None, round_k: int = 0,
               backend: str = "fused",
               mesh_override: Optional[dict] = None,
               cfg_override: Optional[dict] = None, tag: str = "",
@@ -274,9 +278,11 @@ def lower_one(arch_id: str, shape_id: str, *, multi_pod: bool,
         pods = sizes.get("pod", 1)
         hier = HierConfig(k1=k1, k2=k2,
                           grid=(pods, mesh_cfg.num_workers // pods))
+    sched = (schedule_mod.parse_schedule(comm_schedule, comm_period)
+             if comm_schedule else None)
     vrl_cfg = vrl_cfg or VRLConfig(
         algorithm=algorithm, comm_period=comm_period, hier=hier,
-        update_backend=backend,
+        comm_schedule=sched, update_backend=backend,
         delta_dtype="bfloat16" if (arch_id in registry._FSDP_ARCHS
                                    or os.environ.get("VRL_DELTA_BF16"))
         else "float32")
@@ -343,10 +349,12 @@ def lower_one(arch_id: str, shape_id: str, *, multi_pod: bool,
                 lowered = fn.lower(state_abs)
             elif fn_kind == "round":
                 # one scanned communication period: (k, W, ...) stacks,
-                # state donated — the artifacts show the no-copy round
+                # state donated — the artifacts show the no-copy round.
+                # ``round_k`` overrides the length (a stagewise schedule's
+                # per-stage round is the same executable at that stage's k)
                 hcfg = engine_mod.hier_config(vrl_cfg)
-                rk = (hcfg.k1 if algorithm == "hier_vrl_sgd"
-                      else vrl_cfg.comm_period)
+                rk = round_k or (hcfg.k1 if algorithm == "hier_vrl_sgd"
+                                 else vrl_cfg.comm_period)
                 stk = jax.ShapeDtypeStruct(
                     (rk, *ins["tokens"].shape), ins["tokens"].dtype)
                 slb = jax.ShapeDtypeStruct(
@@ -472,8 +480,7 @@ def main(argv=None) -> int:
     ap.add_argument("--unrolled", action="store_true",
                     help="unroll the layer scan (accurate roofline flops)")
     ap.add_argument("--algorithm", default="vrl_sgd",
-                    choices=["vrl_sgd", "local_sgd", "ssgd", "easgd",
-                             "hier_vrl_sgd"])
+                    choices=sorted(engine_mod.ALGO_SPECS))
     ap.add_argument("--backend", default="fused",
                     choices=["fused", "reference", "xla", "auto"],
                     help="update-math backend for the train lowerings "
@@ -484,6 +491,13 @@ def main(argv=None) -> int:
                     help="hier_vrl_sgd intra-pod period")
     ap.add_argument("--k2", type=int, default=20,
                     help="hier_vrl_sgd cross-pod period")
+    ap.add_argument("--comm-schedule", default=None,
+                    help="stagewise round schedule for the train lowerings "
+                         "(const|stagewise[:k0:rounds:k_max]|custom:kxr,..)")
+    ap.add_argument("--round-k", type=int, default=0,
+                    help="fn=round: round length to lower (a stagewise "
+                         "run compiles one such executable per stage k); "
+                         "0 = comm period")
     ap.add_argument("--worker-axes", default=None,
                     help="comma list overriding VRL worker mesh axes")
     ap.add_argument("--fsdp-axes", default=None)
@@ -534,6 +548,8 @@ def main(argv=None) -> int:
                             unrolled=args.unrolled or args.two_layer,
                             algorithm=args.algorithm,
                             backend=args.backend, k1=args.k1, k2=args.k2,
+                            comm_schedule=args.comm_schedule,
+                            round_k=args.round_k,
                             mesh_override=mesh_override or None,
                             cfg_override=cfg_override or None,
                             tag=args.tag or ("u2" if args.two_layer else ""),

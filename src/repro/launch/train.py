@@ -38,6 +38,7 @@ from repro import compat
 from repro.configs import registry
 from repro.configs.base import EngineConfig, HierConfig, VRLConfig
 from repro.core import engine as engine_mod
+from repro.core import schedule as schedule_mod
 from repro.data import lm_token_stream
 from repro.models import transformer as T
 from repro.train.loss import cross_entropy_lm
@@ -51,8 +52,16 @@ def main(argv=None) -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-runnable)")
     ap.add_argument("--algorithm", default="vrl_sgd",
-                    choices=["vrl_sgd", "local_sgd", "ssgd", "easgd",
-                             "hier_vrl_sgd"])
+                    choices=sorted(engine_mod.ALGO_SPECS))
+    ap.add_argument("--comm-schedule", default=None,
+                    help="stagewise round schedule: const | "
+                         "stagewise[:k0:rounds:k_max] | custom:1x4,2x4,8x2 "
+                         "(default: constant --k; stl_sgd defaults to the "
+                         "doubling ramp 1 -> --k).  Each distinct stage k "
+                         "compiles one round executable (RoundCache).")
+    ap.add_argument("--bvr-beta", type=float, default=0.5,
+                    help="bvr_l_sgd bias-variate EMA rate (0 = plain "
+                         "vrl_sgd)")
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "fused", "xla", "reference"],
                     help="update math: auto (Pallas where it compiles, "
@@ -104,11 +113,22 @@ def main(argv=None) -> int:
                           grid=(args.pods, args.workers // args.pods))
         print(f"hier: {hier.grid[0]} pods x {hier.grid[1]} workers, "
               f"k1={k1} (intra-pod), k2={k2} (cross-pod)")
+    sched_arg = (schedule_mod.parse_schedule(args.comm_schedule, args.k)
+                 if args.comm_schedule else None)
+    if hier is not None and sched_arg is not None:
+        raise SystemExit("--comm-schedule drives the flat algorithms; "
+                         "hier_vrl_sgd's cadence is --k1/--k2")
     vrl = VRLConfig(algorithm=args.algorithm, comm_period=args.k,
                     learning_rate=args.lr, warmup=args.warmup,
-                    update_backend=args.backend,
+                    update_backend=args.backend, bvr_beta=args.bvr_beta,
+                    comm_schedule=sched_arg,
                     engine=EngineConfig(block=args.block,
                                         round_scan=args.round), hier=hier)
+    sched = engine_mod.comm_schedule(vrl)    # explicit or the algo default
+    if sched is not None:
+        print(f"comm schedule: stages {sched.stages} (k repeats from the "
+              f"last stage; {len(sched.distinct_periods())} distinct round "
+              f"lengths)")
     mesh = None
     worker_axes = ("data",)
     if args.mesh_grid:
@@ -165,14 +185,20 @@ def main(argv=None) -> int:
         # scanned local steps + sync, state donated, losses buffered
         # device-side), tokens prefetched per round.  VRL-SGD-W's warmup
         # runs the first period as a 1-step round (compiled separately,
-        # once).  --log-every counts rounds here.
+        # once).  A CommSchedule sizes each round from its stage; the
+        # RoundCache keys one compiled executable per distinct k, so a
+        # stagewise run compiles at most len(stages) rounds.  --log-every
+        # counts rounds here.
         k_round = hier.k1 if hier else args.k
-        warm_first = (args.warmup
+        warm_first = (sched is None and args.warmup
                       and engine_mod.get_spec(args.algorithm).warmup_aware)
-        round_fn = jax.jit(bundle.round_step, donate_argnums=(0,))
+        round_fn = engine_mod.RoundCache(bundle.round_step)
         t = r = 0
         while t < args.steps:
-            rk = 1 if (warm_first and t == 0) else k_round
+            if sched is not None:
+                rk = sched.period_starting_at(t)
+            else:
+                rk = 1 if (warm_first and t == 0) else k_round
             if args.steps - t < rk:
                 # tail shorter than a round: finish per-step so the sync
                 # cadence matches the per-step driver exactly (no
@@ -217,7 +243,12 @@ def main(argv=None) -> int:
                       f"({(time.time()-t0)/(t+1):.2f}s/step)")
             if args.ckpt and (t + 1) % args.ckpt_every == 0:
                 checkpoint(t + 1)
-    print(f"done: {args.steps} steps in {time.time()-t0:.1f}s")
+    extra = ""
+    if args.round:
+        extra = (f", {round_fn.compiles} round executable"
+                 f"{'s' if round_fn.compiles != 1 else ''} "
+                 f"(k={list(round_fn.cached_ks)})")
+    print(f"done: {args.steps} steps in {time.time()-t0:.1f}s{extra}")
     return 0
 
 

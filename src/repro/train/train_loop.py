@@ -18,7 +18,12 @@ functions over worker-stacked state:
       Hierarchical: the round is one k1 period and the level-2 sync fires
       on its k2 cadence inside round_step (requires k2 % k1 == 0).
       Warmup (VRL-SGD-W): the caller sizes the first round k=1
-      (``launch/train.py`` does).
+      (``launch/train.py`` does).  Stagewise schedules
+      (``vrl_cfg.comm_schedule``): the caller sizes each round from the
+      schedule's stage and wraps round_step in ``engine.RoundCache`` so a
+      run compiles one executable per distinct k; per-step ``train_step``
+      reads the same schedule through ``engine.should_sync``, so the two
+      drivers sync at identical steps.
 
 Worker parallelism is a ``vmap`` over the leading worker axis; on the
 production mesh that axis is sharded over the worker mesh axes so local steps

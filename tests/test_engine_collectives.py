@@ -7,6 +7,13 @@ one compilation unit) still contains exactly one, on both the Pallas and
 xla executors.  This is the communication event the paper's
 O(T^{1/2}N^{3/2}) complexity counts, now visible in the compiled program.
 
+The per-algorithm sweep derives its list from the ``ALGO_SPECS`` registry
+(NOT a hard-coded name list), so every new spec is covered automatically —
+including the expected counts (S-SGD's all-reduce lives in its local step;
+its "sync" is a no-op).  A stagewise schedule additionally lowers the
+round at EVERY stage k and each must still show exactly one sync
+all-reduce.
+
 Runs in a subprocess because the 8-device placeholder env must be set
 before jax initializes (the test process already owns a 1-device jax).
 """
@@ -74,6 +81,45 @@ SCRIPT = textwrap.dedent("""
                           ).lower(state, gk).compile().as_text()
     out["round_all_reduce_xla"] = count_ar(hlo_round_x)
 
+    # every flat algorithm in the registry (derived, not hard-coded): the
+    # sync is exactly one flat all-reduce (none for sync="none" — S-SGD
+    # carries its all-reduce in the local step instead), locals otherwise
+    # communication-free.  New AlgoSpecs are covered automatically.
+    from repro.core.engine import ALGO_SPECS, flat_algorithms
+    per_alg = {}
+    for name in flat_algorithms():
+        spec = ALGO_SPECS[name]
+        c = dataclasses.replace(cfg, algorithm=name)
+        e = make_engine(c, template, mesh=mesh, worker_axes=("data",))
+        st = jax.tree.map(shard, e.init(p0, 8))
+        hlo_s = jax.jit(e.sync).lower(st).compile().as_text()
+        loc = lambda s, t: e.local_step(s, grads(e.params_tree(s), t))
+        hlo_l = jax.jit(loc).lower(st, jnp.float32(0)).compile().as_text()
+        per_alg[name] = {
+            "sync": count_ar(hlo_s),
+            "sync_expect": 0 if spec.sync == "none" else 1,
+            "local": count_ar(hlo_l),
+            "local_expect": 1 if spec.grad_all_reduce else 0,
+        }
+    out["per_alg"] = per_alg
+
+    # stagewise schedule: the compiled round still shows exactly ONE sync
+    # all-reduce at EVERY stage k
+    from repro.core.schedule import custom_stages
+    sch = custom_stages([(1, 1), (2, 1), (4, 1)])
+    c = dataclasses.replace(cfg, algorithm="stl_sgd", comm_schedule=sch)
+    e = make_engine(c, template, mesh=mesh, worker_axes=("data",))
+    st = jax.tree.map(shard, e.init(p0, 8))
+    stage_ar = {}
+    for k in sch.distinct_periods():
+        gk = jax.tree.map(
+            lambda x: jnp.stack([jnp.sin(3.0 * x + t) + 0.1 * x
+                                 for t in range(k)]), e.params_tree(st))
+        hlo_r = jax.jit(e.round_step, donate_argnums=(0,)
+                        ).lower(st, gk).compile().as_text()
+        stage_ar[str(k)] = count_ar(hlo_r)
+    out["stage_round_ar"] = stage_ar
+
     # numerics on the sharded mesh match the single-device reference
     step = jax.jit(lambda s, t: eng.train_step(
         s, grads(eng.params_tree(s), t)))
@@ -105,6 +151,12 @@ def test_fused_sync_is_one_flat_all_reduce():
     # sync collective per k steps, on both engine executors
     assert out["round_all_reduce"] == 1, out
     assert out["round_all_reduce_xla"] == 1, out
+    # every registry algorithm matches its spec-derived collective counts
+    for name, c in out["per_alg"].items():
+        assert c["sync"] == c["sync_expect"], (name, c)
+        assert c["local"] == c["local_expect"], (name, c)
+    # the stagewise round is one sync all-reduce at EVERY stage k
+    assert out["stage_round_ar"] == {"1": 1, "2": 1, "4": 1}, out
     # and the sharded trajectory matches the reference path (sum/N vs mean
     # rounding differs, so a slightly looser bound than the 1-device parity)
     assert out["mesh_vs_reference_err"] < 1e-5, out

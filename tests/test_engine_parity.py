@@ -1,11 +1,16 @@
 """Flat-buffer engine executors vs reference tree path: trajectory parity.
 
 Both engine executors (core/engine.py: "fused" Pallas and "xla" plain-jnp)
-must reproduce the reference executor exactly (fp32, atol 1e-5) for all
-four algorithms x all three inner optimizers over multiple sync periods,
-and the paper invariants must hold on the fused path.  Also covers the
-flat layout (core/flat.py): exact roundtrips, auto tiling, and checkpoint
-save/restore with the unravel spec.
+must reproduce the reference executor exactly (fp32, atol 1e-5) for every
+flat algorithm in the registry x all three inner optimizers over multiple
+sync periods, and the paper invariants must hold on the fused path.  The
+algorithm list derives from ``engine.flat_algorithms()`` so new AlgoSpecs
+are covered automatically (stl_sgd runs its default stagewise schedule
+through the matrix; bvr_l_sgd its bias variate).  Spec-reduction identities
+are bitwise: stl_sgd on a constant schedule IS local_sgd; bvr_l_sgd with
+the correction zeroed IS vrl_sgd.  Also covers the flat layout
+(core/flat.py): exact roundtrips, auto tiling, and checkpoint save/restore
+with the unravel spec.
 """
 import jax
 import jax.numpy as jnp
@@ -14,9 +19,11 @@ import pytest
 
 from repro import checkpoint as ckpt
 from repro.configs.base import EngineConfig, HierConfig, VRLConfig
-from repro.core import flat, get_algorithm, hierarchical as H, make_engine
+from repro.core import (flat, flat_algorithms, get_algorithm,
+                        hierarchical as H, make_engine)
+from repro.core.schedule import const_comm
 
-ALGORITHMS = ["vrl_sgd", "local_sgd", "ssgd", "easgd"]
+ALGORITHMS = list(flat_algorithms())    # registry-derived: new specs ride in
 INNER = ["sgd", "momentum", "adam"]
 W, K, STEPS = 4, 4, 13          # 13 steps at k=4 -> 3 completed sync periods
 
@@ -136,6 +143,69 @@ def test_fused_warmup_syncs_after_first_step():
     d = jnp.sum(sfus.delta, axis=0)
     assert float(jnp.max(jnp.abs(d))) < 1e-5
     assert float(jnp.max(jnp.abs(sfus.delta))) > 0.0
+
+
+# ------------------------------------------- variant-spec reductions (new)
+@pytest.mark.parametrize("backend", ["xla", "fused"])
+def test_stl_const_schedule_is_local_sgd_bitwise(backend):
+    """STL-SGD is Local SGD plus a stagewise cadence: on a CONSTANT
+    schedule the trajectory must be bitwise local_sgd (same kernels, same
+    sync rule, same round boundaries)."""
+    import dataclasses
+
+    cfg_stl = dataclasses.replace(_cfg("stl_sgd", "sgd", backend=backend),
+                                  comm_schedule=const_comm(K))
+    cfg_loc = _cfg("local_sgd", "sgd", backend=backend)
+    e1, e2 = make_engine(cfg_stl, TEMPLATE), make_engine(cfg_loc, TEMPLATE)
+    p0 = _params0()
+    s1, s2 = e1.init(p0, W), e2.init(p0, W)
+    st1 = jax.jit(lambda s, t: e1.train_step(s, _grads(e1.params_tree(s), t)))
+    st2 = jax.jit(lambda s, t: e2.train_step(s, _grads(e2.params_tree(s), t)))
+    for t in range(STEPS):
+        s1 = st1(s1, jnp.float32(t))
+        s2 = st2(s2, jnp.float32(t))
+    np.testing.assert_array_equal(np.asarray(s1.params),
+                                  np.asarray(s2.params))
+    assert int(s1.last_sync) == int(s2.last_sync) == 12
+
+
+@pytest.mark.parametrize("backend", ["xla", "fused"])
+def test_bvr_zero_correction_is_vrl_sgd_bitwise(backend):
+    """bvr_beta=0 turns the bias machinery off at trace time: the
+    bvr_l_sgd trajectory must be bitwise vrl_sgd (params AND Δ), and the
+    state must not even carry a B buffer."""
+    import dataclasses
+
+    cfg_bvr = dataclasses.replace(_cfg("bvr_l_sgd", "sgd", backend=backend),
+                                  bvr_beta=0.0)
+    cfg_vrl = _cfg("vrl_sgd", "sgd", backend=backend)
+    e1, e2 = make_engine(cfg_bvr, TEMPLATE), make_engine(cfg_vrl, TEMPLATE)
+    p0 = _params0()
+    s1, s2 = e1.init(p0, W), e2.init(p0, W)
+    assert s1.bias == ()                 # zeroed correction: no B buffer
+    st1 = jax.jit(lambda s, t: e1.train_step(s, _grads(e1.params_tree(s), t)))
+    st2 = jax.jit(lambda s, t: e2.train_step(s, _grads(e2.params_tree(s), t)))
+    for t in range(STEPS):
+        s1 = st1(s1, jnp.float32(t))
+        s2 = st2(s2, jnp.float32(t))
+    np.testing.assert_array_equal(np.asarray(s1.params),
+                                  np.asarray(s2.params))
+    np.testing.assert_array_equal(np.asarray(s1.delta),
+                                  np.asarray(s2.delta))
+
+
+@pytest.mark.parametrize("inner", INNER)
+def test_bvr_bias_matches_reference(inner):
+    """BVR's B variate: engine executors match the per-leaf reference, and
+    Σ_i B_i = 0 after syncs (same telescoping argument as Δ)."""
+    alg, eng, sref, sfus = _run_pair("bvr_l_sgd", inner)
+    bref = jax.tree.leaves(sref.bias)
+    bfus = jax.tree.leaves(flat.unflatten_stacked(eng.spec, sfus.bias))
+    assert float(max(jnp.max(jnp.abs(b)) for b in bref)) > 0.0
+    for a, b in zip(bref, bfus):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    total = float(jnp.max(jnp.abs(jnp.sum(sfus.bias, axis=0))))
+    assert total < 1e-5
 
 
 def test_train_loop_fused_backend_matches_reference():

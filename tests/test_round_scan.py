@@ -2,13 +2,19 @@
 
 ``Engine.round_step`` (k scan-fused local steps + the round-closing sync)
 must match k sequential ``local_step`` dispatches + ``sync`` exactly, on
-both engine executors, for all four flat algorithms and the hierarchical
-(k1, k2) cadence (whose oracle is the per-step ``train_step``).  The
-train-loop-level ``StepBundle.round_step`` must reproduce the per-step
-trajectory through a real LM forward/backward.  And the round jit must
-donate the flat state buffers — the compiled HLO carries an input/output
-alias for every state array, extending the kernels' per-call
-``input_output_aliases`` guarantee to the whole scanned round.
+both engine executors, for every flat algorithm in the registry and the
+hierarchical (k1, k2) cadence (whose oracle is the per-step
+``train_step``).  The train-loop-level ``StepBundle.round_step`` must
+reproduce the per-step trajectory through a real LM forward/backward.  And
+the round jit must donate the flat state buffers — the compiled HLO
+carries an input/output alias for every state array, extending the
+kernels' per-call ``input_output_aliases`` guarantee to the whole scanned
+round.
+
+Variable-k schedules: rounds sized by a stagewise ``CommSchedule`` must
+reproduce the per-step ``train_step`` oracle (which reads the same
+schedule through ``should_sync``), and a whole stagewise run compiles
+exactly ``len(stages)`` round executables through the ``RoundCache``.
 """
 import jax
 import jax.numpy as jnp
@@ -16,7 +22,8 @@ import numpy as np
 import pytest
 
 from repro.configs.base import HierConfig, VRLConfig
-from repro.core import make_engine
+from repro.core import RoundCache, flat_algorithms, make_engine
+from repro.core.schedule import custom_stages
 
 W, K = 4, 4
 
@@ -57,9 +64,10 @@ def _cfg(alg, backend, inner="sgd", k=K):
 
 
 @pytest.mark.parametrize("backend", ["xla", "fused"])
-@pytest.mark.parametrize("alg", ["vrl_sgd", "local_sgd", "ssgd", "easgd"])
+@pytest.mark.parametrize("alg", flat_algorithms())
 def test_round_matches_sequential_flat(alg, backend):
-    """round_step over k steps == k local_step calls + sync (2 rounds)."""
+    """round_step over k steps == k local_step calls + sync (2 rounds) —
+    for every flat algorithm in the registry."""
     cfg = _cfg(alg, backend)
     eng = make_engine(cfg, TEMPLATE)
     p0 = _params0()
@@ -74,9 +82,12 @@ def test_round_matches_sequential_flat(alg, backend):
         s_rnd = rstep(s_rnd, _stack(gs))
     np.testing.assert_allclose(np.asarray(s_seq.params),
                                np.asarray(s_rnd.params), atol=1e-6)
-    if alg == "vrl_sgd":
+    if alg in ("vrl_sgd", "bvr_l_sgd"):
         np.testing.assert_allclose(np.asarray(s_seq.delta),
                                    np.asarray(s_rnd.delta), atol=1e-6)
+    if alg == "bvr_l_sgd":
+        np.testing.assert_allclose(np.asarray(s_seq.bias),
+                                   np.asarray(s_rnd.bias), atol=1e-6)
     assert int(s_rnd.step) == 2 * K
     assert int(s_rnd.last_sync) == int(s_seq.last_sync)
 
@@ -195,3 +206,74 @@ def test_round_flat_matches_round_tree():
                                   np.asarray(s2.params))
     np.testing.assert_array_equal(np.asarray(s1.delta),
                                   np.asarray(s2.delta))
+
+
+# ------------------------------------------- variable-k stagewise rounds
+SCHED = custom_stages([(1, 2), (2, 2), (4, 2)])     # T = 14, 3 distinct ks
+
+
+def _scheduled_cfg(alg, backend):
+    import dataclasses
+
+    return dataclasses.replace(_cfg(alg, backend), comm_schedule=SCHED)
+
+
+@pytest.mark.parametrize("alg", ["stl_sgd", "bvr_l_sgd"])
+def test_stagewise_rounds_match_per_step_oracle(alg):
+    """Rounds sized by the stagewise schedule reproduce the per-step
+    train_step oracle (which reads the SAME schedule through should_sync):
+    identical params and identical sync steps across every stage."""
+    cfg = _scheduled_cfg(alg, "xla")
+    eng = make_engine(cfg, TEMPLATE)
+    p0 = _params0()
+    s_seq, s_rnd = eng.init(p0, W), eng.init(p0, W)
+    tstep = jax.jit(eng.train_step)
+    rcache = RoundCache(eng.round_step)
+    t_total = SCHED.total_steps()
+    gs = [_grads_t(p0, t) for t in range(t_total)]
+    for g in gs:
+        s_seq = tstep(s_seq, g)
+    t = 0
+    for k in SCHED.round_sizes(t_total):
+        s_rnd = rcache(s_rnd, _stack(gs[t:t + k]))
+        t += k
+    np.testing.assert_allclose(np.asarray(s_seq.params),
+                               np.asarray(s_rnd.params), atol=1e-6)
+    assert int(s_rnd.step) == int(s_seq.step) == t_total
+    assert int(s_rnd.last_sync) == int(s_seq.last_sync) == t_total
+
+
+def test_round_cache_compiles_one_executable_per_stage():
+    """A stagewise run compiles exactly len(stages) distinct round
+    executables — later rounds of the same k reuse theirs (the compiled-
+    round cache contract), including past the explicit stages."""
+    cfg = _scheduled_cfg("stl_sgd", "xla")
+    eng = make_engine(cfg, TEMPLATE)
+    p0 = _params0()
+    state = eng.init(p0, W)
+    rcache = RoundCache(eng.round_step)
+    t_total = SCHED.total_steps() + 2 * 4   # 2 extra rounds at the final k
+    t = 0
+    n_rounds = 0
+    for k in SCHED.round_sizes(t_total):
+        state = rcache(state, _stack([_grads_t(p0, t + i)
+                                      for i in range(k)]))
+        t += k
+        n_rounds += 1
+    assert n_rounds == 8                    # 2 + 2 + 2 stage rounds + 2 tail
+    assert rcache.compiles == len(SCHED.stages) == 3
+    assert rcache.cached_ks == tuple(SCHED.distinct_periods()) == (1, 2, 4)
+
+
+def test_round_cache_counts_retraces():
+    """The cache keys on the round length k: re-feeding an already-seen k
+    never retraces, and ``compiles`` counts trace events exactly."""
+    cfg = _cfg("vrl_sgd", "xla")
+    eng = make_engine(cfg, TEMPLATE)
+    p0 = _params0()
+    state = eng.init(p0, W)
+    rcache = RoundCache(eng.round_step)
+    for k in (2, 3, 2, 3, 2):
+        state = rcache(state, _stack([_grads_t(p0, i) for i in range(k)]))
+    assert rcache.compiles == 2
+    assert rcache.cached_ks == (2, 3)

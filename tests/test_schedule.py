@@ -48,3 +48,35 @@ def test_total_syncs_matches_complexity_shape():
     r2 = total_syncs(s, 4_000)
     # 4x the horizon -> ~2x the rounds (within 20%)
     assert 1.6 < r2 / r1 < 2.4, (r1, r2)
+
+
+# --------------------------------------- CommSchedule (deterministic part;
+# randomized properties live in tests/test_schedule_properties.py so a
+# missing hypothesis never skips this module)
+import pytest  # noqa: E402
+
+from repro.core.schedule import (  # noqa: E402
+    CommSchedule,
+    const_comm,
+    custom_stages,
+    parse_schedule,
+)
+
+
+def test_const_comm_is_single_stage():
+    sched = const_comm(7)
+    assert sched.round_sizes(22) == [7, 7, 7]
+    assert sched.period_starting_at(0) == sched.period_starting_at(700) == 7
+
+
+def test_parse_schedule_forms():
+    assert parse_schedule("const", 9).stages == ((9, 1),)
+    assert parse_schedule("const:5").stages == ((5, 1),)
+    assert (parse_schedule("stagewise:1:2:8", 20).stages
+            == ((1, 2), (2, 2), (4, 2), (8, 2)))
+    assert (parse_schedule("custom:1x2,4x3").stages
+            == custom_stages([(1, 2), (4, 3)]).stages)
+    with pytest.raises(ValueError, match="comm-schedule"):
+        parse_schedule("bogus", 4)
+    with pytest.raises(ValueError, match="at least one stage"):
+        CommSchedule(stages=())

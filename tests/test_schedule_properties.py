@@ -1,0 +1,77 @@
+"""Property-based tests (hypothesis) for the stagewise CommSchedule.
+
+Own module (the ``test_vrl_properties.py`` pattern) so the module-level
+``importorskip`` skips ONLY the randomized properties when hypothesis is
+absent — the deterministic schedule tests in ``test_schedule.py`` always
+run.
+"""
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.schedule import (  # noqa: E402
+    CommSchedule,
+    stagewise_doubling,
+    stagewise_total_steps,
+)
+
+stages_st = st.lists(
+    st.tuples(st.integers(1, 16), st.integers(1, 5)),
+    min_size=1, max_size=5).map(tuple)
+
+
+@settings(max_examples=50, deadline=None)
+@given(stages=stages_st)
+def test_comm_schedule_boundaries_monotone(stages):
+    """Sync steps are strictly increasing and every gap is a stage period."""
+    sched = CommSchedule(stages=stages)
+    t_total = sched.total_steps() + 3 * stages[-1][0]   # past the stages
+    steps = sched.sync_steps(t_total)
+    assert steps == sorted(set(steps))
+    prev = 0
+    for s in steps:
+        assert s - prev == sched.period_starting_at(prev)
+        prev = s
+
+
+@settings(max_examples=50, deadline=None)
+@given(stages=stages_st)
+def test_comm_schedule_round_sizes_sum_to_t(stages):
+    """Whole rounds over the schedule's own horizon T tile it exactly:
+    total local steps sum to T, with per-stage round counts as declared."""
+    sched = CommSchedule(stages=stages)
+    t_total = sched.total_steps()
+    sizes = sched.round_sizes(t_total)
+    assert sum(sizes) == t_total
+    # the round sequence is exactly the stage list, expanded
+    expect = [k for k, r in stages for _ in range(r)]
+    assert sizes == expect
+    assert len(sched.distinct_periods(t_total)) <= len(stages)
+
+
+@settings(max_examples=50, deadline=None)
+@given(stages=stages_st,
+       probe=st.lists(st.integers(0, 400), min_size=1, max_size=8))
+def test_comm_schedule_traced_matches_python(stages, probe):
+    """period_starting_at gives identical answers for python ints and
+    traced jax ints — the per-step executors and the round drivers must
+    agree on every boundary."""
+    sched = CommSchedule(stages=stages)
+    for t in probe:
+        assert (int(sched.period_starting_at(jnp.int32(t)))
+                == sched.period_starting_at(t))
+
+
+@settings(max_examples=30, deadline=None)
+@given(k0=st.integers(1, 8), rps=st.integers(1, 6), n=st.integers(1, 7))
+def test_stagewise_doubling_matches_closed_form(k0, rps, n):
+    """STL-SGD closed form: local steps after n full uncapped doubling
+    stages = rps·k0·(2^n − 1), and the periods double stage to stage."""
+    k_max = k0 * 2 ** (n - 1)           # exactly n uncapped stages
+    sched = stagewise_doubling(k0=k0, k_max=k_max, rounds_per_stage=rps)
+    assert len(sched.stages) == n
+    assert sched.total_steps() == stagewise_total_steps(k0, rps, n)
+    ks = sched.stage_ks
+    assert all(b == 2 * a for a, b in zip(ks, ks[1:]))

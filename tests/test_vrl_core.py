@@ -136,9 +136,14 @@ def test_easgd_center_pull():
     assert abs(float(state.center["x"][0])) < 1.0
 
 
-@pytest.mark.parametrize("alg_name", ["vrl_sgd", "local_sgd", "ssgd", "easgd"])
+from repro.core import flat_algorithms  # noqa: E402
+
+
+@pytest.mark.parametrize("alg_name", flat_algorithms())
 def test_identical_case_all_converge(alg_name):
-    """Paper Fig. 2: with identical worker objectives everyone converges."""
+    """Paper Fig. 2: with identical worker objectives everyone converges —
+    for every flat algorithm in the registry (derived, so new specs like
+    stl_sgd/bvr_l_sgd are covered automatically)."""
     alg, cfg, state = run(alg_name, k=8, steps=800, b=0.0)
     xhat = float(alg.average_model(state)["x"][0])
     assert abs(xhat) < 1e-3
