@@ -23,6 +23,16 @@ Three views:
       bytes at horizon T are rounds(T) · sync_bytes, and the doubling
       period makes rounds(T) grow as O(log T) stages x rounds_per_stage
       instead of T/k, so the curve flattens where constant-k stays linear.
+  (e) COMPRESSED bytes-vs-T: the two communication-complexity axes
+      composed — measured wire bytes/round (repro.comm: the actual
+      compressed representation of qwen2-0.5b's production flat buffer,
+      tile padding elided) x rounds(T) per (algorithm cadence, schedule,
+      compressor).  Rounds come from the cadence (S-SGD every step,
+      constant k, stagewise doubling), bytes/round from the compressor
+      (none / int8 / topk) — every cell is their product, which is exactly
+      why compression composes multiplicatively with every schedule.
+      Cheap (no dry-run shell-out; the flat layout is derived from
+      shapes), so CI runs it standalone: ``--view compress``.
 
 The measured views shell out to the dry-run driver because the 512-device
 placeholder env must be set before jax initializes.
@@ -107,12 +117,15 @@ def main() -> dict:
     # (d) stagewise bytes-vs-T: the measured sync bytes amortized over the
     # STL-SGD doubling schedule vs the constant-k cadence
     stagewise = stagewise_bytes_vs_t(sync_b)
+
+    # (e) compressed bytes-vs-T: wire bytes/round x rounds(T)
+    compressed = compressed_bytes_view()
     out.update(measured=dict(ssgd=ssgd_b, vrl_iter=vrl_iter, local=local_b,
                              sync=sync_b),
                hier=dict(cross_pod_iter=hier_cross_iter,
                          flat_cross_pod_iter=flat_cross_iter,
                          sync2=s2_b, flat_sync=flat_b, k1=K1, k2=K2),
-               rounds=rounds, stagewise=stagewise)
+               rounds=rounds, stagewise=stagewise, compressed=compressed)
     return out
 
 
@@ -145,5 +158,95 @@ def stagewise_bytes_vs_t(sync_bytes: float, k_max: int = K,
             "sync_bytes": sync_bytes, "curve": curve}
 
 
+def compressed_bytes_view(k_max: int = K, horizons=STAGE_T,
+                          out_json: str = "results/comm_compress.json"
+                          ) -> dict:
+    """View (e): measured wire bytes/round x rounds(T) per (algorithm
+    cadence, schedule, compressor).
+
+    Wire bytes are MEASURED on the production payload: the qwen2-0.5b flat
+    buffer on the single-pod mesh is built (shapes only — no allocation,
+    no dry-run shell-out) and ``repro.comm.compress`` produces the actual
+    wire representation of a same-shaped payload, counted by
+    ``rep_nbytes``.  Rounds(T) come from each cadence exactly as view (d)
+    counts them.
+    """
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.comm import compressors as cc
+    from repro.configs import registry
+    from repro.core import flat as flat_mod
+    from repro.models import transformer
+
+    mesh_cfg = registry.mesh_roles(ARCH, multi_pod=False)
+    cfg = registry.padded_arch(ARCH, mesh_cfg)
+    template = jax.eval_shape(functools.partial(
+        transformer.init_params, cfg, dtype=jnp.bfloat16),
+        jax.random.PRNGKey(0))
+    spec = flat_mod.make_spec(template)
+    item = jnp.dtype(spec.dtype).itemsize
+    raw = cc.raw_bytes(spec.rows, spec.lanes, item)
+    u = cc.used_rows(spec.size, spec.lanes)
+
+    # measured: actual wire representation of a same-shaped payload
+    payload = jnp.linspace(-1.0, 1.0, spec.padded,
+                           dtype=jnp.float32).reshape(spec.rows, spec.lanes)
+    per_round = {"none": raw}
+    for name in ("int8", "topk"):
+        comp = cc.parse_compressor(name)
+        rep = cc.compress(comp, payload, rows_used=u)
+        measured = cc.rep_nbytes(rep)
+        assert measured == cc.wire_bytes(comp, rows=spec.rows,
+                                         lanes=spec.lanes, size=spec.size,
+                                         itemsize=item), (name, measured)
+        per_round[name] = measured
+
+    sched = schedule_mod.stagewise_doubling(k0=1, k_max=k_max)
+    cadences = {
+        "ssgd/every_step": lambda t: t,
+        f"vrl_sgd/const_k{k_max}": lambda t: t // k_max,
+        "stl_sgd/stagewise_doubling": lambda t: len(sched.round_sizes(t)),
+    }
+    table = {}
+    for cad_name, rounds_fn in cadences.items():
+        for comp_name, b in per_round.items():
+            curve = {}
+            for t in horizons:
+                r = rounds_fn(t)
+                curve[t] = {"rounds": r, "bytes": r * b}
+            table[f"{cad_name}/{comp_name}"] = curve
+            t_last = horizons[-1]
+            csv(f"table1/compressed_bytes_vs_T/{cad_name}/{comp_name}",
+                0.0,
+                f"bytes_per_round={b:.3e};rounds_T{t_last}="
+                f"{rounds_fn(t_last)};bytes_T{t_last}="
+                f"{rounds_fn(t_last) * b:.3e}")
+    out = {"arch": ARCH, "payload": {
+        "rows": spec.rows, "lanes": spec.lanes, "size": spec.size,
+        "dtype": spec.dtype, "raw_bytes": raw,
+        "wire_bytes_per_round": per_round,
+        "reduction": {n: round(raw / b, 2) for n, b in per_round.items()},
+    }, "horizons": list(horizons), "table": table}
+    if out_json:
+        os.makedirs(os.path.dirname(out_json), exist_ok=True)
+        with open(out_json, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {os.path.abspath(out_json)}")
+    return out
+
+
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--view", default="all", choices=["all", "compress"],
+                    help="'compress' runs only view (e) — no dry-run "
+                         "shell-outs, CI-cheap")
+    args = ap.parse_args()
+    if args.view == "compress":
+        compressed_bytes_view()
+    else:
+        main()

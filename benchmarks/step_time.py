@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import csv, timeit
+from repro.comm import compressors as cc
 from repro.configs import registry
 from repro.configs.base import HierConfig, VRLConfig
 from repro.core import flat, get_algorithm, hierarchical, make_engine, \
@@ -302,13 +303,130 @@ def gate_rounds(rounds: dict, ratio: float) -> int:
     return 0
 
 
+# ------------------------------------------------- compressed-sync bench
+def bench_compressed(*, workers: int = 4, k: int = 8, dims=(256, 1024),
+                     iters: int = 3, out_path: str = "BENCH_engine.json",
+                     compressors=("none", "int8", "topk")) -> dict:
+    """Compressed rounds (repro.comm): measured bytes/round + round time.
+
+    For each compressor this runs real vrl_sgd rounds on the auto backend
+    (state donated, pre-flattened grads — the launch-driver contract) and
+    then MEASURES the sync wire bytes on the actual end-of-round payload:
+    ``repro.comm.compress`` builds the real wire representation arrays
+    (int8 values + per-row scales / fixed-k values + indices, tile-padding
+    rows elided) and ``rep_nbytes`` counts their bytes — no formulas.  The
+    raw baseline is the padded flat buffer the uncompressed all-reduce
+    carries.  Results land under "compressed" in BENCH_engine.json; the CI
+    gate (``gate_compressed``) holds the headline claim: >= 4x for int8
+    and >= 10x for topk at this config, and compressed rounds within a
+    bounded slowdown of the uncompressed round.
+    """
+    auto = resolve_backend("auto")
+    out = {"workers": workers, "k": k, "auto_backend": auto, "sizes": {}}
+    for dim in dims:
+        params = _mlp_template(jax.random.PRNGKey(0), dim)
+        n_params = sum(p.size for p in jax.tree.leaves(params))
+        grads = jax.tree.map(
+            lambda x: jnp.broadcast_to(jnp.sin(x), (workers, *x.shape)),
+            params)
+        scale = (1.0 + 0.01 * jnp.arange(k, dtype=jnp.float32))
+        grads_k = jax.tree.map(
+            lambda g: g[None] * scale.reshape((k,) + (1,) * g.ndim), grads)
+        row = {"n_params": int(n_params)}
+        base_us = None
+        for comp_name in compressors:
+            comp = cc.parse_compressor(comp_name)
+            cfg = VRLConfig(algorithm="vrl_sgd", comm_period=k,
+                            learning_rate=0.01, weight_decay=1e-4,
+                            update_backend="auto", compress=comp)
+            eng = make_engine(cfg, jax.eval_shape(lambda: params))
+            gk_buf = jax.jit(lambda g: jax.vmap(
+                lambda t: flat.flatten_stacked(eng.spec, t,
+                                               dtype=eng.spec.dtype)
+            )(g))(grads_k)
+            rstep = jax.jit(eng.round_step_flat, donate_argnums=(0,))
+            box = [eng.init(params, workers)]
+
+            def one_round():
+                box[0] = rstep(box[0], gk_buf)
+                return box[0]
+
+            us = timeit(one_round, iters=iters, warmup_iters=1)
+            es = eng.spec
+            item = jnp.dtype(es.dtype).itemsize
+            raw_b = cc.raw_bytes(es.rows, es.lanes, item)
+            spec_c = cc.resolve(comp)
+            if spec_c is None:
+                wire_b = raw_b
+            else:
+                # the real next-round payload: drift vs ref (+ residual)
+                st = box[0]
+                payload = (st.params.astype(jnp.float32)
+                           - st.comm.ref[None])
+                if spec_c.error_feedback:
+                    payload = payload + st.comm.resid
+                rep = cc.compress(spec_c, payload,
+                                  rows_used=cc.used_rows(es.size, es.lanes))
+                wire_b = cc.rep_nbytes(rep) // workers
+            entry = {"round_us": round(us, 1), "wire_bytes": int(wire_b),
+                     "raw_bytes": int(raw_b),
+                     "reduction": round(raw_b / wire_b, 2)}
+            if comp_name == "none":
+                base_us = us
+            elif base_us:
+                entry["over_none"] = round(us / base_us, 3)
+            row[comp_name] = entry
+            csv(f"engine/compressed/{comp_name}/d{dim}", us,
+                f"{n_params/1e6:.2f}M params x {workers} workers, k={k}; "
+                f"wire={wire_b} raw={raw_b} ({raw_b/wire_b:.1f}x)")
+        out["sizes"][str(dim)] = row
+    _merge_json(out_path, {"compressed": out})
+    return out
+
+
+BYTE_GATES = {"int8": 4.0, "topk": 10.0}
+
+
+def gate_compressed(res: dict, time_ratio: float) -> int:
+    """CI gate over bench_compressed: measured byte reduction must hold
+    the headline claim (int8 >= 4x, topk >= 10x) at every size, and each
+    compressed round must stay within ``time_ratio`` x the uncompressed
+    round.  Returns a process exit code."""
+    bad = []
+    for dim, row in res["sizes"].items():
+        for name, floor in BYTE_GATES.items():
+            if name not in row:
+                continue
+            if row[name]["reduction"] < floor:
+                bad.append(f"{name}/d{dim} bytes {row[name]['reduction']}x "
+                           f"< {floor}x")
+            over = row[name].get("over_none")
+            if time_ratio:
+                if over is None:
+                    # a missing 'none' baseline must fail the gate, not
+                    # silently skip the time check
+                    bad.append(f"{name}/d{dim} has no 'none' baseline — "
+                               f"time gate cannot run")
+                elif over > time_ratio:
+                    bad.append(f"{name}/d{dim} round {over}x > "
+                               f"{time_ratio}x uncompressed")
+    if bad:
+        print("COMPRESSED GATE FAILED: " + "; ".join(bad))
+        return 1
+    print(f"compressed gate OK: int8 >= {BYTE_GATES['int8']}x, topk >= "
+          f"{BYTE_GATES['topk']}x measured bytes; rounds within "
+          f"{time_ratio}x uncompressed")
+    return 0
+
+
 if __name__ == "__main__":
     import argparse
     import sys
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--bench", default="all",
-                    choices=["paper", "engine", "hier", "rounds", "all"])
+                    choices=["paper", "engine", "hier", "rounds",
+                             "compressed", "all"])
     ap.add_argument("--dims", default="256,1024",
                     help="comma list of model sizes (dim of the MLP bench)")
     ap.add_argument("--k", type=int, default=8,
@@ -320,9 +438,15 @@ if __name__ == "__main__":
     ap.add_argument("--gate-ratio", type=float, default=0.0,
                     help="bench_rounds: exit 1 if auto/reference round "
                          "time exceeds this at any size (0 = no gate)")
+    ap.add_argument("--gate-compressed", type=float, default=0.0,
+                    help="bench_compressed: gate the measured byte "
+                         "reductions (int8 >= 4x, topk >= 10x) and hold "
+                         "each compressed round within this ratio of the "
+                         "uncompressed round (0 = no gate)")
     args = ap.parse_args()
     dims = tuple(int(d) for d in args.dims.split(","))
 
+    code = 0
     if args.bench in ("paper", "all"):
         main()
     if args.bench in ("engine", "all"):
@@ -334,4 +458,9 @@ if __name__ == "__main__":
                               algs=tuple(a for a in args.algs.split(",")
                                          if a))
         if args.gate_ratio:
-            sys.exit(gate_rounds(rounds, args.gate_ratio))
+            code |= gate_rounds(rounds, args.gate_ratio)
+    if args.bench in ("compressed", "all"):
+        comp = bench_compressed(dims=dims, k=args.k, iters=args.iters)
+        if args.gate_compressed:
+            code |= gate_compressed(comp, args.gate_compressed)
+    sys.exit(code) if code else None

@@ -83,23 +83,54 @@ def load_meta(path: str) -> dict:
 # to restore into an engine whose layout disagrees (e.g. different lane
 # width, model revision, block auto-choice, or pod grid).
 
+def _carries_comm(state: Any) -> bool:
+    """True when the state carries compressed-sync buffers (a non-empty
+    ``comm`` field)."""
+    comm = getattr(state, "comm", ())
+    return len(jax.tree_util.tree_leaves(comm)) > 0
+
+
 def save_flat_state(path: str, state: Any, spec, meta: dict | None = None,
-                    grid=None) -> None:
+                    grid=None, compressors: dict | None = None) -> None:
     """Save a fused-engine state plus its flat.FlatSpec layout.
 
     ``grid``: the pod-major (P, D) worker grid for hierarchical states
     (``engine.Engine.grid``); omit for flat (W, R, C) states.
+    ``compressors``: per-level sync-compressor metadata
+    (``repro.comm.pair_meta``) — recorded (None for uncompressed) so a
+    restore into a differently-compressed engine fails loudly instead of
+    silently dropping or misreading the error-feedback residual buffers.
     """
+    if compressors is None and _carries_comm(state):
+        raise ValueError(
+            "state carries compressed-sync buffers (comm.resid/ref) but no "
+            "compressor metadata was given — pass compressors=repro.comm"
+            ".pair_meta(engine.compressors) so a restore can validate them")
     m = dict(meta or {})
     m["flat_spec"] = spec.meta()
+    m["compressors"] = compressors
     if grid is not None:
         m["worker_grid"] = [int(g) for g in grid]
     save(path, state, meta=m)
 
 
-def restore_flat_state(path: str, state_like: Any, spec, grid=None) -> Any:
+def restore_flat_state(path: str, state_like: Any, spec, grid=None,
+                       compressors: dict | None = None) -> Any:
     """Restore a fused-engine state, validating the recorded unravel spec
-    (and, for hierarchical states, the recorded (P, D) worker grid)."""
+    (and, for hierarchical states, the recorded (P, D) worker grid, and
+    the recorded per-level sync compressors).
+
+    A compressor mismatch is a hard error: the compressed-sync residuals
+    (and drift references) in the checkpoint only mean anything to an
+    engine running the SAME compressors — restoring them elsewhere would
+    silently drop the carried error feedback or corrupt the next sync.
+    """
+    if compressors is None and _carries_comm(state_like):
+        raise ValueError(
+            "restore target carries compressed-sync buffers (comm.resid/"
+            "ref) but no compressor metadata was given — pass compressors="
+            "repro.comm.pair_meta(engine.compressors) so the recorded "
+            "compressors can be validated")
     recorded = load_meta(path)["meta"]
     rec_spec = recorded.get("flat_spec")
     if rec_spec is not None and rec_spec != spec.meta():
@@ -107,6 +138,13 @@ def restore_flat_state(path: str, state_like: Any, spec, grid=None) -> Any:
             "checkpoint flat-buffer layout does not match the engine's "
             f"unravel spec:\n  checkpoint: {rec_spec}\n  engine:     "
             f"{spec.meta()}")
+    rec_comp = recorded.get("compressors")
+    if rec_comp != compressors:
+        raise ValueError(
+            "checkpoint sync compressors do not match the engine's — "
+            "refusing to restore (the error-feedback residuals would be "
+            f"dropped or misread):\n  checkpoint: {rec_comp}\n"
+            f"  engine:     {compressors}")
     rec_grid = recorded.get("worker_grid")
     if (rec_grid is not None and grid is not None
             and [int(g) for g in grid] != rec_grid):

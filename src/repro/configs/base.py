@@ -222,6 +222,15 @@ class VRLConfig:
     # two-level hierarchical periods/grid (required when algorithm ==
     # "hier_vrl_sgd"; ignored by the flat algorithms)
     hier: Optional[HierConfig] = None
+    # sync-payload compression (a ``repro.comm.CompressorSpec``; stored
+    # untyped to keep configs import-free).  ``compress`` drives the flat
+    # sync (and the hierarchical intra-pod sync1); ``compress2`` overrides
+    # the cross-pod sync2 so the slow DCI tier can compress harder, and
+    # falls back to ``compress`` when unset.  None / "none" / topk at
+    # rate 1 resolve to the uncompressed path, bitwise (resolution:
+    # ``repro.comm.compressors.resolve_pair``).
+    compress: Optional[object] = None
+    compress2: Optional[object] = None
 
 
 @dataclass(frozen=True)

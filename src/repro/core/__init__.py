@@ -27,4 +27,9 @@ from repro.core.schedule import (  # noqa: F401
     parse_schedule,
     stagewise_doubling,
 )
-from repro.core.types import HierState, WorkerState  # noqa: F401
+from repro.core.types import (  # noqa: F401
+    CommState,
+    HierCommState,
+    HierState,
+    WorkerState,
+)

@@ -97,9 +97,31 @@ feeds differently-sized stacks per stage: ``RoundCache`` keys one compiled
 round executable per distinct k, so a whole stagewise run compiles at most
 ``len(stages)`` rounds, and the sync math stays exact at any period because
 it uses the true elapsed k_eff.
+
+Compressed sync (bytes-per-round)
+---------------------------------
+
+``VRLConfig.compress`` / ``compress2`` (``repro.comm.CompressorSpec``:
+``none`` | ``int8`` per-row-scaled quantization | ``topk`` fixed-k
+sparsification, optional error feedback) compress the payload of every
+communication event: each worker transmits its DRIFT against a shared
+reference (the value every participant holds after the previous sync,
+carried in a ``CommState.ref`` buffer), the decompressed drifts are
+averaged by the SAME single flat all-reduce, and the compression error is
+carried per worker in a donated ``CommState.resid`` buffer (EF-SGD).
+S-SGD, whose communication is the per-step gradient all-reduce, compresses
+the gradient itself (ref ≡ 0).  The hierarchy compresses per level —
+``compress`` drives the intra-pod sync1, ``compress2`` the slow cross-pod
+sync2 (``HierCommState`` carries per-level ref/resid) — and ``none`` /
+``topk`` at rate 1 resolve to the ORIGINAL code path, bitwise, with no
+extra buffers.  Executors: Pallas ``kernels/vrl_update.fused_ef_*`` (one
+HBM pass builds payload → decompressed + residual), jnp twins in
+``kernels/xla_update``, and per-leaf ``repro.comm.compressors.ef_leaf`` on
+the reference path.
 """
 from __future__ import annotations
 
+import functools
 import math
 import warnings
 from typing import Any, Callable, NamedTuple, Optional, Tuple
@@ -109,10 +131,11 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.comm import compressors as comm_mod
 from repro.configs.base import HierConfig, VRLConfig
 from repro.core import flat
 from repro.core import schedule as schedule_mod
-from repro.core.types import HierState, WorkerState
+from repro.core.types import CommState, HierCommState, HierState, WorkerState
 from repro.kernels import vrl_update as vu
 from repro.kernels import xla_update as xu
 from repro.optim.optimizers import AdamState, make_inner
@@ -274,6 +297,35 @@ def average_model(state) -> Any:
     return jax.tree.map(lambda x: jnp.mean(x, axis=0), state.params)
 
 
+def _ref_payload(tree_x, ref, resid):
+    """Per-leaf compression payload: x − ref + resid in fp32 (``ref`` /
+    ``resid`` trees optional; ref leaves broadcast against the worker
+    axes)."""
+    def one(x, *rest):
+        p = x.astype(jnp.float32)
+        i = 0
+        if ref is not None:
+            p = p - rest[i]
+            i += 1
+        if resid is not None:
+            p = p + rest[i]
+        return p
+
+    extra = ([ref] if ref is not None else []) \
+        + ([resid] if resid is not None else [])
+    return jax.tree.map(one, tree_x, *extra)
+
+
+def _leaf_rt(comp, payload_tree, n_lead: int):
+    """Per-leaf EF round-trip over a payload tree → (dec tree, resid
+    tree), tracing ``ef_leaf`` once per leaf."""
+    outer = jax.tree.structure(payload_tree)
+    pairs = jax.tree.map(
+        lambda x: comm_mod.ef_leaf(comp, x, n_lead), payload_tree)
+    return jax.tree_util.tree_transpose(
+        outer, jax.tree.structure((0, 0)), pairs)
+
+
 def ref_init(spec: AlgoSpec, cfg: VRLConfig, params: Any,
              num_workers: int) -> WorkerState:
     stacked = _bcast(params, num_workers)
@@ -284,9 +336,21 @@ def ref_init(spec: AlgoSpec, cfg: VRLConfig, params: Any,
               if spec.has_center else None)
     bias = (jax.tree.map(lambda x: jnp.zeros_like(x, dtype=delta_dt),
                          stacked) if use_bias(spec, cfg) else None)
+    comp, _ = comm_mod.resolve_pair(cfg)
+    comm = ()
+    if comp is not None:
+        # residuals in fp32 so the EF invariant (resid + dec == payload)
+        # is exact; ref is the shared post-sync value (init: the broadcast
+        # params themselves) — () for S-SGD's gradient compression
+        resid = (jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
+                              stacked) if comp.error_feedback else ())
+        ref = (() if (spec.grad_all_reduce or spec.sync == "none")
+               else jax.tree.map(lambda x: x.astype(jnp.float32), params))
+        comm = CommState(resid=resid, ref=ref)
     return WorkerState(params=stacked, delta=delta, inner=inner,
                        center=center, step=jnp.zeros((), jnp.int32),
-                       last_sync=jnp.zeros((), jnp.int32), bias=bias)
+                       last_sync=jnp.zeros((), jnp.int32), bias=bias,
+                       comm=comm)
 
 
 def corrected_grads(state: WorkerState, grads: Any) -> Any:
@@ -300,13 +364,25 @@ def ref_local_step(spec: AlgoSpec, cfg: VRLConfig, state: WorkerState,
     opt = make_inner(cfg)
     if spec.grad_all_reduce:
         # S-SGD's "local" step IS a train step: that's the point of the paper.
-        gbar = jax.tree.map(lambda g: jnp.mean(g, axis=0, keepdims=True),
-                            grads)
+        comp, _ = comm_mod.resolve_pair(cfg)
+        new_comm = state.comm
+        if comp is not None:
+            # the gradient IS the communicated payload: compress it (ref≡0)
+            e = state.comm.resid if comp.error_feedback else None
+            dec, res = _leaf_rt(comp, _ref_payload(grads, None, e), 1)
+            gbar = jax.tree.map(
+                lambda d: jnp.mean(d, axis=0, keepdims=True), dec)
+            if comp.error_feedback:
+                new_comm = state.comm._replace(resid=res)
+        else:
+            gbar = jax.tree.map(lambda g: jnp.mean(g, axis=0, keepdims=True),
+                                grads)
         gbar = jax.tree.map(lambda g, x: jnp.broadcast_to(g, x.shape),
                             gbar, state.params)
         new_params, new_inner = opt.update(state.params, gbar, state.inner)
         return state._replace(params=new_params, inner=new_inner,
-                              step=state.step + 1, last_sync=state.step + 1)
+                              step=state.step + 1, last_sync=state.step + 1,
+                              comm=new_comm)
     v = corrected_grads(state, grads) if spec.use_delta else grads
     if use_bias(spec, cfg):
         v = jax.tree.map(lambda g, b: g - b.astype(g.dtype), v, state.bias)
@@ -320,6 +396,21 @@ def ref_sync(spec: AlgoSpec, cfg: VRLConfig, state: WorkerState
     if spec.sync == "none":
         return state._replace(last_sync=state.step)
 
+    # compressed sync: transmit per-worker drift against the shared ref,
+    # average the decompressed drifts (mean_i x_i = ref + mean_i(x_i − ref))
+    comp, _ = comm_mod.resolve_pair(cfg)
+    new_comm = state.comm
+    xbar = None
+    if comp is not None:
+        e = state.comm.resid if comp.error_feedback else None
+        payload = _ref_payload(state.params, state.comm.ref, e)
+        dec, res = _leaf_rt(comp, payload, 1)
+        ref_new = jax.tree.map(lambda r, d: r + jnp.mean(d, axis=0),
+                               state.comm.ref, dec)
+        xbar = jax.tree.map(lambda x: x[None], ref_new)
+        new_comm = CommState(resid=(res if comp.error_feedback else ()),
+                             ref=ref_new)
+
     if spec.sync == "elastic":
         # Zhang et al. parameterize elasticity as beta/N (beta = easgd_alpha).
         n = jax.tree.leaves(state.params)[0].shape[0]
@@ -329,21 +420,28 @@ def ref_sync(spec: AlgoSpec, cfg: VRLConfig, state: WorkerState
             return (x.astype(jnp.float32)
                     - a * (x.astype(jnp.float32) - c)).astype(x.dtype)
 
-        def upd_center(c, x):
-            xbar = jnp.mean(x.astype(jnp.float32), axis=0)
-            return (1.0 - n * a) * c + n * a * xbar
+        if xbar is None:
+            def upd_center(c, x):
+                xb = jnp.mean(x.astype(jnp.float32), axis=0)
+                return (1.0 - n * a) * c + n * a * xb
 
+            new_center = jax.tree.map(upd_center, state.center, state.params)
+        else:
+            new_center = jax.tree.map(
+                lambda c, xb: (1.0 - n * a) * c + n * a * xb[0],
+                state.center, xbar)
         new_params = jax.tree.map(upd_worker, state.params, state.center)
-        new_center = jax.tree.map(upd_center, state.center, state.params)
         return state._replace(params=new_params, center=new_center,
-                              last_sync=state.step)
+                              last_sync=state.step, comm=new_comm)
 
-    xbar = worker_mean(state.params)                    # the all-reduce
+    if xbar is None:
+        xbar = worker_mean(state.params)                # the all-reduce
     new_params = jax.tree.map(
         lambda x, xb: jnp.broadcast_to(xb, x.shape).astype(x.dtype),
         state.params, xbar)
     if spec.sync == "average":
-        return state._replace(params=new_params, last_sync=state.step)
+        return state._replace(params=new_params, last_sync=state.step,
+                              comm=new_comm)
 
     # "vrl"/"bvr": Δ_i ← Δ_i + u_i, u_i = (x̂ − x_i)/(k_eff γ)  (eq. 4)
     k_eff = jnp.maximum(state.step - state.last_sync, 1).astype(jnp.float32)
@@ -367,7 +465,8 @@ def ref_sync(spec: AlgoSpec, cfg: VRLConfig, state: WorkerState
 
         new_bias = jax.tree.map(upd_bias, state.bias, state.params, xbar)
     return state._replace(params=new_params, delta=new_delta,
-                          bias=new_bias, last_sync=state.step)
+                          bias=new_bias, last_sync=state.step,
+                          comm=new_comm)
 
 
 def ref_train_step(spec: AlgoSpec, cfg: VRLConfig, state: WorkerState,
@@ -394,11 +493,27 @@ def ref_hier_init(cfg: VRLConfig, params: Any,
     z = lambda x: jnp.zeros_like(x, dtype=dt)
     d2 = jax.tree.map(lambda x: jnp.zeros((p, 1, *x.shape[2:]), dt), stacked)
     inner = make_inner(cfg).init(stacked)
+    comp1, comp2 = comm_mod.resolve_pair(cfg)
+    comm = ()
+    if comp1 is not None or comp2 is not None:
+        f32z = lambda t: jax.tree.map(
+            lambda x: jnp.zeros_like(x, jnp.float32), t)
+        comm = HierCommState(
+            resid1=(f32z(stacked) if comp1 and comp1.error_feedback
+                    else ()),
+            ref1=(jax.tree.map(lambda x: jnp.broadcast_to(
+                x.astype(jnp.float32), (p, 1, *x.shape)).copy(), params)
+                if comp1 else ()),
+            resid2=(jax.tree.map(lambda x: jnp.zeros(
+                (p, 1, *x.shape), jnp.float32), params)
+                if comp2 and comp2.error_feedback else ()),
+            ref2=(jax.tree.map(lambda x: x.astype(jnp.float32), params)
+                  if comp2 else ()))
     return HierState(params=stacked, delta1=jax.tree.map(z, stacked),
                      delta2=d2, inner=inner,
                      step=jnp.zeros((), jnp.int32),
                      last_sync1=jnp.zeros((), jnp.int32),
-                     last_sync2=jnp.zeros((), jnp.int32))
+                     last_sync2=jnp.zeros((), jnp.int32), comm=comm)
 
 
 def ref_hier_local_step(cfg: VRLConfig, state: HierState,
@@ -416,8 +531,20 @@ def ref_hier_local_step(cfg: VRLConfig, state: HierState,
 def ref_hier_sync1(cfg: VRLConfig, state: HierState) -> HierState:
     """Intra-pod sync: mean over axis 1 (the pod-internal worker axis)."""
     k_eff = jnp.maximum(state.step - state.last_sync1, 1).astype(jnp.float32)
-    xbar = jax.tree.map(lambda x: jnp.mean(x, axis=1, keepdims=True),
-                        state.params)
+    comp1, _ = comm_mod.resolve_pair(cfg)
+    new_comm = state.comm
+    if comp1 is not None:
+        e = state.comm.resid1 if comp1.error_feedback else None
+        payload = _ref_payload(state.params, state.comm.ref1, e)
+        dec, res = _leaf_rt(comp1, payload, 2)
+        xbar = jax.tree.map(
+            lambda r, d: r + jnp.mean(d, axis=1, keepdims=True),
+            state.comm.ref1, dec)
+        new_comm = state.comm._replace(
+            ref1=xbar, resid1=(res if comp1.error_feedback else ()))
+    else:
+        xbar = jax.tree.map(lambda x: jnp.mean(x, axis=1, keepdims=True),
+                            state.params)
 
     def upd(d, x, xb):
         return (d.astype(jnp.float32)
@@ -429,17 +556,35 @@ def ref_hier_sync1(cfg: VRLConfig, state: HierState) -> HierState:
         lambda x, xb: jnp.broadcast_to(xb, x.shape).astype(x.dtype),
         state.params, xbar)
     return state._replace(params=new_p, delta1=new_d1,
-                          last_sync1=state.step)
+                          last_sync1=state.step, comm=new_comm)
 
 
 def ref_hier_sync2(cfg: VRLConfig, state: HierState) -> HierState:
     """Cross-pod sync. Assumes a level-1 sync at the same step (so every
     worker already holds its pod average)."""
     k_eff = jnp.maximum(state.step - state.last_sync2, 1).astype(jnp.float32)
+    comp1, comp2 = comm_mod.resolve_pair(cfg)
+    new_comm = state.comm
     pod_avg = jax.tree.map(lambda x: jnp.mean(x, axis=1, keepdims=True),
                            state.params)
-    glob = jax.tree.map(lambda x: jnp.mean(x, axis=(0, 1), keepdims=True),
-                        state.params)
+    if comp2 is not None:
+        e = state.comm.resid2 if comp2.error_feedback else None
+        payload = _ref_payload(pod_avg, state.comm.ref2, e)
+        dec, res = _leaf_rt(comp2, payload, 2)
+        glob_sm = jax.tree.map(lambda r, d: r + jnp.mean(d, axis=(0, 1)),
+                               state.comm.ref2, dec)
+        glob = jax.tree.map(lambda x: x[None, None], glob_sm)
+        new_comm = new_comm._replace(
+            ref2=glob_sm, resid2=(res if comp2.error_feedback else ()))
+    else:
+        glob = jax.tree.map(lambda x: jnp.mean(x, axis=(0, 1),
+                                               keepdims=True), state.params)
+    if comp1 is not None:
+        # level-2 just moved every worker to x̂: re-anchor the level-1
+        # drift reference so the next intra-pod payload is small again
+        new_comm = new_comm._replace(ref1=jax.tree.map(
+            lambda g, r1: jnp.broadcast_to(g.astype(jnp.float32), r1.shape),
+            glob, new_comm.ref1))
 
     def upd(d2, pa, g):
         return (d2.astype(jnp.float32)
@@ -451,7 +596,7 @@ def ref_hier_sync2(cfg: VRLConfig, state: HierState) -> HierState:
         lambda x, g: jnp.broadcast_to(g, x.shape).astype(x.dtype),
         state.params, glob)
     return state._replace(params=new_p, delta2=new_d2,
-                          last_sync2=state.step)
+                          last_sync2=state.step, comm=new_comm)
 
 
 def ref_hier_train_step(cfg: VRLConfig, state: HierState, grads: Any, *,
@@ -493,6 +638,8 @@ class FlatWorkerState(NamedTuple):
     step: jax.Array
     last_sync: jax.Array
     bias: Any = ()
+    comm: Any = ()              # compressed-sync CommState: resid (W, R, C)
+                                # fp32, ref (R, C) fp32 — () uncompressed
 
 
 class HierFlatState(NamedTuple):
@@ -512,6 +659,9 @@ class HierFlatState(NamedTuple):
     step: jax.Array
     last_sync1: jax.Array
     last_sync2: jax.Array
+    comm: Any = ()              # per-level HierCommState: resid1
+                                # (P, D, R, C), ref1 (P, 1, R, C), resid2
+                                # (P, 1, R, C), ref2 (R, C) — () uncompressed
 
 
 class Engine(NamedTuple):
@@ -536,6 +686,8 @@ class Engine(NamedTuple):
     round_step_flat: Any = None  # (state, gk_buf) -> state: round over a
                                  # pre-flattened (k, W/grid, R, C) buffer
     backend: str = "fused"      # resolved executor: "fused" | "xla"
+    compressors: Any = (None, None)  # resolved (level-1, level-2)
+                                     # CompressorSpecs (None = identity)
 
 
 class RoundCache:
@@ -584,6 +736,19 @@ class RoundCache:
         return tuple(sorted(self._jits))
 
 
+def _ef_op(ops, comp: comm_mod.CompressorSpec, lanes: int, *, grid: bool,
+           block: int, interpret):
+    """Bind the executor module's EF round-trip for one compressor:
+    (payload_buf, ref, resid) -> (decompressed fp32, resid')."""
+    name = {"int8": "fused_ef_int8", "topk": "fused_ef_topk"}[comp.name]
+    if grid:
+        name += "_grid"
+    kwargs = dict(block=block, interpret=interpret)
+    if comp.name == "topk":
+        kwargs["k"] = comm_mod.topk_k(comp, lanes)
+    return functools.partial(getattr(ops, name), **kwargs)
+
+
 # Adam moment/bias-correction bases.  Must equal optimizers.adam's defaults
 # (the reference executor) — the kernel gets these explicitly so the moment
 # update and the bias correction can never use different betas.
@@ -620,13 +785,25 @@ def _state_pspecs(state, axes) -> Any:
 def _hier_pspecs(state: HierFlatState, pod_axis, data_axis) -> HierFlatState:
     """PartitionSpecs for the pod-major state: (P, D, R, C) leaves shard
     (pod, data); the per-pod Δ2 shards only the pod axis (its intra-pod dim
-    is 1); scalars replicate."""
+    is 1); scalars replicate.  Compressed-sync buffers follow their level:
+    per-worker residuals shard like params, per-pod ref1/resid2 like Δ2,
+    the global ref2 replicates."""
     wspec = P(pod_axis, data_axis, None, None)
+    podspec = P(pod_axis, None, None, None)
     inner = jax.tree.map(
         lambda x: wspec if getattr(x, "ndim", 0) == 4 else P(), state.inner)
+    comm = state.comm
+    cspec = ()
+    if isinstance(comm, HierCommState):
+        have = lambda x, s: () if isinstance(x, tuple) else s
+        cspec = HierCommState(resid1=have(comm.resid1, wspec),
+                              ref1=have(comm.ref1, podspec),
+                              resid2=have(comm.resid2, podspec),
+                              ref2=have(comm.ref2, P(None, None)))
     return HierFlatState(params=wspec, delta1=wspec,
                          delta2=P(pod_axis, None, None, None), inner=inner,
-                         step=P(), last_sync1=P(), last_sync2=P())
+                         step=P(), last_sync1=P(), last_sync2=P(),
+                         comm=cspec)
 
 
 def state_partition_specs(state, worker_axes,
@@ -676,6 +853,7 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
     kind, beta = _inner_kind(cfg)
     lr, wd = cfg.learning_rate, cfg.weight_decay
     delta_dt = jnp.dtype(cfg.delta_dtype)
+    comp, _comp2 = comm_mod.resolve_pair(cfg)
 
     if algo.sync == "vrl2":
         return _make_hier_engine(cfg, algo, fspec, mesh=mesh, ops=ops,
@@ -704,6 +882,9 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
 
     # ------------------------------------------------------------- init
     bias_on = use_bias(algo, cfg)
+    ef_rt = (None if comp is None else
+             _ef_op(ops, comp, fspec.lanes, grid=False, block=block,
+                    interpret=interpret))
 
     def init(params: Any, num_workers: int) -> FlatWorkerState:
         flat1 = flat.flatten_tree(fspec, params)
@@ -718,17 +899,35 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
             z = jnp.zeros(stacked.shape, jnp.float32)
             inner = AdamState(z, z, jnp.zeros((), jnp.int32))
         center = flat1.astype(jnp.float32) if algo.has_center else None
+        comm = ()
+        if comp is not None:
+            # fp32 residuals keep the EF invariant exact; ref is the shared
+            # post-sync value ((R, C)) — () for S-SGD gradient compression
+            resid = (jnp.zeros(stacked.shape, jnp.float32)
+                     if comp.error_feedback else ())
+            ref = (() if (algo.grad_all_reduce or algo.sync == "none")
+                   else flat1.astype(jnp.float32))
+            comm = CommState(resid=resid, ref=ref)
         return FlatWorkerState(params=stacked, delta=delta, inner=inner,
                                center=center,
                                step=jnp.zeros((), jnp.int32),
                                last_sync=jnp.zeros((), jnp.int32),
-                               bias=bias)
+                               bias=bias, comm=comm)
 
     # ------------------------------------------------- core step functions
     # These see LOCAL shards (W_local, R, C) when shard_mapped.
     def _core_local(state: FlatWorkerState, g: jax.Array) -> FlatWorkerState:
         if algo.grad_all_reduce:
-            g = jnp.broadcast_to(_wmean(g)[None], g.shape)
+            if comp is not None:
+                # S-SGD: the per-step gradient IS the payload (ref ≡ 0)
+                e = state.comm.resid if comp.error_feedback else None
+                dec, e_out = ef_rt(g, None, e)
+                g = jnp.broadcast_to(_wmean(dec)[None], g.shape)
+                if comp.error_feedback:
+                    state = state._replace(
+                        comm=state.comm._replace(resid=e_out))
+            else:
+                g = jnp.broadcast_to(_wmean(g)[None], g.shape)
         d = state.delta if algo.use_delta else None
         b = state.bias if bias_on else None
         if kind == "sgd":
@@ -757,19 +956,39 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
             out = out._replace(last_sync=state.step + 1)
         return out
 
+    def _comp_mean(state: FlatWorkerState):
+        """Compressed-drift worker mean: one fused EF round-trip pass
+        (payload = p − ref + resid → decompressed + residual', residual
+        donated), then the SAME single flat all-reduce — over the
+        decompressed drift.  ref is shared across workers, so
+        mean_i(p_i) = ref + mean_i(p_i − ref) exactly."""
+        cm = state.comm
+        e = cm.resid if comp.error_feedback else None
+        dec, e_out = ef_rt(state.params, cm.ref, e)
+        xbar = cm.ref + _wmean(dec)
+        cm = CommState(resid=(e_out if comp.error_feedback else ()),
+                       ref=xbar)
+        return xbar, state._replace(comm=cm)
+
     def _core_sync(state: FlatWorkerState) -> FlatWorkerState:
         if algo.sync == "none":
             return state._replace(last_sync=state.step)
         if algo.sync == "elastic":
             n = state.params.shape[0] * axis_size
             a = cfg.easgd_alpha / n
-            xbar = _wmean(state.params.astype(jnp.float32))
+            if comp is not None:
+                xbar, state = _comp_mean(state)
+            else:
+                xbar = _wmean(state.params.astype(jnp.float32))
             new_p, new_c = ops.fused_sync_easgd(
                 state.params, xbar, state.center, a=a, na=n * a,
                 block=block, interpret=interpret)
             return state._replace(params=new_p, center=new_c,
                                   last_sync=state.step)
-        xbar = _wmean(state.params)
+        if comp is not None:
+            xbar, state = _comp_mean(state)
+        else:
+            xbar = _wmean(state.params)
         if algo.sync == "average":
             new_p = jnp.broadcast_to(xbar[None], state.params.shape
                                      ).astype(state.params.dtype)
@@ -873,7 +1092,13 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
                   sync=sync, average_model=avg_model,
                   params_tree=params_tree,
                   round_step=round_step, round_end=sync,
-                  round_step_flat=round_step_flat, backend=backend)
+                  round_step_flat=round_step_flat, backend=backend,
+                  # store the resolve_pair form verbatim (level 2 is
+                  # meaningless for flat algorithms but keeping the pair
+                  # canonical means pair_meta(cfg) == pair_meta(engine
+                  # .compressors) — checkpoint metadata agrees whichever
+                  # form a caller derives it from)
+                  compressors=(comp, _comp2))
 
 
 # ================================================ fused executor ("vrl2")
@@ -891,6 +1116,13 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
     hcfg = hier_config(cfg)
     p_total, d_total = hcfg.grid
     k1, k2 = hcfg.k1, hcfg.k2
+    comp1, comp2 = comm_mod.resolve_pair(cfg)
+    ef1_rt = (None if comp1 is None else
+              _ef_op(ops, comp1, fspec.lanes, grid=True, block=block,
+                     interpret=interpret))
+    ef2_rt = (None if comp2 is None else
+              _ef_op(ops, comp2, fspec.lanes, grid=False, block=block,
+                     interpret=interpret))
     pod_axis = data_axis = None
     if mesh is not None:
         sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -932,10 +1164,22 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
         else:
             z = jnp.zeros(stacked.shape, jnp.float32)
             inner = AdamState(z, z, jnp.zeros((), jnp.int32))
+        comm = ()
+        if comp1 is not None or comp2 is not None:
+            comm = HierCommState(
+                resid1=(jnp.zeros(stacked.shape, jnp.float32)
+                        if comp1 and comp1.error_feedback else ()),
+                ref1=(jnp.broadcast_to(flat1.astype(jnp.float32),
+                                       (p_total, 1, *flat1.shape)).copy()
+                      if comp1 else ()),
+                resid2=(jnp.zeros((p_total, 1, *flat1.shape), jnp.float32)
+                        if comp2 and comp2.error_feedback else ()),
+                ref2=(flat1.astype(jnp.float32) if comp2 else ()))
         return HierFlatState(params=stacked, delta1=delta1, delta2=delta2,
                              inner=inner, step=jnp.zeros((), jnp.int32),
                              last_sync1=jnp.zeros((), jnp.int32),
-                             last_sync2=jnp.zeros((), jnp.int32))
+                             last_sync2=jnp.zeros((), jnp.int32),
+                             comm=comm)
 
     # ------------------------------------------------- core step functions
     def _core_local(state: HierFlatState, g: jax.Array) -> HierFlatState:
@@ -964,7 +1208,18 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
     def _core_sync1(state: HierFlatState) -> HierFlatState:
         k_eff = jnp.maximum(state.step - state.last_sync1, 1
                             ).astype(jnp.float32)
-        xbar = _pod_mean(state.params)
+        if comp1 is not None:
+            # compressed intra-pod drift: per-pod ref1 is shared within
+            # each averaging group, so the pod mean reconstructs exactly
+            cm = state.comm
+            e = cm.resid1 if comp1.error_feedback else None
+            dec, e_out = ef1_rt(state.params, cm.ref1, e)
+            xbar = cm.ref1 + _pod_mean(dec)
+            state = state._replace(comm=cm._replace(
+                ref1=xbar,
+                resid1=(e_out if comp1.error_feedback else ())))
+        else:
+            xbar = _pod_mean(state.params)
         scal = (k_eff * lr).reshape(1, 1).astype(jnp.float32)
         new_p, new_d1 = ops.fused_sync_hier1(
             state.params, xbar.astype(state.params.dtype), state.delta1,
@@ -977,7 +1232,25 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
         # so the global mean needs only the cross-pod axis.
         k_eff = jnp.maximum(state.step - state.last_sync2, 1
                             ).astype(jnp.float32)
-        glob = _cross_mean(state.params[:, :1])
+        if comp2 is not None:
+            # compressed cross-pod drift against the global ref2 — the
+            # slow-DCI-tier payload, typically compressed the hardest
+            cm = state.comm
+            pod = state.params[:, 0]                    # (P_l, R, C)
+            e = (cm.resid2[:, 0] if comp2.error_feedback else None)
+            dec, e_out = ef2_rt(pod, cm.ref2, e)
+            glob = cm.ref2 + _cross_mean(dec[:, None])
+            state = state._replace(comm=cm._replace(
+                ref2=glob,
+                resid2=(e_out[:, None] if comp2.error_feedback else ())))
+        else:
+            glob = _cross_mean(state.params[:, :1])
+        if comp1 is not None:
+            # level-2 moves every worker to x̂: re-anchor ref1 so the next
+            # intra-pod payload is small again
+            cm = state.comm
+            state = state._replace(comm=cm._replace(ref1=jnp.broadcast_to(
+                glob.astype(jnp.float32), cm.ref1.shape)))
         scal = (k_eff * lr).reshape(1, 1).astype(jnp.float32)
         new_p, new_d2 = ops.fused_sync_hier2(
             state.params, glob.astype(state.params.dtype), state.delta2,
@@ -1086,4 +1359,5 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
                   sync2=lambda s: sync2_core(s),
                   grid=(p_total, d_total),
                   round_step=round_step, round_end=round_end,
-                  round_step_flat=round_step_flat, backend=backend)
+                  round_step_flat=round_step_flat, backend=backend,
+                  compressors=(comp1, comp2))

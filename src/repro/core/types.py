@@ -27,6 +27,37 @@ class WorkerState(NamedTuple):
     step: jax.Array          # scalar int32: iterations completed
     last_sync: jax.Array     # scalar int32: step index of the last sync
     bias: Any = None         # (W, ...) BVR-L-SGD bias variate B_i (else None)
+    comm: Any = ()           # compressed-sync state (CommState) — () when
+                             # the sync payload is uncompressed
+
+
+class CommState(NamedTuple):
+    """Compressed-sync state (repro.comm) for the single-level executors.
+
+    ``resid``: per-worker error-feedback residual (worker-stacked like the
+    params, fp32), () when error feedback is off.  ``ref``: the shared
+    drift reference — the value every worker holds after the last sync —
+    against which the next payload is compressed; () for S-SGD's gradient
+    compression (ref ≡ 0).  Reference executor: trees (ref single-model);
+    fused/xla executors: flat buffers (resid (W, R, C), ref (R, C)).
+    """
+
+    resid: Any = ()
+    ref: Any = ()
+
+
+class HierCommState(NamedTuple):
+    """Per-level compressed-sync state for the two-level executors.
+
+    Level 1 (intra-pod): ``resid1`` per worker, ``ref1`` per pod (shared
+    within each averaging group).  Level 2 (cross-pod): ``resid2`` per pod,
+    ``ref2`` global.  Each half is () when its level is uncompressed.
+    """
+
+    resid1: Any = ()
+    ref1: Any = ()
+    resid2: Any = ()
+    ref2: Any = ()
 
 
 class HierState(NamedTuple):
@@ -43,6 +74,8 @@ class HierState(NamedTuple):
     step: jax.Array
     last_sync1: jax.Array    # step of the last level-1 (intra-pod) sync
     last_sync2: jax.Array    # step of the last level-2 (cross-pod) sync
+    comm: Any = ()           # per-level compressed-sync state
+                             # (HierCommState) — () when uncompressed
 
 
 def swap_dims(tree, a: int = 0, b: int = 1):

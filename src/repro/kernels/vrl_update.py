@@ -43,6 +43,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.comm import compressors as cc
+
 
 def default_interpret() -> bool:
     """Interpret-mode (python body) everywhere Pallas cannot compile —
@@ -378,6 +380,123 @@ def fused_sync_easgd(p, xbar, center, *, a: float, na: float,
         interpret=interpret,
     )(center, xbar)
     return new_p, new_c
+
+
+# ==================================================== compressed-sync kernels
+# EF round-trips of the sync payload's drift (repro.comm): one HBM pass
+# builds payload = p − ref + resid, quantizes / sparsifies it, and emits the
+# decompressed payload (what the single flat all-reduce then carries) plus
+# the new error-feedback residual, with the residual donated in place.  Row
+# statistics (the int8 per-row scale, the top-k per-row threshold) stay
+# entirely inside one (block, C) tile because tiles split rows, never lanes.
+#
+# The math mirrors ``repro.comm.compressors.ef_int8`` / ``ef_topk`` exactly
+# (same formulas, fp32 in-register) so the three executors agree; the wire
+# REPRESENTATION (int8 values + scales / fixed-k values + indices) is built
+# by ``repro.comm.compressors.compress`` for byte measurement — the engine hot
+# path only ever needs the decompressed payload and the residual.
+#
+# Note on top-k selection: the kernel body uses ``jax.lax.top_k`` over the
+# lane axis for the per-row threshold (kth magnitude).  Interpret mode
+# (CPU) executes it directly; on compiled TPU backends a Mosaic without
+# lane-axis top_k support would need a bitonic network here — the jnp
+# executor (``kernels/xla_update``) is the drop-in fallback either way.
+
+def _ef_kernel(*refs, mode: str, k: int, use_ref: bool, use_ef: bool):
+    # the round-trip math is the CANONICAL repro.comm implementation —
+    # its jnp ops trace inside the kernel body, so the executors cannot
+    # drift apart formula-wise
+    x = _f32(refs[0])
+    i = 1
+    if use_ref:
+        x = x - _f32(refs[i])
+        i += 1
+    if use_ef:
+        x = x + _f32(refs[i])
+        i += 1
+    dec, resid = (cc.ef_int8(x) if mode == "int8" else cc.ef_topk(x, k))
+    dec_ref = refs[i]
+    dec_ref[...] = dec.astype(dec_ref.dtype)
+    if use_ef:
+        eo_ref = refs[i + 1]
+        eo_ref[...] = resid.astype(eo_ref.dtype)
+
+
+def _ef_call(p, ref, e, *, mode: str, k: int, block: int, interpret,
+             grid_kind: str):
+    """Shared pallas_call builder for the flat (W, R, C) and pod-major
+    (P, D, R, C) EF round-trips.  Returns (dec fp32, resid' | None); the
+    residual aliases its input buffer (donated in place)."""
+    if interpret is None:
+        interpret = default_interpret()
+    use_ref, use_ef = ref is not None, e is not None
+    c = p.shape[-1]
+    if grid_kind == "flat":
+        w, r, _ = p.shape
+        grid = (w, r // block)
+        wspec = pl.BlockSpec((1, block, c), lambda wi, i: (wi, i, 0))
+        # shared (R, C) reference: every worker's step reads the same tile
+        rspec = pl.BlockSpec((block, c), lambda wi, i: (i, 0))
+    else:
+        pp, dd, r, _ = p.shape
+        grid = (pp, dd, r // block)
+        wspec = pl.BlockSpec((1, 1, block, c),
+                             lambda pi, di, i: (pi, di, i, 0))
+        # per-pod (P, 1, R, C) reference: broadcast over the intra-pod dim
+        rspec = pl.BlockSpec((1, 1, block, c),
+                             lambda pi, di, i: (pi, 0, i, 0))
+    ins = (p,) + ((ref,) if use_ref else ()) + ((e,) if use_ef else ())
+    in_specs = [wspec] + ([rspec] if use_ref else []) \
+        + ([wspec] if use_ef else [])
+    out_specs = [wspec] + ([wspec] if use_ef else [])
+    out_shape = [jax.ShapeDtypeStruct(p.shape, jnp.float32)] \
+        + ([jax.ShapeDtypeStruct(e.shape, e.dtype)] if use_ef else [])
+    aliases = {len(ins) - 1: 1} if use_ef else {}
+    out = pl.pallas_call(
+        functools.partial(_ef_kernel, mode=mode, k=k, use_ref=use_ref,
+                          use_ef=use_ef),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(*ins)
+    if use_ef:
+        return out[0], out[1]
+    return out[0], None
+
+
+def fused_ef_int8(p, ref, e, *, block: int = 1024, interpret=None):
+    """Per-row-scaled int8 EF round-trip on (W, R, C) buffers.
+
+    ``ref``: (R, C) shared drift reference or None (S-SGD gradient
+    compression); ``e``: (W, R, C) error-feedback residual or None.
+    Returns (decompressed payload fp32, resid'), resid' donated in place
+    and None when ``e`` is None.
+    """
+    return _ef_call(p, ref, e, mode="int8", k=0, block=block,
+                    interpret=interpret, grid_kind="flat")
+
+
+def fused_ef_topk(p, ref, e, *, k: int, block: int = 1024, interpret=None):
+    """Top-k (k lanes kept per row) EF round-trip on (W, R, C) buffers;
+    same operand contract as ``fused_ef_int8``."""
+    return _ef_call(p, ref, e, mode="topk", k=k, block=block,
+                    interpret=interpret, grid_kind="flat")
+
+
+def fused_ef_int8_grid(p, ref, e, *, block: int = 1024, interpret=None):
+    """Pod-major twin: p/e (P, D, R, C), ref (P, 1, R, C) per-pod
+    reference whose blocks broadcast over the intra-pod grid dim."""
+    return _ef_call(p, ref, e, mode="int8", k=0, block=block,
+                    interpret=interpret, grid_kind="grid")
+
+
+def fused_ef_topk_grid(p, ref, e, *, k: int, block: int = 1024,
+                       interpret=None):
+    return _ef_call(p, ref, e, mode="topk", k=k, block=block,
+                    interpret=interpret, grid_kind="grid")
 
 
 # ================================================== hierarchical (P, D, R, C)

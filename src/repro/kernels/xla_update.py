@@ -26,6 +26,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.comm import compressors as cc
+
 
 def _f32(x):
     return x.astype(jnp.float32)
@@ -134,6 +136,55 @@ def fused_sync_easgd(p, xbar, center, *, a: float, na: float,
     new_c = ((1.0 - na) * _f32(center) + na * _f32(xbar)
              ).astype(center.dtype)
     return new_p, new_c
+
+
+# ==================================================== compressed-sync twins
+# EF round-trips of the sync payload's drift (repro.comm): payload =
+# p − ref + resid, compressed and decompressed in one fused chain; the
+# residual is the literal subtraction so resid' + dec == payload bitwise.
+# ``ref``/``e`` may be None (S-SGD gradient compression has no ref; EF off
+# carries no residual) — then the matching output is None too.
+
+def _ef_payload(p, ref, e):
+    x = _f32(p)
+    if ref is not None:
+        x = x - _f32(ref)
+    if e is not None:
+        x = x + _f32(e)
+    return x
+
+
+def fused_ef_int8(p, ref, e, *, block: int = 0, interpret=None):
+    """Per-row-scaled int8 EF round-trip on (W, R, C) buffers.
+
+    ``ref``: (R, C) shared drift reference (broadcast over workers) or
+    None; ``e``: (W, R, C) residual or None.  Returns (dec fp32, resid'),
+    resid' None when e is None.  Math: ``repro.comm.compressors.ef_int8``.
+    """
+    del block, interpret
+    x = _ef_payload(p, ref, e)
+    dec, res = cc.ef_int8(x)
+    return dec, (res if e is not None else None)
+
+
+def fused_ef_topk(p, ref, e, *, k: int, block: int = 0, interpret=None):
+    """Top-k (k lanes/row) EF round-trip on (W, R, C) buffers; same operand
+    contract as ``fused_ef_int8``.  Math: ``compress.ef_topk``."""
+    del block, interpret
+    x = _ef_payload(p, ref, e)
+    dec, res = cc.ef_topk(x, k)
+    return dec, (res if e is not None else None)
+
+
+def fused_ef_int8_grid(p, ref, e, *, block: int = 0, interpret=None):
+    """Pod-major twin: p/e (P, D, R, C), ref (P, 1, R, C) per-pod
+    reference (broadcast over the intra-pod axis)."""
+    return fused_ef_int8(p, ref, e)
+
+
+def fused_ef_topk_grid(p, ref, e, *, k: int, block: int = 0,
+                       interpret=None):
+    return fused_ef_topk(p, ref, e, k=k)
 
 
 # ========================================== hierarchical (P, D, R, C) twins

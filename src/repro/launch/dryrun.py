@@ -35,6 +35,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
+from repro.comm import compressors as comm_mod
 from repro.configs.base import HierConfig, InputShape, MeshConfig, VRLConfig
 from repro.configs import registry
 from repro.core import engine as engine_mod
@@ -165,7 +166,7 @@ def cache_specs(cfg, mesh_cfg: MeshConfig, batch: int, seq_len: int = 0):
 
 def state_specs(cfg, mesh_cfg: MeshConfig, vrl_cfg: VRLConfig):
     """PartitionSpec tree for WorkerState."""
-    from repro.core.types import WorkerState
+    from repro.core.types import CommState, WorkerState
     defs = transformer.model_defs(cfg)
     pspec = sh.partition_specs(defs, cfg, mesh_cfg)
     wspec = jax.tree.map(lambda s: sh.worker_stacked_spec(s, mesh_cfg),
@@ -180,8 +181,15 @@ def state_specs(cfg, mesh_cfg: MeshConfig, vrl_cfg: VRLConfig):
     center = pspec if vrl_cfg.algorithm == "easgd" else None
     spec = engine_mod.get_spec(vrl_cfg.algorithm)
     bias = wspec if engine_mod.use_bias(spec, vrl_cfg) else None
+    comp, _ = comm_mod.resolve_pair(vrl_cfg)
+    comm = ()
+    if comp is not None:
+        comm = CommState(
+            resid=(wspec if comp.error_feedback else ()),
+            ref=(() if (spec.grad_all_reduce or spec.sync == "none")
+                 else pspec))
     return WorkerState(params=wspec, delta=wspec, inner=inner, center=center,
-                       step=P(), last_sync=P(), bias=bias)
+                       step=P(), last_sync=P(), bias=bias, comm=comm)
 
 
 # ------------------------------------------------------------------- lower
@@ -196,6 +204,8 @@ class DryrunResult:
     per_device_bytes: int
     roofline: Optional[rl.Roofline]
     error: str = ""
+    compressor: str = ""         # active compressor for this fn's level
+    comp_bytes: int = 0          # compressed wire bytes of the sync payload
 
     def to_json(self) -> dict:
         d = {
@@ -203,10 +213,13 @@ class DryrunResult:
             "fn": self.fn, "ok": self.ok, "compile_s": round(self.compile_s, 2),
             "per_device_bytes": self.per_device_bytes, "error": self.error,
         }
+        if self.compressor:
+            d.update(compressor=self.compressor, comp_bytes=self.comp_bytes)
         if self.roofline:
             r = self.roofline
             d.update(hlo_flops=r.hlo_flops, hlo_bytes=r.hlo_bytes,
-                     coll_bytes=r.coll_bytes, model_flops=r.model_flops,
+                     coll_bytes=r.coll_bytes, dci_bytes=r.dci_bytes,
+                     model_flops=r.model_flops,
                      t_compute=r.t_compute, t_memory=r.t_memory,
                      t_collective=r.t_collective, bottleneck=r.bottleneck,
                      useful_ratio=r.useful_ratio, coll_detail=r.coll_detail)
@@ -241,6 +254,8 @@ def lower_one(arch_id: str, shape_id: str, *, multi_pod: bool,
               comm_period: int = 20, k1: int = 5, k2: int = 20,
               comm_schedule: Optional[str] = None, round_k: int = 0,
               backend: str = "fused",
+              compress: Optional[str] = None,
+              compress2: Optional[str] = None,
               mesh_override: Optional[dict] = None,
               cfg_override: Optional[dict] = None, tag: str = "",
               last_only: bool = False, no_remat: bool = False):
@@ -261,7 +276,16 @@ def lower_one(arch_id: str, shape_id: str, *, multi_pod: bool,
     ``unrolled=True`` unrolls the layer scan so cost_analysis() counts every
     layer (XLA's HLO cost analysis counts a while-loop body ONCE); use the
     scanned variant for the memory/fit artifact and the unrolled one for
-    roofline terms."""
+    roofline terms.
+
+    Link-tier attribution (``Roofline.dci_bytes``) and the per-level
+    compressed wire bytes are exact on the PER-LEVEL lowerings: "sync2"
+    prices its cross-pod all-reduce at DCI bandwidth and reports the
+    level-2 compressor; everything else is ICI / level-1.  Hierarchical
+    "round"/"train" lowerings aggregate BOTH levels in one HLO, so their
+    collective term is priced at ICI rate and comp_bytes shows level 1
+    only — use the sync1/sync2 artifacts as the tier-attributed source of
+    truth."""
     serving = fn_kind in ("prefill", "decode") or (
         fn_kind is None and registry.get_shape(shape_id).kind != "train")
     mesh_cfg = registry.mesh_roles(arch_id, multi_pod=multi_pod,
@@ -280,9 +304,18 @@ def lower_one(arch_id: str, shape_id: str, *, multi_pod: bool,
                           grid=(pods, mesh_cfg.num_workers // pods))
     sched = (schedule_mod.parse_schedule(comm_schedule, comm_period)
              if comm_schedule else None)
+    if compress2 and algorithm != "hier_vrl_sgd":
+        # match launch/train.py: flat algorithms have one level
+        raise ValueError("--compress2 drives the hierarchical cross-pod "
+                         "sync2; flat algorithms have one level "
+                         "(--compress)")
     vrl_cfg = vrl_cfg or VRLConfig(
         algorithm=algorithm, comm_period=comm_period, hier=hier,
         comm_schedule=sched, update_backend=backend,
+        compress=(comm_mod.parse_compressor(compress) if compress
+                  else None),
+        compress2=(comm_mod.parse_compressor(compress2) if compress2
+                   else None),
         delta_dtype="bfloat16" if (arch_id in registry._FSDP_ARCHS
                                    or os.environ.get("VRL_DELTA_BF16"))
         else "float32")
@@ -302,6 +335,7 @@ def lower_one(arch_id: str, shape_id: str, *, multi_pod: bool,
     if tag:
         name += f"/{tag}"
 
+    eng_spec = None               # flat-buffer layout (for wire-bytes)
     with compat.set_mesh(mesh):
         if fn_kind in ("train", "local", "sync", "sync1", "sync2", "round"):
             fused = engine_mod.resolve_backend(vrl_cfg) != "reference"
@@ -320,6 +354,8 @@ def lower_one(arch_id: str, shape_id: str, *, multi_pod: bool,
             state_abs = jax.eval_shape(
                 lambda: bundle.init_state(jax.random.PRNGKey(0),
                                           mesh_cfg.num_workers))
+            if bundle.engine is not None:
+                eng_spec = bundle.engine.spec
             if fused:
                 # hier axes resolve against THIS mesh: the single mesh has
                 # no "pod" axis, so its (1, W) grid shards data only
@@ -434,12 +470,28 @@ def lower_one(arch_id: str, shape_id: str, *, multi_pod: bool,
 
     dt = time.time() - t0
     hlo = compiled.as_text()
-    roof = rl.analyze(name, compiled, hlo, mf, chips)
+    # the hierarchical level-2 sync's only collective crosses pods: its
+    # bytes ride the slow DCI tier in the roofline (sync1/locals are ICI)
+    roof = rl.analyze(name, compiled, hlo, mf, chips,
+                      dci_fraction=1.0 if fn_kind == "sync2" else 0.0)
+    # per-level compressed wire bytes of the sync payload, next to the
+    # raw-payload collective bytes the HLO measures
+    c1, c2 = comm_mod.resolve_pair(vrl_cfg)
+    level_comp = c2 if fn_kind == "sync2" else c1
+    comp_label, comp_bytes = "", 0
+    if level_comp is not None and eng_spec is not None \
+            and fn_kind in ("train", "sync", "sync1", "sync2", "round"):
+        item = jnp.dtype(eng_spec.dtype).itemsize
+        comp_label = level_comp.label()
+        comp_bytes = comm_mod.wire_bytes(
+            level_comp, rows=eng_spec.rows, lanes=eng_spec.lanes,
+            size=eng_spec.size, itemsize=item)
     fn_label = fn_kind + ("+unroll" if unrolled else "") + \
         (f"+{tag}" if tag else "")
     res = DryrunResult(arch=arch_id, shape=shape_id, mesh=mesh_name,
                        fn=fn_label, ok=True, compile_s=dt,
-                       per_device_bytes=_mem_bytes(compiled), roofline=roof)
+                       per_device_bytes=_mem_bytes(compiled), roofline=roof,
+                       compressor=comp_label, comp_bytes=comp_bytes)
     if verbose:
         try:
             print(compiled.memory_analysis())
@@ -449,11 +501,18 @@ def lower_one(arch_id: str, shape_id: str, *, multi_pod: bool,
         if isinstance(cost, list):
             cost = cost[0]
         print({k: cost.get(k) for k in ("flops", "bytes accessed")})
+        comp_note = ""
+        if comp_label:
+            raw = comm_mod.raw_bytes(eng_spec.rows, eng_spec.lanes,
+                                     jnp.dtype(eng_spec.dtype).itemsize)
+            comp_note = (f"  wire[{comp_label}]="
+                         f"{comp_bytes/2**20:.2f} MiB ({raw/comp_bytes:.1f}x)")
         print(f"[{name}] compile {dt:.1f}s  mem/device "
               f"{res.per_device_bytes/2**30:.2f} GiB  "
               f"bottleneck={roof.bottleneck}  "
               f"terms(ms) c={roof.t_compute*1e3:.3f} "
-              f"m={roof.t_memory*1e3:.3f} coll={roof.t_collective*1e3:.3f}")
+              f"m={roof.t_memory*1e3:.3f} coll={roof.t_collective*1e3:.3f}"
+              + comp_note)
     return res
 
 
@@ -498,6 +557,14 @@ def main(argv=None) -> int:
                     help="fn=round: round length to lower (a stagewise "
                          "run compiles one such executable per stage k); "
                          "0 = comm period")
+    ap.add_argument("--compress", default=None,
+                    help="sync-payload compressor for the train lowerings "
+                         "(none|int8|topk[:rate][:noef]); artifacts gain "
+                         "the compressed wire bytes next to the raw "
+                         "collective bytes")
+    ap.add_argument("--compress2", default=None,
+                    help="override the cross-pod sync2 compressor "
+                         "(hier_vrl_sgd; default: --compress)")
     ap.add_argument("--worker-axes", default=None,
                     help="comma list overriding VRL worker mesh axes")
     ap.add_argument("--fsdp-axes", default=None)
@@ -550,6 +617,8 @@ def main(argv=None) -> int:
                             backend=args.backend, k1=args.k1, k2=args.k2,
                             comm_schedule=args.comm_schedule,
                             round_k=args.round_k,
+                            compress=args.compress,
+                            compress2=args.compress2,
                             mesh_override=mesh_override or None,
                             cfg_override=cfg_override or None,
                             tag=args.tag or ("u2" if args.two_layer else ""),

@@ -19,7 +19,8 @@ import re
 from collections import defaultdict
 from typing import Optional
 
-from repro.launch.mesh import HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16
+from repro.launch.mesh import (DCI_LINK_BW, HBM_BW, ICI_LINK_BW,
+                               PEAK_FLOPS_BF16)
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -125,6 +126,8 @@ class Roofline:
     coll_bytes: float           # per device
     model_flops: float          # 6*N_active*D, whole step, all devices
     chips: int
+    dci_bytes: float = 0.0      # share of coll_bytes riding the slow
+                                # cross-pod DCI tier (hier sync2)
     coll_detail: dict = dataclasses.field(default_factory=dict)
 
     @property
@@ -137,7 +140,12 @@ class Roofline:
 
     @property
     def t_collective(self) -> float:
-        return self.coll_bytes / ICI_LINK_BW
+        """Collective time with each byte weighted by its link tier: the
+        cross-pod share pays DCI bandwidth (~8x slower than ICI), which is
+        why the dry-run's sync2 term dominates — and why compressing sync2
+        harder (``--compress2``) pays more than intra-pod compression."""
+        ici = max(self.coll_bytes - self.dci_bytes, 0.0)
+        return ici / ICI_LINK_BW + self.dci_bytes / DCI_LINK_BW
 
     @property
     def bottleneck(self) -> str:
@@ -157,13 +165,17 @@ class Roofline:
 
 
 def analyze(name: str, compiled, hlo_text: str, model_flops: float,
-            chips: int) -> Roofline:
+            chips: int, dci_fraction: float = 0.0) -> Roofline:
+    """``dci_fraction``: share of the collective bytes that cross the slow
+    DCI tier (1.0 for the hierarchical level-2 sync, whose only collective
+    is the cross-pod all-reduce; 0 for purely intra-pod lowerings)."""
     cost = compiled.cost_analysis()
     if isinstance(cost, list):  # older jax returns [dict]
         cost = cost[0]
     flops = float(cost.get("flops", 0.0))
     nbytes = float(cost.get("bytes accessed", 0.0))
     coll = collective_bytes(hlo_text)
+    total = coll.get("total", 0.0)
     return Roofline(name=name, hlo_flops=flops, hlo_bytes=nbytes,
-                    coll_bytes=coll.get("total", 0.0),
-                    model_flops=model_flops, chips=chips, coll_detail=coll)
+                    coll_bytes=total, model_flops=model_flops, chips=chips,
+                    dci_bytes=total * dci_fraction, coll_detail=coll)

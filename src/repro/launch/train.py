@@ -35,6 +35,7 @@ import numpy as np
 
 from repro import checkpoint as ckpt
 from repro import compat
+from repro.comm import compressors as comm_mod
 from repro.configs import registry
 from repro.configs.base import EngineConfig, HierConfig, VRLConfig
 from repro.core import engine as engine_mod
@@ -62,6 +63,15 @@ def main(argv=None) -> int:
     ap.add_argument("--bvr-beta", type=float, default=0.5,
                     help="bvr_l_sgd bias-variate EMA rate (0 = plain "
                          "vrl_sgd)")
+    ap.add_argument("--compress", default=None,
+                    help="sync-payload compressor: none | int8 | "
+                         "topk[:rate] (append :noef to drop error "
+                         "feedback).  none/rate-1 is bitwise the "
+                         "uncompressed path")
+    ap.add_argument("--compress2", default=None,
+                    help="hier_vrl_sgd: override the cross-pod sync2 "
+                         "compressor (default: --compress) so the slow "
+                         "DCI tier compresses harder")
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "fused", "xla", "reference"],
                     help="update math: auto (Pallas where it compiles, "
@@ -118,10 +128,19 @@ def main(argv=None) -> int:
     if hier is not None and sched_arg is not None:
         raise SystemExit("--comm-schedule drives the flat algorithms; "
                          "hier_vrl_sgd's cadence is --k1/--k2")
+    comp_arg = (comm_mod.parse_compressor(args.compress)
+                if args.compress else None)
+    comp2_arg = (comm_mod.parse_compressor(args.compress2)
+                 if args.compress2 else None)
+    if comp2_arg is not None and args.algorithm != "hier_vrl_sgd":
+        raise SystemExit("--compress2 drives the hierarchical cross-pod "
+                         "sync2; flat algorithms have one level "
+                         "(--compress)")
     vrl = VRLConfig(algorithm=args.algorithm, comm_period=args.k,
                     learning_rate=args.lr, warmup=args.warmup,
                     update_backend=args.backend, bvr_beta=args.bvr_beta,
-                    comm_schedule=sched_arg,
+                    comm_schedule=sched_arg, compress=comp_arg,
+                    compress2=comp2_arg,
                     engine=EngineConfig(block=args.block,
                                         round_scan=args.round), hier=hier)
     sched = engine_mod.comm_schedule(vrl)    # explicit or the algo default
@@ -158,6 +177,23 @@ def main(argv=None) -> int:
         es = bundle.engine.spec
         print(f"engine: flat buffer {es.rows}x{es.lanes} "
               f"({es.padded - es.size} pad elems), block={es.block}")
+    comps = (bundle.engine.compressors if bundle.engine is not None
+             else comm_mod.resolve_pair(vrl))
+    if any(c is not None for c in comps) and bundle.engine is not None:
+        es = bundle.engine.spec
+        item = jnp.dtype(es.dtype).itemsize
+        raw = comm_mod.raw_bytes(es.rows, es.lanes, item)
+        distinct = []              # one figure per distinct compressor,
+        for c in comps:            # matching describe_pair's collapsing
+            if c is not None and c not in distinct:
+                distinct.append(c)
+        wires = [comm_mod.wire_bytes(c, rows=es.rows, lanes=es.lanes,
+                                     size=es.size, itemsize=item)
+                 for c in distinct]
+        print(f"compress: {comm_mod.describe_pair(comps)} — sync wire "
+              + " / ".join(f"{w/2**20:.2f} MiB ({raw/w:.1f}x)"
+                           for w in wires)
+              + f" vs raw {raw/2**20:.2f} MiB per worker payload")
 
     data = lm_token_stream(args.workers, args.seq, cfg.vocab_size,
                            steps=args.steps, batch=args.batch,
@@ -173,8 +209,10 @@ def main(argv=None) -> int:
     def checkpoint(t):
         meta = {"step": t, "arch": args.arch}
         if bundle.engine is not None:
-            ckpt.save_flat_state(args.ckpt, state, bundle.engine.spec,
-                                 meta=meta, grid=bundle.engine.grid)
+            ckpt.save_flat_state(
+                args.ckpt, state, bundle.engine.spec, meta=meta,
+                grid=bundle.engine.grid,
+                compressors=comm_mod.pair_meta(bundle.engine.compressors))
         else:
             ckpt.save(args.ckpt, state, meta=meta)
         print(f"checkpointed -> {args.ckpt}")

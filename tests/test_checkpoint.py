@@ -4,8 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint as ckpt
+from repro.comm import compressors as cc
 from repro.configs.base import VRLConfig
-from repro.core import get_algorithm
+from repro.core import get_algorithm, make_engine
 
 
 def test_roundtrip_pytree(tmp_path):
@@ -39,3 +40,45 @@ def test_shape_mismatch_raises(tmp_path):
     import pytest
     with pytest.raises(ValueError):
         ckpt.restore(str(tmp_path / "m"), {"a": jnp.ones((3, 3))})
+
+
+def test_flat_state_residuals_roundtrip(tmp_path):
+    """Compressed-sync residual/ref buffers persist in the flat state and
+    validate: restore succeeds only with the SAME recorded compressors."""
+    import pytest
+
+    cfg = VRLConfig(algorithm="vrl_sgd", comm_period=2, learning_rate=0.05,
+                    warmup=False, update_backend="xla",
+                    compress=cc.parse_compressor("int8"))
+    eng = make_engine(cfg, {"w": jnp.zeros((6, 4))})
+    state = eng.init({"w": jnp.ones((6, 4))}, 3)
+    step = jax.jit(eng.train_step)
+    for t in range(4):     # past a sync so resid/ref are non-trivial
+        g = jax.tree.map(lambda x: jnp.sin(x + t),
+                         eng.params_tree(state))
+        state = step(state, g)
+    assert float(jnp.max(jnp.abs(state.comm.resid))) > 0.0
+    meta = cc.pair_meta(eng.compressors)
+    ckpt.save_flat_state(str(tmp_path / "f"), state, eng.spec,
+                         meta={"step": 4}, compressors=meta)
+    out = ckpt.restore_flat_state(str(tmp_path / "f"), state, eng.spec,
+                                  compressors=meta)
+    np.testing.assert_array_equal(np.asarray(out.comm.resid),
+                                  np.asarray(state.comm.resid))
+    np.testing.assert_array_equal(np.asarray(out.comm.ref),
+                                  np.asarray(state.comm.ref))
+    # mismatched (or absent) compressors must fail loudly, not silently
+    # drop the residuals
+    with pytest.raises(ValueError, match="compressor"):
+        ckpt.restore_flat_state(str(tmp_path / "f"), state, eng.spec,
+                                compressors=None)
+    # and an UNCOMPRESSED checkpoint refuses a compressed engine
+    cfg0 = VRLConfig(algorithm="vrl_sgd", comm_period=2, warmup=False,
+                     update_backend="xla")
+    eng0 = make_engine(cfg0, {"w": jnp.zeros((6, 4))})
+    s0 = eng0.init({"w": jnp.ones((6, 4))}, 3)
+    ckpt.save_flat_state(str(tmp_path / "u"), s0, eng0.spec,
+                         compressors=cc.pair_meta(eng0.compressors))
+    with pytest.raises(ValueError, match="compressor"):
+        ckpt.restore_flat_state(str(tmp_path / "u"), s0, eng0.spec,
+                                compressors=meta)

@@ -1,0 +1,316 @@
+"""Compressed-sync subsystem through the engine (repro.comm + core/engine).
+
+The contract, per executor matrix:
+
+  * ``none`` (or topk at rate 1) is BITWISE the uncompressed path for
+    every flat AlgoSpec on both flat-buffer executors — same kernels, no
+    extra state buffers;
+  * ``int8``/``topk`` with error feedback track the UNCOMPRESSED reference
+    trajectory within a compression-scale tolerance (lossy by design, EF
+    keeps the error bounded instead of accumulating);
+  * the xla and fused executors agree BITWISE under compression (same
+    formulas, fp32 in-register);
+  * rounds and per-step driving sync through identical compressed math;
+  * hierarchical syncs compress per level (``compress`` / ``compress2``)
+    and S-SGD compresses its per-step gradient all-reduce;
+  * compressed states checkpoint with their residual/ref buffers and a
+    compressor mismatch on restore fails loudly (see also
+    ``tests/test_checkpoint.py``).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.comm import compressors as cc
+from repro.configs.base import HierConfig, VRLConfig
+from repro.core import (CommState, HierCommState, flat_algorithms,
+                        get_algorithm, hierarchical as H, make_engine)
+
+ALGORITHMS = list(flat_algorithms())
+W, K, STEPS = 4, 4, 13
+
+TEMPLATE = {"w": jnp.zeros((8, 3)), "b": jnp.zeros((5,)),
+            "deep": {"u": jnp.zeros((2, 2, 4))}}
+
+
+def _params0():
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    return {"w": jax.random.normal(ks[0], (8, 3)),
+            "b": jax.random.normal(ks[1], (5,)),
+            "deep": {"u": jax.random.normal(ks[2], (2, 2, 4))}}
+
+
+def _grads(params, t):
+    def one(x):
+        w = x.shape[0]
+        phase = jnp.arange(w, dtype=x.dtype).reshape((w,) + (1,) * (x.ndim - 1))
+        return jnp.sin(3.0 * x + 0.7 * t + phase) + 0.1 * x
+    return jax.tree.map(one, params)
+
+
+def _hier_grads(params, t):
+    def one(x):
+        p, d = x.shape[:2]
+        phase = jnp.arange(p * d, dtype=x.dtype).reshape(
+            (p, d) + (1,) * (x.ndim - 2))
+        return jnp.sin(3.0 * x + 0.7 * t + phase) + 0.1 * x
+    return jax.tree.map(one, params)
+
+
+def _cfg(alg, *, backend="xla", compress=None, compress2=None, k=K):
+    return VRLConfig(algorithm=alg, comm_period=k, learning_rate=0.05,
+                     weight_decay=1e-3, warmup=False,
+                     update_backend=backend,
+                     compress=compress, compress2=compress2)
+
+
+def _run_engine(cfg, steps=STEPS, workers=W):
+    eng = make_engine(cfg, TEMPLATE)
+    s = eng.init(_params0(), workers)
+    step = jax.jit(lambda s, t: eng.train_step(s, _grads(eng.params_tree(s),
+                                                         t)))
+    for t in range(steps):
+        s = step(s, jnp.float32(t))
+    return eng, s
+
+
+def _max_err(tree_a, tree_b):
+    return max(float(jnp.max(jnp.abs(a - b))) for a, b in
+               zip(jax.tree.leaves(tree_a), jax.tree.leaves(tree_b)))
+
+
+# ----------------------------------------------------- identity reductions
+@pytest.mark.parametrize("backend", ["xla", "fused"])
+@pytest.mark.parametrize("alg_name", ALGORITHMS)
+def test_none_compressor_is_bitwise_uncompressed(alg_name, backend):
+    """``none`` (and topk rate 1) resolve to the ORIGINAL path: bitwise
+    identical params and NO comm buffers, for every flat AlgoSpec."""
+    e0, s0 = _run_engine(_cfg(alg_name, backend=backend), steps=9)
+    for comp in [cc.parse_compressor("none"), cc.parse_compressor("topk:1")]:
+        e1, s1 = _run_engine(_cfg(alg_name, backend=backend, compress=comp),
+                             steps=9)
+        assert s1.comm == ()
+        np.testing.assert_array_equal(np.asarray(s0.params),
+                                      np.asarray(s1.params))
+
+
+# ------------------------------------------------ lossy-compression bounds
+@pytest.mark.parametrize("comp,tol", [("int8", 5e-3), ("topk:4", 0.12)])
+@pytest.mark.parametrize("alg_name", ["vrl_sgd", "local_sgd", "bvr_l_sgd",
+                                      "easgd"])
+def test_compressed_tracks_uncompressed_reference(alg_name, comp, tol):
+    """EF-compressed engine trajectories stay within a compression-scale
+    tolerance of the UNCOMPRESSED per-leaf reference oracle."""
+    cfg0 = _cfg(alg_name)
+    alg = get_algorithm(alg_name)
+    sref = alg.init(cfg0, _params0(), W)
+    rstep = jax.jit(lambda s, t: alg.train_step(cfg0, s, _grads(s.params, t)))
+    for t in range(STEPS):
+        sref = rstep(sref, jnp.float32(t))
+    _, s = _run_engine(_cfg(alg_name, compress=cc.parse_compressor(comp)))
+    eng = make_engine(_cfg(alg_name, compress=cc.parse_compressor(comp)),
+                      TEMPLATE)
+    err = _max_err(eng.params_tree(s), sref.params)
+    assert 0.0 < err < tol, err
+
+
+@pytest.mark.parametrize("comp", ["int8", "topk:4"])
+def test_compressed_xla_matches_fused_bitwise(comp):
+    """The two flat-buffer executors run the same compression formulas in
+    fp32 — trajectories agree bitwise."""
+    spec = cc.parse_compressor(comp)
+    _, sx = _run_engine(_cfg("vrl_sgd", backend="xla", compress=spec))
+    _, sf = _run_engine(_cfg("vrl_sgd", backend="fused", compress=spec))
+    np.testing.assert_array_equal(np.asarray(sx.params),
+                                  np.asarray(sf.params))
+    np.testing.assert_array_equal(np.asarray(sx.comm.resid),
+                                  np.asarray(sf.comm.resid))
+    np.testing.assert_array_equal(np.asarray(sx.comm.ref),
+                                  np.asarray(sf.comm.ref))
+
+
+def test_compressed_reference_executor_tracks_uncompressed():
+    """The per-leaf reference executor supports compression too (row
+    grouping is leaf-aligned there, so it is its own trajectory — compared
+    against the uncompressed oracle, like the flat executors)."""
+    cfg0 = _cfg("vrl_sgd")
+    cfgc = dataclasses.replace(cfg0, compress=cc.parse_compressor("int8"))
+    alg = get_algorithm("vrl_sgd")
+    s0, sc = alg.init(cfg0, _params0(), W), alg.init(cfgc, _params0(), W)
+    assert isinstance(sc.comm, CommState)
+    step0 = jax.jit(lambda s, t: alg.train_step(cfg0, s, _grads(s.params, t)))
+    stepc = jax.jit(lambda s, t: alg.train_step(cfgc, s, _grads(s.params, t)))
+    for t in range(STEPS):
+        s0 = step0(s0, jnp.float32(t))
+        sc = stepc(sc, jnp.float32(t))
+    err = _max_err(sc.params, s0.params)
+    assert 0.0 < err < 5e-3, err
+
+
+def test_error_feedback_beats_no_feedback():
+    """Dropping error feedback (``:noef``) loses the carried correction:
+    the EF trajectory must track the uncompressed oracle at least as well
+    on the aggressive top-k compressor."""
+    cfg0 = _cfg("vrl_sgd")
+    e0, s0 = _run_engine(cfg0)
+    _, s_ef = _run_engine(dataclasses.replace(
+        cfg0, compress=cc.parse_compressor("topk:8")))
+    _, s_no = _run_engine(dataclasses.replace(
+        cfg0, compress=cc.parse_compressor("topk:8:noef")))
+    err_ef = float(jnp.max(jnp.abs(s_ef.params - s0.params)))
+    err_no = float(jnp.max(jnp.abs(s_no.params - s0.params)))
+    assert err_ef < err_no, (err_ef, err_no)
+    # and the noef state carries no residual buffer
+    assert s_no.comm.resid == ()
+    assert isinstance(s_ef.comm.resid, jax.Array)
+
+
+def test_ssgd_gradient_compression():
+    """S-SGD's communication is the per-step gradient all-reduce: it
+    compresses with ref ≡ 0 and carries a per-step EF residual."""
+    cfg0 = _cfg("ssgd")
+    _, s0 = _run_engine(cfg0, steps=9)
+    _, sc = _run_engine(dataclasses.replace(
+        cfg0, compress=cc.parse_compressor("int8")), steps=9)
+    assert sc.comm.ref == ()                 # gradient compression: no ref
+    assert float(jnp.max(jnp.abs(sc.comm.resid))) > 0.0
+    err = float(jnp.max(jnp.abs(sc.params - s0.params)))
+    assert 0.0 < err < 5e-2, err
+
+
+# --------------------------------------------------------- round execution
+@pytest.mark.parametrize("backend", ["xla", "fused"])
+def test_compressed_round_matches_per_step(backend):
+    """One compressed round (k scanned locals + sync, one jit unit) lands
+    exactly where k compressed per-step train_steps land."""
+    cfg = _cfg("vrl_sgd", backend=backend,
+               compress=cc.parse_compressor("int8"))
+    eng = make_engine(cfg, TEMPLATE)
+    p0 = _params0()
+    s_round = eng.init(p0, W)
+    s_step = eng.init(p0, W)
+    gk = jax.tree.map(
+        lambda x: jnp.stack([_grads({"x": x}, t)["x"] for t in range(K)]),
+        eng.params_tree(s_step))
+    s_round = jax.jit(eng.round_step, donate_argnums=(0,))(s_round, gk)
+    step = jax.jit(eng.train_step)
+    for t in range(K):
+        s_step = step(s_step, jax.tree.map(lambda g: g[t], gk))
+    np.testing.assert_array_equal(np.asarray(s_round.params),
+                                  np.asarray(s_step.params))
+    np.testing.assert_array_equal(np.asarray(s_round.comm.resid),
+                                  np.asarray(s_step.comm.resid))
+    assert int(s_round.last_sync) == int(s_step.last_sync) == K
+
+
+# ------------------------------------------------------------ hierarchical
+def _hier_cfg(compress=None, compress2=None, backend="xla"):
+    return VRLConfig(algorithm="hier_vrl_sgd", learning_rate=0.05,
+                     weight_decay=1e-3, warmup=False,
+                     update_backend=backend,
+                     hier=HierConfig(k1=2, k2=4, grid=(2, 3)),
+                     compress=compress, compress2=compress2)
+
+
+def _run_hier(cfg, steps=STEPS):
+    eng = make_engine(cfg, TEMPLATE)
+    s = eng.init(_params0(), 6)
+    step = jax.jit(lambda s, t: eng.train_step(
+        s, _hier_grads(eng.params_tree(s), t)))
+    for t in range(steps):
+        s = step(s, jnp.float32(t))
+    return eng, s
+
+
+def test_hier_per_level_compressors_track_reference():
+    """int8 intra-pod + harder topk cross-pod: per-level state buffers
+    exist at their level's shape and the trajectory tracks the
+    uncompressed hierarchical reference."""
+    cfg0 = _hier_cfg()
+    s0 = H.init(cfg0, _params0(), (2, 3))
+    step0 = jax.jit(lambda s, t: H.train_step(cfg0, s,
+                                              _hier_grads(s.params, t)))
+    for t in range(STEPS):
+        s0 = step0(s0, jnp.float32(t))
+    eng, s = _run_hier(_hier_cfg(compress=cc.parse_compressor("int8"),
+                                 compress2=cc.parse_compressor("topk:4")))
+    assert isinstance(s.comm, HierCommState)
+    r, c = eng.spec.rows, eng.spec.lanes
+    assert s.comm.resid1.shape == (2, 3, r, c)
+    assert s.comm.ref1.shape == (2, 1, r, c)
+    assert s.comm.resid2.shape == (2, 1, r, c)
+    assert s.comm.ref2.shape == (r, c)
+    err = _max_err(eng.params_tree(s), s0.params)
+    assert 0.0 < err < 0.12, err
+
+
+def test_hier_level2_only_compression():
+    """compress2 alone compresses ONLY the cross-pod sync: level-1 buffers
+    stay absent and the trajectory tracks the uncompressed reference."""
+    eng, s = _run_hier(_hier_cfg(compress2=cc.parse_compressor("int8")))
+    assert s.comm.resid1 == () and s.comm.ref1 == ()
+    assert isinstance(s.comm.ref2, jax.Array)
+    _, s0 = _run_hier(_hier_cfg())
+    err = float(jnp.max(jnp.abs(s.params - s0.params)))
+    assert 0.0 < err < 5e-3, err
+
+
+def test_hier_compressed_xla_matches_fused_bitwise():
+    c1, c2 = cc.parse_compressor("int8"), cc.parse_compressor("topk:4")
+    _, sx = _run_hier(_hier_cfg(compress=c1, compress2=c2, backend="xla"))
+    _, sf = _run_hier(_hier_cfg(compress=c1, compress2=c2, backend="fused"))
+    np.testing.assert_array_equal(np.asarray(sx.params),
+                                  np.asarray(sf.params))
+    np.testing.assert_array_equal(np.asarray(sx.comm.resid1),
+                                  np.asarray(sf.comm.resid1))
+    np.testing.assert_array_equal(np.asarray(sx.comm.resid2),
+                                  np.asarray(sf.comm.resid2))
+
+
+def test_hier_reference_executor_compressed():
+    """The per-leaf hierarchical reference executor carries per-level comm
+    state and tracks its own uncompressed trajectory."""
+    cfg0 = _hier_cfg()
+    cfgc = _hier_cfg(compress=cc.parse_compressor("int8"))
+    s0 = H.init(cfg0, _params0(), (2, 3))
+    sc = H.init(cfgc, _params0(), (2, 3))
+    assert isinstance(sc.comm, HierCommState)
+    step0 = jax.jit(lambda s, t: H.train_step(cfg0, s,
+                                              _hier_grads(s.params, t)))
+    stepc = jax.jit(lambda s, t: H.train_step(cfgc, s,
+                                              _hier_grads(s.params, t)))
+    for t in range(STEPS):
+        s0 = step0(s0, jnp.float32(t))
+        sc = stepc(sc, jnp.float32(t))
+    err = _max_err(sc.params, s0.params)
+    assert 0.0 < err < 5e-3, err
+
+
+# -------------------------------------------------------------- checkpoint
+def test_compressed_checkpoint_roundtrip_and_mismatch(tmp_path):
+    """Residual/ref buffers persist next to the flat state; restoring into
+    an engine with DIFFERENT compressors fails loudly (silently dropping
+    the carried error feedback would corrupt the next sync)."""
+    cfg = _cfg("vrl_sgd", compress=cc.parse_compressor("topk:4"))
+    eng, s = _run_engine(cfg, steps=5)
+    meta = cc.pair_meta(eng.compressors)
+    ckpt.save_flat_state(str(tmp_path / "c"), s, eng.spec, meta={"step": 5},
+                         compressors=meta)
+    restored = ckpt.restore_flat_state(str(tmp_path / "c"), s, eng.spec,
+                                       compressors=meta)
+    np.testing.assert_array_equal(np.asarray(restored.comm.resid),
+                                  np.asarray(s.comm.resid))
+    np.testing.assert_array_equal(np.asarray(restored.comm.ref),
+                                  np.asarray(s.comm.ref))
+    # a different compressor (or none at all) must refuse to restore
+    other = cc.pair_meta((cc.parse_compressor("int8"), None))
+    with pytest.raises(ValueError, match="compressor"):
+        ckpt.restore_flat_state(str(tmp_path / "c"), s, eng.spec,
+                                compressors=other)
+    with pytest.raises(ValueError, match="compressor"):
+        ckpt.restore_flat_state(str(tmp_path / "c"), s, eng.spec,
+                                compressors=None)

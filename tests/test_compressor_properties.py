@@ -1,0 +1,133 @@
+"""Property-based tests (hypothesis) for the sync-payload compressors.
+
+Own module (the ``test_schedule_properties.py`` pattern) so the
+module-level ``importorskip`` skips ONLY the randomized properties when
+hypothesis is absent — the deterministic compressed-engine tests in
+``test_compress_engine.py`` always run.
+
+Properties held by ``repro.comm.compressors``:
+
+  * rate-1 / ``none`` round-trips are the identity (and resolve to the
+    engine's uncompressed path);
+  * int8 per-row scaling is invariant under exact (power-of-two) payload
+    scaling — the quantization grid scales with the payload;
+  * top-k keeps exactly the k largest magnitudes of every row (wire
+    format) and the threshold round-trip agrees with it;
+  * the error-feedback invariant: residual + decompressed == payload,
+    BITWISE, for every compressor — the residual is a literal subtraction.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.comm import compressors as cc  # noqa: E402
+
+LANES = 16
+
+
+def _payload(seed: int, rows: int, scale: float):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, LANES))
+    return (scale * x).astype(jnp.float32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**20), rows=st.integers(1, 6),
+       scale=st.floats(1e-3, 1e3))
+def test_ef_invariant_bitwise(seed, rows, scale):
+    """resid + dec == payload exactly, for every compressor."""
+    x = _payload(seed, rows, scale)
+    for spec in [cc.parse_compressor("int8"), cc.parse_compressor("topk:4"),
+                 cc.parse_compressor("none")]:
+        dec, resid = cc.ef_roundtrip(spec, x)
+        np.testing.assert_array_equal(np.asarray(resid + dec),
+                                      np.asarray(x))
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**20), rows=st.integers(1, 6))
+def test_rate_one_roundtrip_is_identity(seed, rows):
+    """topk at rate 1 keeps every lane; both resolve to the identity
+    (= the engine's uncompressed path)."""
+    x = _payload(seed, rows, 1.0)
+    dec, resid = cc.ef_roundtrip(cc.CompressorSpec("topk", rate=1), x)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(x))
+    assert float(jnp.max(jnp.abs(resid))) == 0.0
+    assert cc.resolve(cc.parse_compressor("topk:1")) is None
+    assert cc.resolve(cc.parse_compressor("none")) is None
+    assert cc.resolve(None) is None
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**20), rows=st.integers(1, 6),
+       exp=st.integers(-8, 8))
+def test_int8_scale_invariance(seed, rows, exp):
+    """Per-row scaling: quantizing 2^n·x decompresses to exactly
+    2^n·dec(x) (power-of-two factors are exact in fp32, so the per-row
+    max/127 grid scales with the payload)."""
+    x = _payload(seed, rows, 1.0)
+    c = float(2.0 ** exp)
+    dec1, _ = cc.ef_int8(x)
+    dec2, _ = cc.ef_int8(c * x)
+    np.testing.assert_array_equal(np.asarray(dec2), np.asarray(c * dec1))
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**20), rows=st.integers(1, 6),
+       rate=st.sampled_from([2, 4, 8]))
+def test_topk_preserves_k_largest(seed, rows, rate):
+    """The wire format keeps exactly the k largest magnitudes per row, and
+    the threshold round-trip reconstructs the same dense buffer.  (Inputs
+    are continuous normals, so the exact-tie case — where threshold-keep
+    deliberately retains > k lanes, see ``ef_topk`` — does not arise.)"""
+    spec = cc.parse_compressor(f"topk:{rate}")
+    x = _payload(seed, rows, 1.0)
+    k = cc.topk_k(spec, LANES)
+    rep = cc.compress(spec, x)
+    assert rep.values.shape == (rows, k)
+    a = np.abs(np.asarray(x))
+    kept = np.abs(np.asarray(rep.values))
+    for r in range(rows):
+        expect = np.sort(a[r])[-k:]
+        np.testing.assert_allclose(np.sort(kept[r]), expect)
+    dense = cc.decompress(spec, rep, rows=rows, lanes=LANES)
+    dec, _ = cc.ef_topk(x, k)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(dec))
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**20), rows=st.integers(1, 6))
+def test_int8_wire_roundtrip_matches_ef(seed, rows):
+    """compress→decompress through the actual wire representation equals
+    the fused round-trip math, and the measured bytes match the formula."""
+    spec = cc.parse_compressor("int8")
+    x = _payload(seed, rows, 3.0)
+    rep = cc.compress(spec, x)
+    assert rep.values.dtype == jnp.int8
+    dense = cc.decompress(spec, rep, rows=rows, lanes=LANES)
+    dec, _ = cc.ef_int8(x)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(dec))
+    assert cc.rep_nbytes(rep) == cc.wire_bytes(
+        spec, rows=rows, lanes=LANES, size=rows * LANES)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**20), n=st.integers(1, 40),
+       lead=st.integers(1, 3))
+def test_ef_leaf_matches_padded_rows(seed, n, lead):
+    """The per-leaf reference round-trip equals the row round-trip over
+    the zero-padded ravel, and keeps the EF invariant on the leaf."""
+    spec = cc.parse_compressor("int8")
+    x = jax.random.normal(jax.random.PRNGKey(seed), (lead, n))
+    dec, resid = cc.ef_leaf(spec, x, 1, lanes=LANES)
+    assert dec.shape == x.shape
+    np.testing.assert_array_equal(np.asarray(resid + dec), np.asarray(x))
+    u = cc.used_rows(n, LANES)
+    pad = u * LANES - n
+    rows = jnp.pad(x, [(0, 0), (0, pad)]).reshape(lead, u, LANES)
+    dec2, _ = cc.ef_int8(rows)
+    np.testing.assert_array_equal(
+        np.asarray(dec2.reshape(lead, -1)[:, :n]), np.asarray(dec))

@@ -120,6 +120,26 @@ SCRIPT = textwrap.dedent("""
         stage_ar[str(k)] = count_ar(hlo_r)
     out["stage_round_ar"] = stage_ar
 
+    # compressed sync (repro.comm): compression changes the payload math,
+    # not the collective count — the round (and the sync alone) still
+    # lower to exactly ONE all-reduce (of the decompressed drift)
+    from repro.comm import compressors as cc_mod
+    comp_ar = {}
+    for comp_name in ("int8", "topk"):
+        c = dataclasses.replace(cfg,
+                                compress=cc_mod.parse_compressor(comp_name))
+        e = make_engine(c, template, mesh=mesh, worker_axes=("data",))
+        st = jax.tree.map(shard, e.init(p0, 8))
+        hlo_s = jax.jit(e.sync).lower(st).compile().as_text()
+        gk = jax.tree.map(lambda x: jnp.stack(
+            [jnp.sin(3.0 * x + t) + 0.1 * x for t in range(4)]),
+            e.params_tree(st))
+        hlo_r = jax.jit(e.round_step, donate_argnums=(0,)
+                        ).lower(st, gk).compile().as_text()
+        comp_ar[comp_name] = {"sync": count_ar(hlo_s),
+                              "round": count_ar(hlo_r)}
+    out["compressed_ar"] = comp_ar
+
     # numerics on the sharded mesh match the single-device reference
     step = jax.jit(lambda s, t: eng.train_step(
         s, grads(eng.params_tree(s), t)))
@@ -157,6 +177,10 @@ def test_fused_sync_is_one_flat_all_reduce():
         assert c["local"] == c["local_expect"], (name, c)
     # the stagewise round is one sync all-reduce at EVERY stage k
     assert out["stage_round_ar"] == {"1": 1, "2": 1, "4": 1}, out
+    # compression changes the payload, not the collective count: one sync
+    # all-reduce per round with int8 AND topk on
+    for comp_name, c in out["compressed_ar"].items():
+        assert c == {"sync": 1, "round": 1}, (comp_name, c)
     # and the sharded trajectory matches the reference path (sum/N vs mean
     # rounding differs, so a slightly looser bound than the 1-device parity)
     assert out["mesh_vs_reference_err"] < 1e-5, out
