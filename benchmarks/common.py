@@ -82,5 +82,28 @@ def timeit(fn, *args, iters=10, warmup_iters=2):
     return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
+def timeit_samples(fn, *args, iters=10, warmup_iters=2):
+    """Per-iteration wall-clock samples in µs (for p50/p95 tails — a mean
+    hides the straggler behavior the overlapped round is built to absorb)."""
+    for _ in range(warmup_iters):
+        jax.block_until_ready(fn(*args))
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return samples
+
+
+def percentile(samples, q):
+    """Nearest-rank percentile of a list of floats (no numpy dependency on
+    the caller's side; q in [0, 100])."""
+    xs = sorted(samples)
+    if not xs:
+        return 0.0
+    idx = min(len(xs) - 1, max(0, int(round(q / 100.0 * (len(xs) - 1)))))
+    return xs[idx]
+
+
 def csv(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}")

@@ -231,6 +231,24 @@ class VRLConfig:
     # ``repro.comm.compressors.resolve_pair``).
     compress: Optional[object] = None
     compress2: Optional[object] = None
+    # overlapped rounds: issue the sync collective at round START over the
+    # positions transmitted at the previous round boundary, so the
+    # all-reduce runs concurrently with the next round's local steps and
+    # its result is folded in one round stale (Δ is already a
+    # previous-round quantity, so the staleness rides the existing math).
+    # Engine/round-driver only (``round_step``); the per-step ``train_step``
+    # path stays blocking.  Hierarchical: overlaps the cross-pod sync2
+    # (the slow DCI tier) only; sync1 stays blocking.
+    overlap: bool = False
+    # straggler deadline: probability in [0, 1] that a participant misses
+    # a round's capture deadline (simulated per participant per round —
+    # single-host SPMD has no real per-worker clock).  A miss keeps the
+    # participant's last transmitted position in the overlap buffer (its
+    # stale value is what the next collective averages) and, under
+    # compressed sync, parks the missed payload in the EF residual.
+    # Requires ``overlap=True``; with compression, requires an
+    # error-feedback compressor.  0.0 disables (bitwise no-deadline path).
+    deadline: float = 0.0
 
 
 @dataclass(frozen=True)

@@ -118,6 +118,33 @@ extra buffers.  Executors: Pallas ``kernels/vrl_update.fused_ef_*`` (one
 HBM pass builds payload → decompressed + residual), jnp twins in
 ``kernels/xla_update``, and per-leaf ``repro.comm.compressors.ef_leaf`` on
 the reference path.
+
+Overlapped rounds (``VRLConfig.overlap``)
+-----------------------------------------
+
+The blocking round waits on the sync collective at every boundary.  With
+``overlap=True`` the round driver instead issues THE sync all-reduce at
+round START, over the positions every participant transmitted at the
+PREVIOUS boundary (``types.OverlapState.pend``), so the collective's data
+dependencies are all ready before the k-step ``lax.scan`` begins and the
+scheduler can run wire and compute concurrently; the one-round-stale mean
+is folded in at round end (``kernels/*.fused_fold_overlap*``):
+
+  c_i = x̂_stale − pend_i;   p' = p + c_i;   Δ' = Δ + c_i/(pend_k_i·γ)
+
+Σ_i c_i = 0, so the worker-mean trajectory is untouched and Σ_i Δ_i stays
+0 — VRL-SGD's Δ is already a previous-round quantity, so the staleness
+rides the existing math.  The compiled round still lowers to exactly one
+sync all-reduce per k steps.  ``deadline`` adds straggler tolerance: each
+round each participant misses its capture with that probability
+(simulated), keeps its last transmitted position (absolute positions make
+misses self-healing), and — under compressed sync — parks the missed
+payload in its EF residual.  Hierarchical runs overlap the cross-pod
+sync2 (the slow DCI tier) only; sync1 stays blocking.  ``overlap=False``
+builds the exact blocking program (no new buffers or ops, bitwise).  Only
+the round drivers (``round_step``/``round_begin``+``round_fold``)
+overlap; the per-step ``train_step`` path stays blocking and should not
+be mixed with overlapped rounds (it would not maintain ``pend``).
 """
 from __future__ import annotations
 
@@ -135,7 +162,8 @@ from repro.comm import compressors as comm_mod
 from repro.configs.base import HierConfig, VRLConfig
 from repro.core import flat
 from repro.core import schedule as schedule_mod
-from repro.core.types import CommState, HierCommState, HierState, WorkerState
+from repro.core.types import (CommState, HierCommState, HierState,
+                              OverlapState, WorkerState)
 from repro.kernels import vrl_update as vu
 from repro.kernels import xla_update as xu
 from repro.optim.optimizers import AdamState, make_inner
@@ -640,6 +668,9 @@ class FlatWorkerState(NamedTuple):
     bias: Any = ()
     comm: Any = ()              # compressed-sync CommState: resid (W, R, C)
                                 # fp32, ref (R, C) fp32 — () uncompressed
+    overlap: Any = ()           # overlapped-round OverlapState: pend
+                                # (W, R, C) fp32, pend_k (W, 1, 1) fp32 —
+                                # () when cfg.overlap is off
 
 
 class HierFlatState(NamedTuple):
@@ -662,6 +693,9 @@ class HierFlatState(NamedTuple):
     comm: Any = ()              # per-level HierCommState: resid1
                                 # (P, D, R, C), ref1 (P, 1, R, C), resid2
                                 # (P, 1, R, C), ref2 (R, C) — () uncompressed
+    overlap: Any = ()           # overlapped level-2 OverlapState: pend
+                                # (P, 1, R, C) fp32, pend_k (P, 1, 1, 1)
+                                # fp32 — () when cfg.overlap is off
 
 
 class Engine(NamedTuple):
@@ -685,6 +719,14 @@ class Engine(NamedTuple):
                                 # (hier: sync1 + conditional k2-cadence sync2)
     round_step_flat: Any = None  # (state, gk_buf) -> state: round over a
                                  # pre-flattened (k, W/grid, R, C) buffer
+    round_begin: Any = None     # overlap only: (state, k) -> x̂_stale, the
+                                # round-START sync collective (flat engines
+                                # ignore k; hier needs it for the k2
+                                # cadence).  None when overlap is off —
+                                # callers dispatch on that.
+    round_fold: Any = None      # overlap only: (state, x̂_stale) -> state,
+                                # the round-END stale fold (hier: blocking
+                                # sync1 + conditional level-2 fold)
     backend: str = "fused"      # resolved executor: "fused" | "xla"
     compressors: Any = (None, None)  # resolved (level-1, level-2)
                                      # CompressorSpecs (None = identity)
@@ -749,6 +791,31 @@ def _ef_op(ops, comp: comm_mod.CompressorSpec, lanes: int, *, grid: bool,
     return functools.partial(getattr(ops, name), **kwargs)
 
 
+def _validate_overlap(cfg: VRLConfig, algo: AlgoSpec, comp_overlapped):
+    """Reject config combinations the overlapped round cannot honor.
+    ``comp_overlapped`` is the compressor of the sync the overlap defers
+    (flat: ``compress``; hierarchical: the level-2 ``compress2``)."""
+    if not cfg.overlap:
+        if cfg.deadline:
+            raise ValueError(
+                "deadline is a property of the overlapped round; set "
+                "overlap=True (--overlap) to use it")
+        return
+    if algo.sync in ("none", "elastic"):
+        raise ValueError(
+            f"overlap defers a mean-style round-closing sync; "
+            f"{algo.name!r} (sync={algo.sync!r}) has none to defer")
+    if not 0.0 <= cfg.deadline <= 1.0:
+        raise ValueError(
+            f"deadline is a per-round miss probability in [0, 1]; got "
+            f"{cfg.deadline}")
+    if (cfg.deadline and comp_overlapped is not None
+            and not comp_overlapped.error_feedback):
+        raise ValueError(
+            "deadline misses park the skipped payload in the EF residual; "
+            "the overlapped sync's compressor needs error_feedback=True")
+
+
 # Adam moment/bias-correction bases.  Must equal optimizers.adam's defaults
 # (the reference executor) — the kernel gets these explicitly so the moment
 # update and the bias correction can never use different betas.
@@ -800,10 +867,14 @@ def _hier_pspecs(state: HierFlatState, pod_axis, data_axis) -> HierFlatState:
                               ref1=have(comm.ref1, podspec),
                               resid2=have(comm.resid2, podspec),
                               ref2=have(comm.ref2, P(None, None)))
+    ospec = ()
+    if isinstance(state.overlap, OverlapState):
+        # level-2 overlap buffers are per-pod (P, 1, ...): pod axis only
+        ospec = OverlapState(pend=podspec, pend_k=podspec)
     return HierFlatState(params=wspec, delta1=wspec,
                          delta2=P(pod_axis, None, None, None), inner=inner,
                          step=P(), last_sync1=P(), last_sync2=P(),
-                         comm=cspec)
+                         comm=cspec, overlap=ospec)
 
 
 def state_partition_specs(state, worker_axes,
@@ -854,6 +925,7 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
     lr, wd = cfg.learning_rate, cfg.weight_decay
     delta_dt = jnp.dtype(cfg.delta_dtype)
     comp, _comp2 = comm_mod.resolve_pair(cfg)
+    _validate_overlap(cfg, algo, _comp2 if algo.sync == "vrl2" else comp)
 
     if algo.sync == "vrl2":
         return _make_hier_engine(cfg, algo, fspec, mesh=mesh, ops=ops,
@@ -908,11 +980,19 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
             ref = (() if (algo.grad_all_reduce or algo.sync == "none")
                    else flat1.astype(jnp.float32))
             comm = CommState(resid=resid, ref=ref)
+        overlap = ()
+        if cfg.overlap:
+            # pend = the initial broadcast position (everyone "transmitted"
+            # x0 before step 0), so the first fold's correction is exactly
+            # zero; pend_k = 1 keeps its Δ scale finite
+            overlap = OverlapState(
+                pend=stacked.astype(jnp.float32).copy(),
+                pend_k=jnp.ones((num_workers, 1, 1), jnp.float32))
         return FlatWorkerState(params=stacked, delta=delta, inner=inner,
                                center=center,
                                step=jnp.zeros((), jnp.int32),
                                last_sync=jnp.zeros((), jnp.int32),
-                               bias=bias, comm=comm)
+                               bias=bias, comm=comm, overlap=overlap)
 
     # ------------------------------------------------- core step functions
     # These see LOCAL shards (W_local, R, C) when shard_mapped.
@@ -1026,6 +1106,89 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
                                 state, gk)
         return _core_sync(state)
 
+    # ------------------------------------------------- overlapped round
+    def _miss_mask(step: jax.Array, n: int) -> jax.Array:
+        """Per-participant (n, 1) deadline-miss mask for the round ending
+        at ``step``: 1 ⇒ the participant missed its capture deadline
+        (simulated per participant per round — a single-host SPMD run has
+        no real per-worker clock).  deadline=0 short-circuits to a
+        constant at trace time, so the no-deadline program is bitwise
+        identical."""
+        if not cfg.deadline:
+            return jnp.zeros((n, 1), jnp.float32)
+        key = jax.random.fold_in(jax.random.PRNGKey(0), step)
+        if axis_names is not None:
+            for a in axis_names:
+                key = jax.random.fold_in(key, jax.lax.axis_index(a))
+        u = jax.random.uniform(key, (n, 1))
+        return (u < cfg.deadline).astype(jnp.float32)
+
+    def _fold_overlap(state: FlatWorkerState, xbar: jax.Array
+                      ) -> FlatWorkerState:
+        """Apply the round-START collective's (one-round-stale) mean at
+        round end: fold c = x̂_stale − pend into params/Δ (+B), then
+        capture the new positions for the NEXT round's collective."""
+        ov = state.overlap
+        k_eff = jnp.maximum(state.step - state.last_sync, 1
+                            ).astype(jnp.float32)
+        km = _miss_mask(state.step, ov.pend.shape[0])          # (W_l, 1)
+        inv = 1.0 / (ov.pend_k[:, :, 0] * lr)                  # (W_l, 1)
+        wscal = jnp.concatenate([inv, km], axis=1).astype(jnp.float32)
+        km3 = km[:, :, None]
+        # a missed capture keeps pend and stretches the period it covers
+        new_pend_k = km3 * (ov.pend_k + k_eff) + (1.0 - km3) * k_eff
+        capture = comp is None
+        xb = xbar.astype(state.params.dtype)
+        if algo.sync == "average":
+            out = ops.fused_fold_overlap_avg(
+                state.params, xb, ov.pend, wscal, capture=capture,
+                block=block, interpret=interpret)
+            state = state._replace(params=out[0])
+            new_pend = out[1] if capture else None
+        elif algo.sync == "bvr" and bias_on:
+            out = ops.fused_fold_overlap_bvr(
+                state.params, xb, ov.pend, state.delta, state.bias,
+                wscal, beta=cfg.bvr_beta, capture=capture, block=block,
+                interpret=interpret)
+            state = state._replace(params=out[0], delta=out[1],
+                                   bias=out[2])
+            new_pend = out[3] if capture else None
+        else:
+            out = ops.fused_fold_overlap(
+                state.params, xb, ov.pend, state.delta, wscal,
+                capture=capture, block=block, interpret=interpret)
+            state = state._replace(params=out[0], delta=out[1])
+            new_pend = out[2] if capture else None
+        if comp is not None:
+            # compressed capture: transmit the folded position's drift
+            # against the stale mean through the EF round-trip; a missed
+            # deadline returns the whole decompressed payload to the
+            # residual (the worker never actually transmitted it)
+            cm = state.comm
+            e = cm.resid if comp.error_feedback else None
+            dec, e_out = ef_rt(state.params, xbar, e)
+            sent = xbar[None] + dec            # (W_l, R, C) absolute pos
+            new_pend = km3 * ov.pend + (1.0 - km3) * sent
+            resid = (e_out + km3 * dec if comp.error_feedback else ())
+            state = state._replace(comm=CommState(resid=resid, ref=xbar))
+        return state._replace(overlap=OverlapState(new_pend, new_pend_k),
+                              last_sync=state.step)
+
+    def _core_round_begin(state: FlatWorkerState) -> jax.Array:
+        return _wmean(state.overlap.pend)
+
+    def _core_round_overlap(state: FlatWorkerState, gk: jax.Array
+                            ) -> FlatWorkerState:
+        """Overlapped round: THE sync all-reduce is issued FIRST, over the
+        previous boundary's transmitted positions — its operands are ready
+        before the scan starts, so the scheduler can run the collective
+        concurrently with the k local steps — and its stale result is
+        folded in at the end.  Still one sync all-reduce per k steps."""
+        xbar = _core_round_begin(state)
+        state, _ = jax.lax.scan(lambda s, g: (_core_local(s, g), None),
+                                state, gk)
+        return _fold_overlap(state, xbar)
+
     # ----------------------------------------------------- shard_map wrap
     ax = None
     if axis_names is not None:
@@ -1047,7 +1210,33 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
     local_core = _sharded(_core_local, gspec=P(ax, None, None))
     sync_core = _sharded(_core_sync)
     train_core = _sharded(_core_train, gspec=P(ax, None, None))
-    round_core = _sharded(_core_round, gspec=P(None, ax, None, None))
+    round_core = _sharded(_core_round_overlap if cfg.overlap
+                          else _core_round, gspec=P(None, ax, None, None))
+
+    round_begin = round_fold = None
+    if cfg.overlap:
+        def round_begin(state, k: int = 0):
+            """The round-START collective: the stale mean the round will
+            fold (k is unused by the flat engine; the hierarchical twin
+            needs it for the k2 cadence)."""
+            del k
+            if axis_names is None:
+                return _core_round_begin(state)
+            sspec = _state_pspecs(state, axis_names)
+            return compat.shard_map(
+                _core_round_begin, mesh=mesh, in_specs=(sspec,),
+                out_specs=P(None, None), check_vma=False)(state)
+
+        def round_fold(state, xbar):
+            """Fold ``round_begin``'s result at round end (one round
+            stale by the local steps run in between)."""
+            if axis_names is None:
+                return _fold_overlap(state, xbar)
+            sspec = _state_pspecs(state, axis_names)
+            return compat.shard_map(
+                _fold_overlap, mesh=mesh,
+                in_specs=(sspec, P(None, None)), out_specs=sspec,
+                check_vma=False)(state, xbar)
 
     # --------------------------------------------------------- public API
     def _gbuf(grads: Any) -> jax.Array:
@@ -1092,7 +1281,9 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
                   sync=sync, average_model=avg_model,
                   params_tree=params_tree,
                   round_step=round_step, round_end=sync,
-                  round_step_flat=round_step_flat, backend=backend,
+                  round_step_flat=round_step_flat,
+                  round_begin=round_begin, round_fold=round_fold,
+                  backend=backend,
                   # store the resolve_pair form verbatim (level 2 is
                   # meaningless for flat algorithms but keeping the pair
                   # canonical means pair_meta(cfg) == pair_meta(engine
@@ -1175,11 +1366,19 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
                 resid2=(jnp.zeros((p_total, 1, *flat1.shape), jnp.float32)
                         if comp2 and comp2.error_feedback else ()),
                 ref2=(flat1.astype(jnp.float32) if comp2 else ()))
+        overlap = ()
+        if cfg.overlap:
+            # per-pod transmitted positions; pend = x0 so the first
+            # level-2 fold's correction is exactly zero
+            overlap = OverlapState(
+                pend=jnp.broadcast_to(flat1.astype(jnp.float32),
+                                      (p_total, 1, *flat1.shape)).copy(),
+                pend_k=jnp.ones((p_total, 1, 1, 1), jnp.float32))
         return HierFlatState(params=stacked, delta1=delta1, delta2=delta2,
                              inner=inner, step=jnp.zeros((), jnp.int32),
                              last_sync1=jnp.zeros((), jnp.int32),
                              last_sync2=jnp.zeros((), jnp.int32),
-                             comm=comm)
+                             comm=comm, overlap=overlap)
 
     # ------------------------------------------------- core step functions
     def _core_local(state: HierFlatState, g: jax.Array) -> HierFlatState:
@@ -1282,6 +1481,93 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
                                 state, gk)
         return _core_round_end(state)
 
+    # ------------------------------------------------- overlapped round
+    # Only the cross-pod sync2 — the slow DCI tier the roofline prices —
+    # is overlapped; the intra-pod sync1 stays blocking (ICI is cheap and
+    # the level-2 fold needs post-sync1 pod-uniform params).
+    def _miss_mask2(step: jax.Array, n: int) -> jax.Array:
+        """Per-pod (n, 1) deadline-miss mask (level 2's participants are
+        pods).  Same contract as the flat ``_miss_mask``."""
+        if not cfg.deadline:
+            return jnp.zeros((n, 1), jnp.float32)
+        key = jax.random.fold_in(jax.random.PRNGKey(0), step)
+        if pod_axis is not None:
+            key = jax.random.fold_in(key, jax.lax.axis_index(pod_axis))
+        u = jax.random.uniform(key, (n, 1))
+        return (u < cfg.deadline).astype(jnp.float32)
+
+    def _core_round_begin(state: HierFlatState, k: int) -> jax.Array:
+        """The level-2 collective issued at round START — only when this
+        round's closing step will land on the k2 cadence (the fold's
+        matching cond recomputes the same predicate after the scan
+        advanced ``step`` by k); otherwise zeros, which the fold never
+        reads."""
+        do2 = (state.step + k - state.last_sync2) >= k2
+        zeros = jnp.zeros(state.overlap.pend.shape[2:], jnp.float32)
+        return jax.lax.cond(do2, lambda s: _cross_mean(s.overlap.pend),
+                            lambda s: zeros, state)
+
+    def _fold2(state: HierFlatState, glob: jax.Array) -> HierFlatState:
+        """Apply the stale cross-pod mean: c_p = x̂_stale − pend2_p folds
+        into every worker of pod p (post-sync1, so the whole pod moves
+        together), Δ2 updates over the period pend covered, and the new
+        per-pod positions are captured for the next level-2 collective."""
+        ov = state.overlap
+        k_eff = jnp.maximum(state.step - state.last_sync2, 1
+                            ).astype(jnp.float32)
+        km = _miss_mask2(state.step, ov.pend.shape[0])         # (P_l, 1)
+        inv = 1.0 / (ov.pend_k[:, 0, :, 0] * lr)               # (P_l, 1)
+        wscal = jnp.concatenate([inv, km], axis=1).astype(jnp.float32)
+        km4 = km[:, :, None, None]
+        new_pend_k = km4 * (ov.pend_k + k_eff) + (1.0 - km4) * k_eff
+        capture = comp2 is None
+        if comp1 is not None:
+            # the fold shifts every worker of pod p by c_p: shift the
+            # shared intra-pod reference the same way so the next
+            # level-1 payload stays small
+            c_p = glob[None, None] - ov.pend
+            state = state._replace(
+                comm=state.comm._replace(ref1=state.comm.ref1 + c_p))
+        out = ops.fused_fold_overlap_hier2(
+            state.params, glob.astype(state.params.dtype), ov.pend,
+            state.delta2, wscal, capture=capture, block=block,
+            interpret=interpret)
+        state = state._replace(params=out[0], delta2=out[1])
+        if capture:
+            new_pend = out[2]
+        else:
+            # compressed level-2 capture: EF round-trip of the folded
+            # pod position's drift against the stale global mean
+            cm = state.comm
+            pod = state.params[:, 0]                         # (P_l, R, C)
+            e = cm.resid2[:, 0] if comp2.error_feedback else None
+            dec, e_out = ef2_rt(pod, glob, e)
+            sent = glob[None] + dec
+            new_pend = km4 * ov.pend + (1.0 - km4) * sent[:, None]
+            resid2 = ((e_out + km[:, :, None] * dec)[:, None]
+                      if comp2.error_feedback else ())
+            state = state._replace(comm=cm._replace(ref2=glob,
+                                                    resid2=resid2))
+        return state._replace(overlap=OverlapState(new_pend, new_pend_k),
+                              last_sync2=state.step)
+
+    def _core_round_end_overlap(state: HierFlatState, glob: jax.Array
+                                ) -> HierFlatState:
+        """Round-closing sync under overlap: the blocking level-1 sync,
+        then — iff this step lands on the k2 cadence — the stale level-2
+        fold of the round-START collective's result."""
+        state = _core_sync1(state)
+        do2 = (state.step - state.last_sync2) >= k2
+        return jax.lax.cond(do2, lambda s: _fold2(s, glob),
+                            lambda s: s, state)
+
+    def _core_round_overlap(state: HierFlatState, gk: jax.Array
+                            ) -> HierFlatState:
+        glob = _core_round_begin(state, gk.shape[0])
+        state, _ = jax.lax.scan(lambda s, g: (_core_local(s, g), None),
+                                state, gk)
+        return _core_round_end_overlap(state, glob)
+
     # ----------------------------------------------------- shard_map wrap
     def _sharded(fn, gspec: Optional[P] = None):
         if mesh is None or (pod_axis is None and data_axis is None):
@@ -1302,9 +1588,39 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
     sync_core = _sharded(_core_sync)
     sync1_core = _sharded(_core_sync1)
     sync2_core = _sharded(_core_sync2)
-    round_core = _sharded(_core_round,
+    round_core = _sharded(_core_round_overlap if cfg.overlap
+                          else _core_round,
                           gspec=P(None, pod_axis, data_axis, None, None))
     round_end_core = _sharded(_core_round_end)
+
+    round_begin = round_fold = None
+    if cfg.overlap:
+        meshless = mesh is None or (pod_axis is None and data_axis is None)
+
+        def round_begin(state, k: int):
+            """The round-START level-2 collective (zeros off the k2
+            cadence); ``k`` is this round's length, needed to decide the
+            cadence before the scan advances ``step``."""
+            _check_round()
+            if meshless:
+                return _core_round_begin(state, k)
+            sspec = _hier_pspecs(state, pod_axis, data_axis)
+            return compat.shard_map(
+                functools.partial(_core_round_begin, k=k), mesh=mesh,
+                in_specs=(sspec,), out_specs=P(None, None),
+                check_vma=False)(state)
+
+        def round_fold(state, glob):
+            """Blocking sync1 + (on the k2 cadence) the stale level-2
+            fold of ``round_begin``'s result."""
+            _check_round()
+            if meshless:
+                return _core_round_end_overlap(state, glob)
+            sspec = _hier_pspecs(state, pod_axis, data_axis)
+            return compat.shard_map(
+                _core_round_end_overlap, mesh=mesh,
+                in_specs=(sspec, P(None, None)), out_specs=sspec,
+                check_vma=False)(state, glob)
 
     # --------------------------------------------------------- public API
     def _gbuf(grads: Any) -> jax.Array:
@@ -1359,5 +1675,7 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
                   sync2=lambda s: sync2_core(s),
                   grid=(p_total, d_total),
                   round_step=round_step, round_end=round_end,
-                  round_step_flat=round_step_flat, backend=backend,
+                  round_step_flat=round_step_flat,
+                  round_begin=round_begin, round_fold=round_fold,
+                  backend=backend,
                   compressors=(comp1, comp2))

@@ -41,6 +41,14 @@ Cross-pod bytes drop by k2/k1 relative to flat VRL-SGD at period k1 while
 keeping the intra-pod variance correction tight — the right trade on
 hardware where DCI is the bottleneck (benchmarks/comm_complexity.py
 reports the measured per-axis bytes from the compiled production-mesh HLO).
+
+Overlapped rounds (``VRLConfig.overlap``, fused executor only): the SLOW
+collective is the cross-pod level-2 all-reduce, and that is the one the
+overlap hides — it is issued at round START over the per-pod positions
+transmitted at the previous k2 boundary and its stale mean folds into
+params/Δ2 at the boundary, while the cheap intra-pod sync1 stays blocking
+(pods stay internally exact).  ``VRLConfig.deadline`` simulates per-POD
+stragglers at level 2.  See the engine docstring for the full contract.
 """
 from __future__ import annotations
 

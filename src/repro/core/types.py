@@ -60,6 +60,34 @@ class HierCommState(NamedTuple):
     ref2: Any = ()
 
 
+class OverlapState(NamedTuple):
+    """Double-buffered overlap state for the overlapped round (one per
+    hierarchy level).
+
+    The overlapped round issues its sync collective at round START over the
+    positions every participant TRANSMITTED at the previous round boundary,
+    so the all-reduce runs concurrently with the next round's local steps
+    and the result is folded in one round stale (VRL-SGD's Δ is already a
+    previous-round quantity, so the staleness rides the existing math).
+
+    ``pend``: each participant's last transmitted *absolute* position —
+    flat engine: (W, R, C) fp32; hierarchical level 2: the per-pod
+    (P, 1, R, C) fp32 positions whose cross-pod mean is the overlapped
+    collective.  Absolute positions make straggler misses self-healing:
+    a participant that misses a capture deadline keeps its old ``pend``
+    (its last transmitted value is what the next collective averages) and
+    its shortfall is transmitted whole at its next successful capture
+    (compressed syncs park the shortfall in the EF residual instead).
+
+    ``pend_k``: per-participant elapsed local steps covered by ``pend``
+    ((W, 1, 1) / (P, 1, 1, 1) fp32) — the k_eff that scales the stale
+    fold's Δ update, accumulated across missed deadlines.
+    """
+
+    pend: Any
+    pend_k: Any
+
+
 class HierState(NamedTuple):
     """Two-level hierarchical VRL-SGD state (reference tree executor).
 

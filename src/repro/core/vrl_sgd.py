@@ -25,6 +25,16 @@ per-leaf reference path below, and the flat-buffer fused-Pallas path
 (``engine.make_engine``) where the whole update is one HBM pass and the
 sync's model average is a single all-reduce over the flattened parameters.
 See the engine module docstring for the flat layout and backend knob.
+
+Overlapped rounds (``VRLConfig.overlap``, engine-only): because Δ is a
+*previous-round* quantity already, the sync tolerates one round of
+staleness — the round-START all-reduce averages the positions transmitted
+at the PREVIOUS boundary and the fold applies c_i = x̂_stale − x_i^(sent)
+to x_i and Δ_i at the boundary (Δ_i scaled by the period that position
+covered).  Σ_i c_i = 0, so Σ_i Δ_i = 0 and eq. (8) on the mean survive;
+the collective runs concurrently with the next k local steps.  See the
+engine docstring ("Overlapped rounds") for the exact state and deadline
+semantics.
 """
 from __future__ import annotations
 

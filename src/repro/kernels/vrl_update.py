@@ -331,6 +331,196 @@ def fused_sync_bvr(p, xbar, d, b, scal, *, beta: float, block: int = 1024,
     )(p, xbar, d, b, scal)
 
 
+# ====================================================== overlapped-round fold
+# The overlapped round issues its sync all-reduce at round START over the
+# positions every worker TRANSMITTED at the previous boundary (the ``pend``
+# buffer of ``core.types.OverlapState``), so the collective runs concurrently
+# with the round's local steps.  These kernels apply the one-round-stale
+# result at round END, in one HBM pass:
+#
+#   c_i = x̂_stale − pend_i        the stale correction toward the mean
+#   p'  = p + c_i                  fold into the live (scanned) params
+#   Δ'  = Δ + c_i / (pend_k_i γ)   eq. 4 over the period pend covers
+#   pend'_i = km_i·pend_i + (1−km_i)·p'     capture for the NEXT collective
+#
+# Σ_i c_i = 0, so the worker-mean trajectory is untouched and ΣΔ stays 0.
+# ``wscal`` is a per-worker (W, 2) fp32 operand: column 0 = 1/(pend_k_i·γ)
+# (pend_k differs per worker once deadlines are missed), column 1 = km_i,
+# the miss mask (1 ⇒ the worker missed the capture deadline and keeps its
+# last transmitted position; its shortfall transmits whole next time).
+# ``capture=False`` drops the pend' output — the compressed-sync path
+# captures outside the kernel via the EF round-trip instead.
+
+def _wscal_spec(n: int):
+    """(1, n) per-worker row of a (W, n) operand, one row per grid worker."""
+    return pl.BlockSpec((1, n), lambda wi, i: (wi, 0))
+
+
+def _fold_overlap_kernel(*refs, use_delta: bool, use_bias: bool,
+                         beta: float, capture: bool):
+    p_ref, xb_ref, pend_ref = refs[0], refs[1], refs[2]
+    i = 3
+    d_ref = b_ref = None
+    if use_delta:
+        d_ref = refs[i]
+        i += 1
+    if use_bias:
+        b_ref = refs[i]
+        i += 1
+    s_ref = refs[i]
+    outs = list(refs[i + 1:])
+    pend = _f32(pend_ref)
+    c = _f32(xb_ref)[None] - pend    # stale correction x̂_stale − pend_i
+    pnew = _f32(p_ref) + c
+    po_ref = outs.pop(0)
+    po_ref[...] = pnew.astype(po_ref.dtype)
+    if use_delta:
+        inv = s_ref[0, 0]            # 1/(pend_k_i · γ)
+        do_ref = outs.pop(0)
+        do_ref[...] = (_f32(d_ref) + c * inv).astype(do_ref.dtype)
+    if use_bias:
+        inv = s_ref[0, 0]
+        bo_ref = outs.pop(0)
+        bo_ref[...] = ((1.0 - beta) * _f32(b_ref) + beta * c * inv
+                       ).astype(bo_ref.dtype)
+    if capture:
+        km = s_ref[0, 1]             # 1 ⇒ missed deadline: keep old pend
+        pendo_ref = outs.pop(0)
+        pendo_ref[...] = (km * pend + (1.0 - km) * pnew
+                          ).astype(pendo_ref.dtype)
+
+
+def _fold_call(p, xbar, pend, d, b, wscal, *, beta, capture, block,
+               interpret):
+    """Shared pallas_call builder for the flat overlapped-round folds."""
+    if interpret is None:
+        interpret = default_interpret()
+    w, r, c = p.shape
+    use_delta, use_bias = d is not None, b is not None
+    ins = ((p, xbar, pend) + ((d,) if use_delta else ())
+           + ((b,) if use_bias else ()))
+    n3 = len(ins) - 1               # (W, R, C) operands (all but xbar)
+    s3 = _grid_specs(w, r, c, block, n3)
+    xb_spec = pl.BlockSpec((block, c), lambda wi, i: (i, 0))
+    in_specs = [s3[0], xb_spec] + s3[1:] + [_wscal_spec(2)]
+    n_out = 1 + use_delta + use_bias + capture
+    out_shape = [jax.ShapeDtypeStruct((w, r, c), p.dtype)]
+    if use_delta:
+        out_shape.append(jax.ShapeDtypeStruct((w, r, c), d.dtype))
+    if use_bias:
+        out_shape.append(jax.ShapeDtypeStruct((w, r, c), b.dtype))
+    if capture:
+        out_shape.append(jax.ShapeDtypeStruct((w, r, c), pend.dtype))
+    # donate every state buffer onto its output: p→p', Δ→Δ', B→B',
+    # pend→pend' (operand index: xbar sits at 1, pend at 2)
+    aliases = {0: 0}
+    oi = 1
+    if use_delta:
+        aliases[3] = oi
+        oi += 1
+    if use_bias:
+        aliases[3 + use_delta] = oi
+        oi += 1
+    if capture:
+        aliases[2] = oi
+    return pl.pallas_call(
+        functools.partial(_fold_overlap_kernel, use_delta=use_delta,
+                          use_bias=use_bias, beta=beta, capture=capture),
+        grid=(w, r // block),
+        in_specs=in_specs,
+        out_specs=[s3[0]] * n_out,
+        out_shape=out_shape,
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(*ins, wscal)
+
+
+def fused_fold_overlap(p, xbar, pend, d, wscal, *, capture: bool = True,
+                       block: int = 1024, interpret=None):
+    """Stale-sync fold for the VRL algorithms, one pass over (W, R, C).
+
+      c = x̂_stale − pend;  p' = p + c;  Δ' = Δ + c/(pend_k γ);
+      pend' = km·pend + (1−km)·p'
+
+    ``xbar``: (R, C) — the round-start all-reduce over pend (stale by one
+    round).  ``wscal``: (W, 2) fp32 [1/(pend_k_i·γ), km_i] per worker.
+    Returns (p', Δ', pend'), all donated; ``capture=False`` returns
+    (p', Δ') and leaves the capture to the caller (compressed sync).
+    """
+    return _fold_call(p, xbar, pend, d, None, wscal, beta=0.0,
+                      capture=capture, block=block, interpret=interpret)
+
+
+def fused_fold_overlap_bvr(p, xbar, pend, d, b, wscal, *, beta: float,
+                           capture: bool = True, block: int = 1024,
+                           interpret=None):
+    """BVR-L-SGD stale fold: the VRL fold plus the bias-variate EMA
+    B' = (1−β)B + β·c/(pend_k γ).  Returns (p', Δ', B'[, pend'])."""
+    return _fold_call(p, xbar, pend, d, b, wscal, beta=beta,
+                      capture=capture, block=block, interpret=interpret)
+
+
+def fused_fold_overlap_avg(p, xbar, pend, wscal, *, capture: bool = True,
+                           block: int = 1024, interpret=None):
+    """Average-sync stale fold (local_sgd / stl_sgd): p' = p + c only —
+    no Δ.  Returns (p'[, pend'])."""
+    return _fold_call(p, xbar, pend, None, None, wscal, beta=0.0,
+                      capture=capture, block=block, interpret=interpret)
+
+
+def _fold_overlap_hier2_kernel(*refs, capture: bool):
+    p_ref, g_ref, pend_ref, d2_ref, s_ref = refs[:5]
+    po_ref, do_ref = refs[5], refs[6]
+    pend = _f32(pend_ref)
+    c = _f32(g_ref)[None] - pend     # stale cross-pod correction per pod
+    pnew = _f32(p_ref) + c
+    po_ref[...] = pnew.astype(po_ref.dtype)
+    inv = s_ref[0, 0]                # 1/(pend_k2_p · γ)
+    do_ref[...] = (_f32(d2_ref) + c * inv).astype(do_ref.dtype)
+    if capture:
+        km = s_ref[0, 1]
+        pendo_ref = refs[7]
+        pendo_ref[...] = (km * pend + (1.0 - km) * pnew
+                          ).astype(pendo_ref.dtype)
+
+
+def fused_fold_overlap_hier2(p, glob, pend2, d2, wscal, *,
+                             capture: bool = True, block: int = 1024,
+                             interpret=None):
+    """Level-2 stale fold: c = x̂_stale − pend2_p folded into every worker
+    of pod p, Δ2' = Δ2 + c/(pend_k2 γ), pend2' captured per pod.
+
+    Assumes a level-1 sync at the same step (like ``fused_sync_hier2``),
+    so every worker's folded params equal its pod average and the per-pod
+    outputs are well-defined.  ``glob``: (R, C) stale cross-pod mean;
+    ``wscal``: (P, 2).  The intra-pod grid dim is innermost; the D
+    revisits of each Δ2'/pend2' block write identical values, so those
+    buffers are NOT donated (aliasing would feed revisit di+1 the
+    already-updated block).  Returns (p', Δ2'[, pend2']) with p donated.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    pp, dd, r, c = p.shape
+    wspec = pl.BlockSpec((1, 1, block, c), lambda pi, i, di: (pi, di, i, 0))
+    podspec = pl.BlockSpec((1, 1, block, c), lambda pi, i, di: (pi, 0, i, 0))
+    gspec = pl.BlockSpec((block, c), lambda pi, i, di: (i, 0))
+    sspec = pl.BlockSpec((1, 2), lambda pi, i, di: (pi, 0))
+    out_specs = [wspec, podspec] + ([podspec] if capture else [])
+    out_shape = [jax.ShapeDtypeStruct(p.shape, p.dtype),
+                 jax.ShapeDtypeStruct(d2.shape, d2.dtype)] \
+        + ([jax.ShapeDtypeStruct(pend2.shape, pend2.dtype)]
+           if capture else [])
+    return pl.pallas_call(
+        functools.partial(_fold_overlap_hier2_kernel, capture=capture),
+        grid=(pp, r // block, dd),
+        in_specs=[wspec, gspec, podspec, podspec, sspec],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(p, glob, pend2, d2, wscal)
+
+
 def _easgd_worker_kernel(p_ref, c_ref, po_ref, *, a: float):
     p = _f32(p_ref)
     c = _f32(c_ref)[None]       # (block, C) broadcast over the worker dim

@@ -138,6 +138,86 @@ def fused_sync_easgd(p, xbar, center, *, a: float, na: float,
     return new_p, new_c
 
 
+# ====================================================== overlapped-round fold
+# Twins of the ``vrl_update.fused_fold_overlap*`` kernels: apply the
+# round-START all-reduce's one-round-stale result at round END.
+#   c = x̂_stale − pend;  p' = p + c;  Δ' = Δ + c/(pend_k γ);
+#   pend' = km·pend + (1−km)·p'
+# ``wscal``: per-participant (W, 2) fp32 [1/(pend_k·γ), miss mask km].
+
+def fused_fold_overlap(p, xbar, pend, d, wscal, *, capture: bool = True,
+                       block: int = 0, interpret=None):
+    """Stale-sync fold for the VRL algorithms on (W, R, C) buffers.
+    Returns (p', Δ', pend'); ``capture=False`` returns (p', Δ') and
+    leaves the pend capture to the caller (compressed sync)."""
+    del block, interpret
+    pend32 = _f32(pend)
+    c = _f32(xbar)[None] - pend32
+    pnew = _f32(p) + c
+    inv = wscal[:, 0][:, None, None]
+    new_d = (_f32(d) + c * inv).astype(d.dtype)
+    if not capture:
+        return pnew.astype(p.dtype), new_d
+    km = wscal[:, 1][:, None, None]
+    new_pend = (km * pend32 + (1.0 - km) * pnew).astype(pend.dtype)
+    return pnew.astype(p.dtype), new_d, new_pend
+
+
+def fused_fold_overlap_bvr(p, xbar, pend, d, b, wscal, *, beta: float,
+                           capture: bool = True, block: int = 0,
+                           interpret=None):
+    """BVR-L-SGD stale fold: the VRL fold plus B' = (1−β)B + β·c/(pend_k γ).
+    Returns (p', Δ', B'[, pend'])."""
+    del block, interpret
+    pend32 = _f32(pend)
+    c = _f32(xbar)[None] - pend32
+    pnew = _f32(p) + c
+    inv = wscal[:, 0][:, None, None]
+    new_d = (_f32(d) + c * inv).astype(d.dtype)
+    new_b = ((1.0 - beta) * _f32(b) + beta * c * inv).astype(b.dtype)
+    if not capture:
+        return pnew.astype(p.dtype), new_d, new_b
+    km = wscal[:, 1][:, None, None]
+    new_pend = (km * pend32 + (1.0 - km) * pnew).astype(pend.dtype)
+    return pnew.astype(p.dtype), new_d, new_b, new_pend
+
+
+def fused_fold_overlap_avg(p, xbar, pend, wscal, *, capture: bool = True,
+                           block: int = 0, interpret=None):
+    """Average-sync stale fold (local_sgd / stl_sgd): p' = p + c only.
+    Returns (p'[, pend'])."""
+    del block, interpret
+    pend32 = _f32(pend)
+    c = _f32(xbar)[None] - pend32
+    pnew = _f32(p) + c
+    if not capture:
+        return (pnew.astype(p.dtype),)
+    km = wscal[:, 1][:, None, None]
+    new_pend = (km * pend32 + (1.0 - km) * pnew).astype(pend.dtype)
+    return pnew.astype(p.dtype), new_pend
+
+
+def fused_fold_overlap_hier2(p, glob, pend2, d2, wscal, *,
+                             capture: bool = True, block: int = 0,
+                             interpret=None):
+    """Level-2 stale fold on (P, D, R, C) buffers; assumes a level-1 sync
+    at the same step (worker params equal their pod average, read off
+    worker 0 like ``fused_sync_hier2``).  ``glob``: (R, C); ``pend2``/
+    ``d2``: (P, 1, R, C); ``wscal``: (P, 2).  Returns (p', Δ2'[, pend2'])."""
+    del block, interpret
+    pend32 = _f32(pend2)
+    c = _f32(glob)[None, None] - pend32          # (P, 1, R, C) per pod
+    pnew = _f32(p) + c                           # broadcast over D
+    inv = wscal[:, 0][:, None, None, None]
+    new_d2 = (_f32(d2) + c * inv).astype(d2.dtype)
+    if not capture:
+        return pnew.astype(p.dtype), new_d2
+    km = wscal[:, 1][:, None, None, None]
+    pod_new = _f32(p[:, :1]) + c                 # per-pod folded position
+    new_pend = (km * pend32 + (1.0 - km) * pod_new).astype(pend2.dtype)
+    return pnew.astype(p.dtype), new_d2, new_pend
+
+
 # ==================================================== compressed-sync twins
 # EF round-trips of the sync payload's drift (repro.comm): payload =
 # p − ref + resid, compressed and decompressed in one fused chain; the

@@ -254,6 +254,7 @@ def lower_one(arch_id: str, shape_id: str, *, multi_pod: bool,
               comm_period: int = 20, k1: int = 5, k2: int = 20,
               comm_schedule: Optional[str] = None, round_k: int = 0,
               backend: str = "fused",
+              overlap: bool = False, deadline: float = 0.0,
               compress: Optional[str] = None,
               compress2: Optional[str] = None,
               mesh_override: Optional[dict] = None,
@@ -312,6 +313,7 @@ def lower_one(arch_id: str, shape_id: str, *, multi_pod: bool,
     vrl_cfg = vrl_cfg or VRLConfig(
         algorithm=algorithm, comm_period=comm_period, hier=hier,
         comm_schedule=sched, update_backend=backend,
+        overlap=overlap, deadline=deadline,
         compress=(comm_mod.parse_compressor(compress) if compress
                   else None),
         compress2=(comm_mod.parse_compressor(compress2) if compress2
@@ -472,8 +474,11 @@ def lower_one(arch_id: str, shape_id: str, *, multi_pod: bool,
     hlo = compiled.as_text()
     # the hierarchical level-2 sync's only collective crosses pods: its
     # bytes ride the slow DCI tier in the roofline (sync1/locals are ICI)
+    # an overlapped round hides its collective behind the k local steps:
+    # the roofline prices only the exposed remainder in the bottleneck
     roof = rl.analyze(name, compiled, hlo, mf, chips,
-                      dci_fraction=1.0 if fn_kind == "sync2" else 0.0)
+                      dci_fraction=1.0 if fn_kind == "sync2" else 0.0,
+                      overlap=(fn_kind == "round" and vrl_cfg.overlap))
     # per-level compressed wire bytes of the sync payload, next to the
     # raw-payload collective bytes the HLO measures
     c1, c2 = comm_mod.resolve_pair(vrl_cfg)
@@ -553,6 +558,15 @@ def main(argv=None) -> int:
     ap.add_argument("--comm-schedule", default=None,
                     help="stagewise round schedule for the train lowerings "
                          "(const|stagewise[:k0:rounds:k_max]|custom:kxr,..)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="lower the OVERLAPPED round (fn=round): the sync "
+                         "collective is issued at round start over the "
+                         "previous boundary's transmitted positions and "
+                         "folds one-round-stale; the roofline prices only "
+                         "the exposed collective remainder")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="straggler miss probability per participant per "
+                         "round (requires --overlap; 0 disables)")
     ap.add_argument("--round-k", type=int, default=0,
                     help="fn=round: round length to lower (a stagewise "
                          "run compiles one such executable per stage k); "
@@ -615,6 +629,7 @@ def main(argv=None) -> int:
                             unrolled=args.unrolled or args.two_layer,
                             algorithm=args.algorithm,
                             backend=args.backend, k1=args.k1, k2=args.k2,
+                            overlap=args.overlap, deadline=args.deadline,
                             comm_schedule=args.comm_schedule,
                             round_k=args.round_k,
                             compress=args.compress,

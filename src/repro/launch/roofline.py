@@ -129,6 +129,9 @@ class Roofline:
     dci_bytes: float = 0.0      # share of coll_bytes riding the slow
                                 # cross-pod DCI tier (hier sync2)
     coll_detail: dict = dataclasses.field(default_factory=dict)
+    overlap: bool = False       # overlapped rounds: the sync collective
+                                # runs concurrently with the local steps,
+                                # hidden up to min(coll, k*local)
 
     @property
     def t_compute(self) -> float:
@@ -148,9 +151,27 @@ class Roofline:
         return ici / ICI_LINK_BW + self.dci_bytes / DCI_LINK_BW
 
     @property
+    def t_coll_hidden(self) -> float:
+        """Collective time hidden behind the round's local steps under
+        overlapped rounds: up to min(coll, k·local), where k·local is
+        the round's on-device work (the larger of its compute and memory
+        terms).  0 when overlap is off."""
+        if not self.overlap:
+            return 0.0
+        return min(self.t_collective, max(self.t_compute, self.t_memory))
+
+    @property
+    def t_coll_exposed(self) -> float:
+        """Collective time actually on the critical path (== the full
+        collective term when overlap is off)."""
+        return self.t_collective - self.t_coll_hidden
+
+    @property
     def bottleneck(self) -> str:
+        """Largest term, with the collective priced at its EXPOSED time —
+        identical to the blocking classification when overlap is off."""
         terms = {"compute": self.t_compute, "memory": self.t_memory,
-                 "collective": self.t_collective}
+                 "collective": self.t_coll_exposed}
         return max(terms, key=terms.get)
 
     @property
@@ -164,11 +185,28 @@ class Roofline:
                 f"{self.bottleneck:10s} | {self.useful_ratio:6.3f}")
 
 
+def round_walltime(t_local: float, t_coll: float, *,
+                   overlap: bool) -> float:
+    """Predicted wall-clock of one communication round from its two
+    measured (or modeled) pieces: the k local steps and the sync
+    collective.  Blocking rounds serialize them; overlapped rounds hide
+    the collective behind the local steps, exposing only the excess
+    max(coll − k·local, 0).  ``benchmarks/step_time.bench_overlap``
+    reconciles this prediction against the measured overlapped round."""
+    if not overlap:
+        return t_local + t_coll
+    return t_local + max(t_coll - t_local, 0.0)
+
+
 def analyze(name: str, compiled, hlo_text: str, model_flops: float,
-            chips: int, dci_fraction: float = 0.0) -> Roofline:
+            chips: int, dci_fraction: float = 0.0,
+            overlap: bool = False) -> Roofline:
     """``dci_fraction``: share of the collective bytes that cross the slow
     DCI tier (1.0 for the hierarchical level-2 sync, whose only collective
-    is the cross-pod all-reduce; 0 for purely intra-pod lowerings)."""
+    is the cross-pod all-reduce; 0 for purely intra-pod lowerings).
+    ``overlap``: the lowering was an overlapped round — its collective is
+    hidden up to min(coll, k·local) and the bottleneck classification
+    prices only the exposed remainder."""
     cost = compiled.cost_analysis()
     if isinstance(cost, list):  # older jax returns [dict]
         cost = cost[0]
@@ -178,4 +216,5 @@ def analyze(name: str, compiled, hlo_text: str, model_flops: float,
     total = coll.get("total", 0.0)
     return Roofline(name=name, hlo_flops=flops, hlo_bytes=nbytes,
                     coll_bytes=total, model_flops=model_flops, chips=chips,
-                    dci_bytes=total * dci_fraction, coll_detail=coll)
+                    dci_bytes=total * dci_fraction, coll_detail=coll,
+                    overlap=overlap)

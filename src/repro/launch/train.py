@@ -83,6 +83,20 @@ def main(argv=None) -> int:
                     default=True,
                     help="dispatch every local step from python instead of "
                          "compiling one scan-fused round per comm period")
+    ap.add_argument("--overlap", action="store_true",
+                    help="overlapped rounds: issue the sync all-reduce at "
+                         "round START over the previous boundary's "
+                         "transmitted positions, so it runs concurrently "
+                         "with the round's local steps and the one-round-"
+                         "stale mean is folded in at the end (hier: "
+                         "overlaps the cross-pod sync2 only).  Needs round "
+                         "execution and an engine backend.")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="straggler deadline: per-round probability in "
+                         "[0, 1] that a participant misses its capture "
+                         "(simulated), keeps its last transmitted position "
+                         "and — under compressed sync — parks the missed "
+                         "payload in its EF residual.  Requires --overlap.")
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--batch", type=int, default=8, help="per-worker batch")
     ap.add_argument("--seq", type=int, default=64)
@@ -136,11 +150,16 @@ def main(argv=None) -> int:
         raise SystemExit("--compress2 drives the hierarchical cross-pod "
                          "sync2; flat algorithms have one level "
                          "(--compress)")
+    if args.overlap and not args.round:
+        raise SystemExit("--overlap hides the sync behind the next round's "
+                         "local steps, which needs round execution; drop "
+                         "--no-round")
     vrl = VRLConfig(algorithm=args.algorithm, comm_period=args.k,
                     learning_rate=args.lr, warmup=args.warmup,
                     update_backend=args.backend, bvr_beta=args.bvr_beta,
                     comm_schedule=sched_arg, compress=comp_arg,
-                    compress2=comp2_arg,
+                    compress2=comp2_arg, overlap=args.overlap,
+                    deadline=args.deadline,
                     engine=EngineConfig(block=args.block,
                                         round_scan=args.round), hier=hier)
     sched = engine_mod.comm_schedule(vrl)    # explicit or the algo default
@@ -177,6 +196,12 @@ def main(argv=None) -> int:
         es = bundle.engine.spec
         print(f"engine: flat buffer {es.rows}x{es.lanes} "
               f"({es.padded - es.size} pad elems), block={es.block}")
+    if args.overlap:
+        print(f"overlap: sync collective issued at round start (one-round-"
+              f"stale fold at the boundary"
+              + (f"; cross-pod sync2 only, sync1 blocking" if hier else "")
+              + (f"), deadline: miss prob {args.deadline}"
+                 if args.deadline else ")"))
     comps = (bundle.engine.compressors if bundle.engine is not None
              else comm_mod.resolve_pair(vrl))
     if any(c is not None for c in comps) and bundle.engine is not None:
@@ -240,8 +265,13 @@ def main(argv=None) -> int:
             if args.steps - t < rk:
                 # tail shorter than a round: finish per-step so the sync
                 # cadence matches the per-step driver exactly (no
-                # off-cadence closing sync, no extra whole-round compile)
-                step = jax.jit(bundle.train_step)
+                # off-cadence closing sync, no extra whole-round compile).
+                # Under overlap the per-step sync would not maintain the
+                # pend buffer, so the tail runs local steps only — its
+                # contribution folds at the next boundary, which never
+                # comes (the tail is the end of the run).
+                step = jax.jit(bundle.local_step if args.overlap
+                               else bundle.train_step)
                 while t < args.steps:
                     toks = jnp.asarray(data[t])
                     labels = jnp.roll(toks, -1, axis=-1)

@@ -156,6 +156,11 @@ def make_train_step(model_cfg: ModelConfig, vrl_cfg: VRLConfig,
         return round_step
 
     backend = engine_mod.resolve_backend(vrl_cfg)
+    if backend == "reference" and vrl_cfg.overlap:
+        raise ValueError(
+            "overlap needs the flat-buffer engine (its double-buffered "
+            "pend state); update_backend='reference' has no overlapped "
+            "round — use 'auto', 'xla' or 'fused'")
     if backend != "reference":
         template = jax.eval_shape(functools.partial(
             transformer.init_params, model_cfg, dtype=param_dtype),
@@ -181,9 +186,27 @@ def make_train_step(model_cfg: ModelConfig, vrl_cfg: VRLConfig,
                                              dtype=param_dtype)
             return eng.init(params, num_workers)
 
-        round_step = _make_round(grads_fn,
-                                 lambda s, g: eng.local_step(s, g),
-                                 eng.round_end)
+        if eng.round_begin is not None:
+            # overlapped round: issue the sync collective FIRST (over the
+            # previous boundary's transmitted positions — no dependency on
+            # this round's steps), scan the k local steps, fold the stale
+            # result at the end.  Same signature as the blocking round, so
+            # RoundCache/benches/drivers are agnostic.
+            def round_step(state, tokens_k, labels_k):
+                k = jax.tree.leaves(tokens_k)[0].shape[0]
+                xbar = eng.round_begin(state, k)
+
+                def body(s, tl):
+                    grads, loss = grads_fn(s, tl[0], tl[1])
+                    return eng.local_step(s, grads), loss
+
+                state, losses = jax.lax.scan(body, state,
+                                             (tokens_k, labels_k))
+                return eng.round_fold(state, xbar), losses
+        else:
+            round_step = _make_round(grads_fn,
+                                     lambda s, g: eng.local_step(s, g),
+                                     eng.round_end)
         return StepBundle(init_state, train_step, local_step, eng.sync,
                           grads_fn, eng.average_model, eng,
                           sync1_step=eng.sync1, sync2_step=eng.sync2,

@@ -1,0 +1,505 @@
+"""Overlapped rounds: the sync collective hidden behind the next round's
+local steps (``VRLConfig.overlap``), with straggler-tolerant deadlines
+(``VRLConfig.deadline``).
+
+The contract under test:
+
+* ``overlap=False`` is BITWISE the existing blocking round — the overlap
+  machinery must be invisible when off (no extra state, no trace change).
+* ``overlap=True`` matches a one-round-stale oracle exactly: the round-START
+  collective averages the positions each participant transmitted at the
+  PREVIOUS boundary, and the fold applies c_i = x̂_stale − pend_i to
+  params/Δ (+B) with Δ scaled by the period pend actually covered
+  (``pend_k``).  Σ_i c_i = 0, so the mean trajectory is preserved.
+* Composition: stagewise schedules (variable k feeds ``pend_k``),
+  compression (the capture rides the EF round-trip; a missed deadline
+  parks the decompressed payload back in the residual), hierarchy
+  (overlap applies to the cross-pod level-2 sync only; sync1 blocking).
+* ``deadline=1.0`` degenerates to pure-local training (everyone always
+  retransmits x0, so every correction is exactly zero); ``deadline=0.0``
+  is bitwise the no-deadline overlap program (trace-time short-circuit).
+* Systems: RoundCache still compiles one executable per distinct k, the
+  round jit still donates EVERY state buffer (pend included — the stale-Δ
+  double buffer must update in place), and on a multi-device mesh the
+  overlapped round still lowers to exactly ONE sync all-reduce per k
+  steps (the point: same communication, less exposed latency).
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import compressors as cc
+from repro.configs.base import HierConfig, VRLConfig
+from repro.core import RoundCache, make_engine
+from repro.core.schedule import custom_stages
+from repro.core.types import CommState, OverlapState
+
+W, K = 4, 4
+
+TEMPLATE = {"w": jnp.zeros((8, 3)), "b": jnp.zeros((5,)),
+            "deep": {"u": jnp.zeros((2, 2, 4))}}
+
+LR = 0.05
+
+
+def _params0():
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    return {"w": jax.random.normal(ks[0], (8, 3)),
+            "b": jax.random.normal(ks[1], (5,)),
+            "deep": {"u": jax.random.normal(ks[2], (2, 2, 4))}}
+
+
+def _grads_t(p0, t, lead=(W,)):
+    n = int(np.prod(lead))
+
+    def one(x):
+        phase = jnp.arange(n, dtype=x.dtype).reshape(lead + (1,) * x.ndim)
+        big = jnp.broadcast_to(x, lead + x.shape)
+        return jnp.sin(3.0 * big + 0.7 * t + phase) + 0.1 * x
+
+    return jax.tree.map(one, p0)
+
+
+def _stack(gs):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *gs)
+
+
+def _cfg(alg, backend, k=K, **kw):
+    kw.setdefault("overlap", True)
+    return VRLConfig(algorithm=alg, comm_period=k, learning_rate=LR,
+                     weight_decay=0.0, warmup=False, update_backend=backend,
+                     **kw)
+
+
+# ------------------------------------------------- the one-round-stale oracle
+def _oracle_fold(state, xbar, pend, pend_k, k_eff, *, lr=LR, bvr_beta=0.0,
+                 comp=None, resid=None):
+    """The overlap fold in numpy: returns (state', pend', pend_k', resid').
+
+    Locals already ran (via the engine's own verified ``local_step``); this
+    implements ONLY the boundary math the overlapped round adds."""
+    c = xbar[None] - pend
+    params = np.asarray(state.params, np.float32) + c
+    rep = {"params": jnp.asarray(params).astype(state.params.dtype)}
+    inv = 1.0 / (pend_k * lr)
+    if isinstance(state.delta, jax.Array):
+        delta = np.asarray(state.delta, np.float32) + c * inv
+        rep["delta"] = jnp.asarray(delta).astype(state.delta.dtype)
+    if bvr_beta and isinstance(state.bias, jax.Array):
+        bias = ((1.0 - bvr_beta) * np.asarray(state.bias, np.float32)
+                + bvr_beta * c * inv)
+        rep["bias"] = jnp.asarray(bias).astype(state.bias.dtype)
+    if comp is None:
+        new_pend, new_resid = params.copy(), None
+    else:
+        payload = params - xbar[None] + (resid if resid is not None else 0.0)
+        dec, e_out = (np.asarray(a) for a in
+                      cc.ef_roundtrip(comp, jnp.asarray(payload,
+                                                        jnp.float32)))
+        new_pend = xbar[None] + dec
+        new_resid = e_out if comp.error_feedback else None
+        rep["comm"] = CommState(resid=jnp.asarray(new_resid),
+                                ref=jnp.asarray(xbar))
+    new_pend_k = np.full_like(pend_k, float(k_eff))
+    state = state._replace(
+        overlap=OverlapState(pend=jnp.asarray(new_pend, jnp.float32),
+                             pend_k=jnp.asarray(new_pend_k, jnp.float32)),
+        last_sync=state.step, **rep)
+    return state, new_pend, new_pend_k, new_resid
+
+
+def _run_oracle(eng, p0, round_grads, *, bvr_beta=0.0, comp=None):
+    """Drive the overlapped trajectory piecewise: engine local steps +
+    numpy fold, starting from the engine's own init."""
+    state = eng.init(p0, W)
+    local = jax.jit(eng.local_step)
+    pend = np.asarray(state.overlap.pend, np.float32)
+    pend_k = np.asarray(state.overlap.pend_k, np.float32)
+    resid = (np.asarray(state.comm.resid, np.float32)
+             if comp is not None and comp.error_feedback else None)
+    for gs in round_grads:
+        xbar = pend.mean(0)
+        for g in gs:
+            state = local(state, g)
+        k_eff = max(int(state.step) - int(state.last_sync), 1)
+        state, pend, pend_k, resid = _oracle_fold(
+            state, xbar, pend, pend_k, k_eff, bvr_beta=bvr_beta,
+            comp=comp, resid=resid)
+    return state
+
+
+def _assert_state_close(s_eng, s_ora, fields=("params", "delta"),
+                        atol=1e-5):
+    for name in fields:
+        a, b = getattr(s_eng, name), getattr(s_ora, name)
+        if not isinstance(a, jax.Array):
+            continue
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=atol, err_msg=name)
+    np.testing.assert_allclose(np.asarray(s_eng.overlap.pend),
+                               np.asarray(s_ora.overlap.pend),
+                               atol=atol, err_msg="pend")
+    np.testing.assert_array_equal(np.asarray(s_eng.overlap.pend_k),
+                                  np.asarray(s_ora.overlap.pend_k))
+
+
+# --------------------------------------------------------------- off = bitwise
+@pytest.mark.parametrize("backend", ["xla", "fused"])
+def test_overlap_off_is_bitwise_blocking(backend):
+    """overlap=False must be the EXISTING blocking round, bit for bit:
+    same state layout (no pend buffers), same compiled trajectory."""
+    cfg_def = VRLConfig(algorithm="vrl_sgd", comm_period=K,
+                        learning_rate=LR, weight_decay=0.0, warmup=False,
+                        update_backend=backend)
+    cfg_off = dataclasses.replace(cfg_def, overlap=False, deadline=0.0)
+    p0 = _params0()
+    states = []
+    for cfg in (cfg_def, cfg_off):
+        eng = make_engine(cfg, TEMPLATE)
+        assert eng.round_begin is None and eng.round_fold is None
+        s = eng.init(p0, W)
+        assert s.overlap == ()
+        rstep = jax.jit(eng.round_step)
+        for r in range(2):
+            s = rstep(s, _stack([_grads_t(p0, r * K + i)
+                                 for i in range(K)]))
+        states.append(s)
+    np.testing.assert_array_equal(np.asarray(states[0].params),
+                                  np.asarray(states[1].params))
+    np.testing.assert_array_equal(np.asarray(states[0].delta),
+                                  np.asarray(states[1].delta))
+
+
+# ------------------------------------------------------------- oracle parity
+@pytest.mark.parametrize("backend", ["xla", "fused"])
+@pytest.mark.parametrize("alg", ["vrl_sgd", "local_sgd", "bvr_l_sgd"])
+def test_overlap_matches_stale_oracle(alg, backend):
+    """3 overlapped rounds == the one-round-stale oracle (engine local
+    steps + the fold math in numpy) for a Δ algorithm, an averaging-only
+    sync, and the EMA bias variate — on both engine executors."""
+    beta = 0.25 if alg == "bvr_l_sgd" else 0.0
+    kw = {"bvr_beta": beta} if beta else {}
+    cfg = _cfg(alg, backend, **kw)
+    eng = make_engine(cfg, TEMPLATE)
+    p0 = _params0()
+    grads = [[_grads_t(p0, r * K + i) for i in range(K)] for r in range(3)]
+
+    s_eng = eng.init(p0, W)
+    rstep = jax.jit(eng.round_step, donate_argnums=(0,))
+    for gs in grads:
+        s_eng = rstep(s_eng, _stack(gs))
+    s_ora = _run_oracle(eng, p0, grads, bvr_beta=beta)
+    _assert_state_close(s_eng, s_ora, fields=("params", "delta", "bias"))
+    assert int(s_eng.last_sync) == int(s_ora.last_sync) == 3 * K
+
+
+def test_overlap_stagewise_schedule():
+    """Variable-k rounds (stagewise CommSchedule through the RoundCache)
+    still match the oracle: pend_k must carry each round's OWN length into
+    the next fold's Δ scale."""
+    sched = custom_stages([(1, 2), (2, 2), (4, 2)])
+    cfg = _cfg("vrl_sgd", "xla", comm_schedule=sched)
+    eng = make_engine(cfg, TEMPLATE)
+    p0 = _params0()
+    t_total = sched.total_steps()
+    gs = [_grads_t(p0, t) for t in range(t_total)]
+
+    s_eng = eng.init(p0, W)
+    rcache = RoundCache(eng.round_step)
+    t = 0
+    rounds = []
+    for k in sched.round_sizes(t_total):
+        s_eng = rcache(s_eng, _stack(gs[t:t + k]))
+        rounds.append(gs[t:t + k])
+        t += k
+    s_ora = _run_oracle(eng, p0, rounds)
+    _assert_state_close(s_eng, s_ora)
+    assert float(s_eng.overlap.pend_k[0, 0, 0]) == 4.0   # the last stage's k
+
+
+def test_overlap_compressed_capture_matches_oracle():
+    """int8+EF composition: the captured pend is the TRANSMITTED position
+    (x̂_stale + dec), the quantization shortfall stays in the residual, and
+    ref re-anchors to the stale mean — all against the numpy oracle built
+    on ``comm.compressors.ef_roundtrip``."""
+    comp = cc.parse_compressor("int8")
+    cfg = _cfg("vrl_sgd", "xla", compress=comp)
+    eng = make_engine(cfg, TEMPLATE)
+    p0 = _params0()
+    grads = [[_grads_t(p0, r * K + i) for i in range(K)] for r in range(3)]
+
+    s_eng = eng.init(p0, W)
+    rstep = jax.jit(eng.round_step, donate_argnums=(0,))
+    for gs in grads:
+        s_eng = rstep(s_eng, _stack(gs))
+    s_ora = _run_oracle(eng, p0, grads, comp=cc.resolve(comp))
+    _assert_state_close(s_eng, s_ora)
+    np.testing.assert_allclose(np.asarray(s_eng.comm.resid),
+                               np.asarray(s_ora.comm.resid), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_eng.comm.ref),
+                               np.asarray(s_ora.comm.ref), atol=1e-5)
+
+
+# ------------------------------------------------------------------ deadlines
+def test_deadline_all_miss_is_pure_local():
+    """deadline=1.0: nobody ever captures, so every participant keeps
+    transmitting x0 — all corrections are exactly zero (Δ stays 0, pend
+    stays the init broadcast), pend_k stretches by k per round, and the
+    params follow the pure-local trajectory bit for bit."""
+    cfg = _cfg("vrl_sgd", "xla", deadline=1.0)
+    eng = make_engine(cfg, TEMPLATE)
+    p0 = _params0()
+    rounds = 3
+    s = eng.init(p0, W)
+    pend0 = np.asarray(s.overlap.pend).copy()
+    rstep = jax.jit(eng.round_step, donate_argnums=(0,))
+    for r in range(rounds):
+        s = rstep(s, _stack([_grads_t(p0, r * K + i) for i in range(K)]))
+    assert not np.asarray(s.delta).any()
+    np.testing.assert_array_equal(np.asarray(s.overlap.pend), pend0)
+    np.testing.assert_array_equal(np.asarray(s.overlap.pend_k),
+                                  np.full((W, 1, 1), 1.0 + rounds * K,
+                                          np.float32))
+    s_loc = eng.init(p0, W)
+    local = jax.jit(eng.local_step)
+    for t in range(rounds * K):
+        s_loc = local(s_loc, _grads_t(p0, t))
+    np.testing.assert_array_equal(np.asarray(s.params),
+                                  np.asarray(s_loc.params))
+
+
+def test_deadline_zero_is_bitwise_no_deadline():
+    """deadline=0.0 short-circuits at trace time: the program is bitwise
+    the plain overlap program (no PRNG, no mask arithmetic)."""
+    p0 = _params0()
+    outs = []
+    for dl in (0.0, None):
+        kw = {} if dl is None else {"deadline": dl}
+        eng = make_engine(_cfg("vrl_sgd", "xla", **kw), TEMPLATE)
+        s = eng.init(p0, W)
+        rstep = jax.jit(eng.round_step)
+        for r in range(2):
+            s = rstep(s, _stack([_grads_t(p0, r * K + i)
+                                 for i in range(K)]))
+        outs.append(s)
+    for name in ("params", "delta"):
+        np.testing.assert_array_equal(np.asarray(getattr(outs[0], name)),
+                                      np.asarray(getattr(outs[1], name)))
+    np.testing.assert_array_equal(np.asarray(outs[0].overlap.pend),
+                                  np.asarray(outs[1].overlap.pend))
+
+
+# ------------------------------------------------------------------ hierarchy
+def test_overlap_hier_matches_stale_oracle():
+    """Hierarchical overlap: sync1 stays blocking, ONLY the cross-pod
+    level-2 sync overlaps.  4 rounds at (k1, k2) = (2, 4) cross two k2
+    boundaries; the engine round must match the piecewise oracle (engine
+    locals + engine sync1 + the level-2 fold in numpy)."""
+    grid = (2, 3)
+    cfg = VRLConfig(algorithm="hier_vrl_sgd", learning_rate=LR,
+                    weight_decay=0.0, update_backend="xla", overlap=True,
+                    hier=HierConfig(k1=2, k2=4, grid=grid))
+    eng = make_engine(cfg, TEMPLATE)
+    p0 = _params0()
+    s_eng, s_ora = eng.init(p0, 6), eng.init(p0, 6)
+    rstep = jax.jit(eng.round_step, donate_argnums=(0,))
+    local, sync1 = jax.jit(eng.local_step), jax.jit(eng.sync1)
+    pend = np.asarray(s_ora.overlap.pend, np.float32)    # (P, 1, R, C)
+    pend_k = np.asarray(s_ora.overlap.pend_k, np.float32)
+    for r in range(4):
+        gs = [_grads_t(p0, 2 * r + i, lead=grid) for i in range(2)]
+        s_eng = rstep(s_eng, _stack(gs))
+        # oracle: level-2 collective at round START (iff the round's end
+        # lands on the k2 cadence), locals, blocking sync1, stale fold
+        do2 = (int(s_ora.step) + 2 - int(s_ora.last_sync2)) >= 4
+        glob = pend.mean(axis=0)[0] if do2 else None
+        for g in gs:
+            s_ora = local(s_ora, g)
+        s_ora = sync1(s_ora)
+        if do2:
+            k_eff = max(int(s_ora.step) - int(s_ora.last_sync2), 1)
+            c = glob[None, None] - pend                  # (P, 1, R, C)
+            params = np.asarray(s_ora.params, np.float32) + c
+            delta2 = (np.asarray(s_ora.delta2, np.float32)
+                      + c / (pend_k * LR))
+            pend = params[:, :1].copy()
+            pend_k = np.full_like(pend_k, float(k_eff))
+            s_ora = s_ora._replace(
+                params=jnp.asarray(params).astype(s_ora.params.dtype),
+                delta2=jnp.asarray(delta2).astype(s_ora.delta2.dtype),
+                overlap=OverlapState(jnp.asarray(pend, jnp.float32),
+                                     jnp.asarray(pend_k, jnp.float32)),
+                last_sync2=s_ora.step)
+    for name in ("params", "delta1", "delta2"):
+        np.testing.assert_allclose(np.asarray(getattr(s_eng, name)),
+                                   np.asarray(getattr(s_ora, name)),
+                                   atol=1e-5, err_msg=name)
+    np.testing.assert_allclose(np.asarray(s_eng.overlap.pend),
+                               np.asarray(s_ora.overlap.pend), atol=1e-5)
+    assert int(s_eng.last_sync2) == int(s_ora.last_sync2) == 8
+
+
+# ------------------------------------------------------------ systems checks
+def test_round_cache_one_executable_per_k_under_overlap():
+    """The overlap round keys on k exactly like the blocking one: the
+    cache retraces once per distinct k and never on re-feeds."""
+    cfg = _cfg("vrl_sgd", "xla")
+    eng = make_engine(cfg, TEMPLATE)
+    p0 = _params0()
+    state = eng.init(p0, W)
+    rcache = RoundCache(eng.round_step)
+    for k in (2, 3, 2, 3, 2):
+        state = rcache(state, _stack([_grads_t(p0, i) for i in range(k)]))
+    assert rcache.compiles == 2
+    assert rcache.cached_ks == (2, 3)
+
+
+def test_overlap_round_donates_all_state_buffers():
+    """The round jit aliases EVERY state array to an output — including
+    the pend double buffer (the stale-Δ state must update in place, not
+    copy: that buffer is param-sized x W)."""
+    cfg = _cfg("vrl_sgd", "xla")
+    eng = make_engine(cfg, TEMPLATE)
+    state = eng.init(_params0(), W)
+    gk = _stack([_grads_t(_params0(), i) for i in range(K)])
+    hlo = jax.jit(eng.round_step, donate_argnums=(0,)
+                  ).lower(state, gk).compile().as_text()
+    n_state_arrays = len(jax.tree.leaves(state))  # p, Δ, step, last, pend(2)
+    assert n_state_arrays == 6
+    assert "input_output_alias" in hlo
+    assert hlo.count("may-alias") + hlo.count("must-alias") >= n_state_arrays
+
+
+def test_overlap_validation():
+    """Config combinations with no defined overlap semantics refuse at
+    engine construction, and the reference backend refuses in the train
+    loop (it has no double-buffered flat state to overlap)."""
+    with pytest.raises(ValueError, match="overlap"):
+        make_engine(_cfg("ssgd", "xla"), TEMPLATE)        # sync="none"
+    with pytest.raises(ValueError, match="overlap"):
+        make_engine(_cfg("easgd", "xla"), TEMPLATE)       # sync="elastic"
+    with pytest.raises(ValueError, match="deadline"):
+        make_engine(_cfg("vrl_sgd", "xla", overlap=False, deadline=0.5),
+                    TEMPLATE)
+    with pytest.raises(ValueError, match="deadline"):
+        make_engine(_cfg("vrl_sgd", "xla", deadline=1.5), TEMPLATE)
+    with pytest.raises(ValueError, match="error.feedback|residual"):
+        make_engine(_cfg("vrl_sgd", "xla", deadline=0.5,
+                         compress=cc.parse_compressor("int8:noef")),
+                    TEMPLATE)
+
+    from repro.configs import registry
+    from repro.train.train_loop import make_train_step
+    mcfg = registry.smoke_arch("qwen2-0.5b", num_layers=1, d_model=32,
+                               d_ff=64, vocab_size=32, num_heads=2,
+                               num_kv_heads=1, head_dim=16)
+    with pytest.raises(ValueError, match="flat-buffer"):
+        make_train_step(mcfg, _cfg("vrl_sgd", "reference"), remat=False)
+
+
+# --------------------------------------------- collective count on a real mesh
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses
+    import json
+    import re
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs.base import VRLConfig
+    from repro.core import make_engine
+
+    mesh = jax.make_mesh((8,), ("data",), devices=jax.devices())
+    template = {"w": jnp.zeros((64, 16)), "b": jnp.zeros((33,))}
+    p0 = {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 16)),
+          "b": jax.random.normal(jax.random.PRNGKey(1), (33,))}
+    base = VRLConfig(algorithm="vrl_sgd", comm_period=4, learning_rate=0.05,
+                     weight_decay=0.0, warmup=False, update_backend="fused",
+                     overlap=True)
+
+    def count_ar(hlo):
+        return len(re.findall(r"all-reduce(?:-start)?\\(", hlo))
+
+    def shard(x):
+        nd = getattr(x, "ndim", 0)
+        spec = P("data", None, None) if nd == 3 else P(*([None] * nd))
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    def ar_depends_on_scan(hlo):
+        \"\"\"True iff the entry computation's all-reduce (transitively)
+        consumes the local-step scan while-loop's output.  Blocking rounds
+        must (mean of post-scan positions); overlapped rounds must NOT —
+        the collective's operands are previous-boundary state, the dataflow
+        independence a latency-hiding scheduler needs to run it
+        concurrently with the local steps.\"\"\"
+        lines = hlo.splitlines()
+        entry = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+        defs, whiles, ar_ops = {}, set(), []
+        for line in lines[entry:]:
+            m = re.match(r"\\s*(?:ROOT\\s+)?%([\\w.-]+)\\s*=\\s*(.*)", line)
+            if not m:
+                continue
+            name, rhs = m.groups()
+            defs[name] = re.findall(r"%([\\w.-]+)", rhs)
+            if "while(" in rhs:
+                whiles.add(name)
+            if re.search(r"all-reduce(?:-start)?\\(", rhs):
+                ar_ops.extend(defs[name])
+        seen, frontier = set(), list(ar_ops)
+        while frontier:
+            n = frontier.pop()
+            if n in seen:
+                continue
+            seen.add(n)
+            frontier.extend(defs.get(n, []))
+        return bool(seen & whiles)
+
+    out = {}
+    for label, cfg in [
+            ("fused", base),
+            ("xla", dataclasses.replace(base, update_backend="xla")),
+            ("deadline", dataclasses.replace(base, deadline=0.3)),
+            ("blocking", dataclasses.replace(base, overlap=False))]:
+        eng = make_engine(cfg, template, mesh=mesh, worker_axes=("data",))
+        state = jax.tree.map(shard, eng.init(p0, 8))
+        gk = jax.tree.map(lambda x: jnp.stack(
+            [jnp.sin(3.0 * x + t) + 0.1 * x for t in range(4)]),
+            eng.params_tree(state))
+        hlo = jax.jit(eng.round_step, donate_argnums=(0,)
+                      ).lower(state, gk).compile().as_text()
+        out[label] = count_ar(hlo)
+        out[label + "_ar_on_scan"] = ar_depends_on_scan(hlo)
+    print(json.dumps(out))
+""")
+
+
+def test_overlap_round_is_one_all_reduce_on_mesh():
+    """On an 8-device mesh the OVERLAPPED round still compiles to exactly
+    ONE sync all-reduce per k steps — on both executors, with a deadline
+    on (the miss mask is axis_index arithmetic, not communication), and
+    unchanged for the blocking round it replaces.  Structurally, the
+    overlapped program's all-reduce no longer DEPENDS on the local-step
+    scan while-loop (its operands are previous-boundary state), which is
+    the dataflow independence a latency-hiding scheduler needs to run the
+    collective concurrently; the blocking round's all-reduce consumes the
+    scan's output."""
+    env = dict(os.environ, PYTHONPATH="src")
+    res = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stderr[-2000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    counts = {k: v for k, v in out.items() if not k.endswith("_ar_on_scan")}
+    assert counts == {"fused": 1, "xla": 1, "deadline": 1, "blocking": 1}, out
+    assert not (out["fused_ar_on_scan"] or out["xla_ar_on_scan"]
+                or out["deadline_ar_on_scan"]), out
+    assert out["blocking_ar_on_scan"], out
