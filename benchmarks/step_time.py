@@ -11,6 +11,7 @@ trajectory is tracked from PR 1 onward.
 from __future__ import annotations
 
 import json
+import math
 import os
 import time
 
@@ -20,7 +21,7 @@ import jax.numpy as jnp
 from benchmarks.common import csv, percentile, timeit, timeit_samples
 from repro.comm import compressors as cc
 from repro.configs import registry
-from repro.configs.base import HierConfig, VRLConfig
+from repro.configs.base import EngineConfig, HierConfig, VRLConfig
 from repro.core import flat, get_algorithm, hierarchical, make_engine, \
     resolve_backend
 from repro.launch import roofline as rl
@@ -65,16 +66,36 @@ def _mlp_template(key, dim: int):
             "b2": jnp.zeros((dim,))}
 
 
+def _tree_nbytes(tree) -> int:
+    """Total bytes of a pytree's leaves (arrays or ShapeDtypeStructs)."""
+    return int(sum(math.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+                   for l in jax.tree.leaves(tree)))
+
+
+def _skip_interpret(include_interpret: bool) -> bool:
+    """True when the fused rows should be skipped: Pallas would run in
+    interpret mode here (auto resolves away from it), the timings measure
+    python dispatch rather than the kernel, and they dominate CI wall
+    clock.  ``--include-interpret`` opts back in."""
+    return not include_interpret and resolve_backend("auto") != "fused"
+
+
 def bench_engine(*, workers: int = 4, dims=(256, 1024), iters: int = 10,
-                 out_path: str = "BENCH_engine.json") -> dict:
+                 out_path: str = "BENCH_engine.json",
+                 include_interpret: bool = False) -> dict:
     """Fused flat-buffer engine vs reference tree path, update math only.
 
     Times one local step and one sync at each model size (n_params ≈
     2·dim² + 2·dim per worker).  On CPU the Pallas kernels run in interpret
-    mode, so the fused numbers here bound bookkeeping overhead, not HBM
-    traffic — the dry-run/roofline artifacts carry the TPU story.
+    mode — those fused rows measure python dispatch, not HBM traffic, so
+    they are SKIPPED by default off-TPU/GPU (``--include-interpret`` opts
+    back in); the dry-run/roofline artifacts carry the TPU story.  Each
+    size row also records ``engine_state_bytes``, the total bytes the flat
+    engine persists between steps (params + Δ + moments across workers).
     """
-    results = {"workers": workers, "sizes": {}}
+    skip = _skip_interpret(include_interpret)
+    results = {"workers": workers, "sizes": {},
+               "fused_skipped": skip}
     for dim in dims:
         params = _mlp_template(jax.random.PRNGKey(0), dim)
         n_params = sum(p.size for p in jax.tree.leaves(params))
@@ -82,7 +103,7 @@ def bench_engine(*, workers: int = 4, dims=(256, 1024), iters: int = 10,
             lambda x: jnp.broadcast_to(jnp.sin(x), (workers, *x.shape)),
             params)
         row = {"n_params": int(n_params)}
-        for backend in ["reference", "fused"]:
+        for backend in (["reference"] if skip else ["reference", "fused"]):
             cfg = VRLConfig(algorithm="vrl_sgd", comm_period=20,
                             learning_rate=0.01, weight_decay=1e-4,
                             update_backend=backend)
@@ -105,6 +126,12 @@ def bench_engine(*, workers: int = 4, dims=(256, 1024), iters: int = 10,
             csv(f"engine/{backend}/local_step/d{dim}", us_local,
                 f"{n_params/1e6:.2f}M params x {workers} workers")
             csv(f"engine/{backend}/sync/d{dim}", us_sync, "")
+        cfg_x = VRLConfig(algorithm="vrl_sgd", comm_period=20,
+                          learning_rate=0.01, weight_decay=1e-4,
+                          update_backend="xla")
+        eng_x = make_engine(cfg_x, jax.eval_shape(lambda: params))
+        row["engine_state_bytes"] = _tree_nbytes(
+            jax.eval_shape(lambda: eng_x.init(params, workers)))
         results["sizes"][str(dim)] = row
     results["backend"] = jax.default_backend()
     _merge_json(out_path, results)
@@ -129,15 +156,24 @@ def _merge_json(out_path: str, updates: dict) -> None:
 
 def bench_hierarchical(*, grid=(2, 2), k1: int = 2, k2: int = 4,
                        dims=(256, 1024), iters: int = 10,
-                       out_path: str = "BENCH_engine.json") -> dict:
-    """Two-level engine, fused flat-buffer vs reference tree path.
+                       out_path: str = "BENCH_engine.json",
+                       include_interpret: bool = False) -> dict:
+    """Two-level engine, flat-buffer executor vs reference tree path.
 
     Times one local step (both Δ corrections fused in), each sync level
     alone, and the composed k2-boundary — the numbers land under
     ``hierarchical`` in BENCH_engine.json next to bench_engine's flat rows.
+    The engine rows run the fused Pallas executor on TPU/GPU; off those
+    backends Pallas would interpret, so the rows fall back to the xla
+    executor (``engine_backend`` records which; ``--include-interpret``
+    forces fused anyway) — the rows stay keyed "fused" so the artifact's
+    shape is stable across hosts.
     """
     p_, d_ = grid
-    hier = {"grid": list(grid), "k1": k1, "k2": k2, "sizes": {}}
+    engine_backend = ("xla" if _skip_interpret(include_interpret)
+                      else "fused")
+    hier = {"grid": list(grid), "k1": k1, "k2": k2,
+            "engine_backend": engine_backend, "sizes": {}}
     for dim in dims:
         params = _mlp_template(jax.random.PRNGKey(0), dim)
         n_params = sum(p.size for p in jax.tree.leaves(params))
@@ -145,12 +181,13 @@ def bench_hierarchical(*, grid=(2, 2), k1: int = 2, k2: int = 4,
             lambda x: jnp.broadcast_to(jnp.sin(x), (p_, d_, *x.shape)),
             params)
         cfg = VRLConfig(algorithm="hier_vrl_sgd", learning_rate=0.01,
-                        weight_decay=1e-4, update_backend="fused",
+                        weight_decay=1e-4, update_backend=engine_backend,
                         hier=HierConfig(k1=k1, k2=k2, grid=grid))
         row = {"n_params": int(n_params)}
 
         eng = make_engine(cfg, jax.eval_shape(lambda: params))
         state = eng.init(params, p_ * d_)
+        row["engine_state_bytes"] = _tree_nbytes(state)
         flocal = jax.jit(eng.local_step)
         fs1, fs2 = jax.jit(eng.sync1), jax.jit(eng.sync2)
         fsync = jax.jit(eng.sync)
@@ -185,8 +222,10 @@ def bench_hierarchical(*, grid=(2, 2), k1: int = 2, k2: int = 4,
 
 
 def _bench_rounds_alg(alg_name: str, *, workers: int, k: int, dims,
-                      iters: int, fused_iters: int, auto: str) -> dict:
+                      iters: int, fused_iters: int, auto: str,
+                      include_interpret: bool = False) -> dict:
     """One algorithm's round timings per backend at every model size."""
+    skip = _skip_interpret(include_interpret)
     sizes = {}
     for dim in dims:
         params = _mlp_template(jax.random.PRNGKey(0), dim)
@@ -217,7 +256,7 @@ def _bench_rounds_alg(alg_name: str, *, workers: int, k: int, dims,
         row["reference"] = _stats(timeit_samples(
             lambda: ref_round(rstate), iters=iters))
 
-        for backend in ["xla", "fused"]:
+        for backend in (["xla"] if skip else ["xla", "fused"]):
             cfg = VRLConfig(algorithm=alg_name, comm_period=k,
                             learning_rate=0.01, weight_decay=1e-4,
                             update_backend=backend)
@@ -230,6 +269,8 @@ def _bench_rounds_alg(alg_name: str, *, workers: int, k: int, dims,
             # donation chains: every call's input is the previous call's
             # (freshly allocated) output, so the donated buffers stay live
             box = [eng.init(params, workers)]
+            if backend == "xla":
+                row["engine_state_bytes"] = _tree_nbytes(box[0])
 
             def one_round():
                 box[0] = rstep(box[0], gk_buf)
@@ -239,11 +280,14 @@ def _bench_rounds_alg(alg_name: str, *, workers: int, k: int, dims,
             row[backend] = _stats(timeit_samples(one_round, iters=it,
                                                  warmup_iters=1))
         for backend in ["reference", "xla", "fused"]:
+            if backend not in row:
+                continue
             csv(f"engine/rounds/{alg_name}/{backend}/d{dim}",
                 row[backend]["round_us"],
                 f"{n_params/1e6:.2f}M params x {workers} workers, k={k}")
-        row["fused_over_reference"] = round(
-            row["fused"]["round_us"] / row["reference"]["round_us"], 3)
+        if "fused" in row:
+            row["fused_over_reference"] = round(
+                row["fused"]["round_us"] / row["reference"]["round_us"], 3)
         row["auto_over_reference"] = round(
             row[auto]["round_us"] / row["reference"]["round_us"], 3)
         sizes[str(dim)] = row
@@ -252,7 +296,7 @@ def _bench_rounds_alg(alg_name: str, *, workers: int, k: int, dims,
 
 def bench_rounds(*, workers: int = 4, k: int = 8, dims=(256, 1024),
                  iters: int = 5, out_path: str = "BENCH_engine.json",
-                 fused_iters: int = 1,
+                 fused_iters: int = 1, include_interpret: bool = False,
                  algs=("vrl_sgd",)) -> dict:
     """Round execution per backend vs the reference per-step path.
 
@@ -260,8 +304,11 @@ def bench_rounds(*, workers: int = 4, k: int = 8, dims=(256, 1024),
     python jit dispatches (one per local step) plus a sync dispatch; the
     engine's ``round_step`` compiles the whole period into one ``lax.scan``
     + sync.  Times one round of each at every model size for the fused
-    (Pallas — interpret-mode on CPU, so expect it to lose there), xla, and
-    reference executors, and records which backend "auto" resolves to.
+    (Pallas — interpret-mode on CPU, so expect it to lose there; those
+    rows are skipped by default off-TPU/GPU, ``--include-interpret`` opts
+    back in), xla, and reference executors, and records which backend
+    "auto" resolves to.  Each size row carries ``engine_state_bytes`` —
+    what the flat engine persists between steps for this algorithm.
     Each path gets grads in its native layout (tree for reference,
     pre-flattened (k, W, R, C) for the engine — ``round_step_flat``) and
     the engine round donates its state, exactly the launch-driver
@@ -286,11 +333,13 @@ def bench_rounds(*, workers: int = 4, k: int = 8, dims=(256, 1024),
     """
     auto = resolve_backend("auto")
     rounds = {"workers": workers, "k": k, "auto_backend": auto,
+              "fused_skipped": _skip_interpret(include_interpret),
               "by_alg": {}}
     for alg_name in algs:
         rounds["by_alg"][alg_name] = _bench_rounds_alg(
             alg_name, workers=workers, k=k, dims=dims, iters=iters,
-            fused_iters=fused_iters, auto=auto)
+            fused_iters=fused_iters, auto=auto,
+            include_interpret=include_interpret)
     if "vrl_sgd" in rounds["by_alg"]:
         rounds["sizes"] = rounds["by_alg"]["vrl_sgd"]
     _merge_json(out_path, {"rounds": rounds})
@@ -590,6 +639,127 @@ def gate_compressed(res: dict, time_ratio: float) -> int:
     return 0
 
 
+# --------------------------------------------- sharded / shrunk state bench
+def bench_sharded(*, workers: int = 4, k: int = 4, dim: int = 1024,
+                  shards: int = 4, iters: int = 3,
+                  out_path: str = "BENCH_engine.json") -> dict:
+    """Sharded + shrunk engine state: measured bytes and round parity.
+
+    Four adam/vrl_sgd variants through real rounds on the auto backend:
+    the fp32 unsharded baseline, the row-sharded layout (``shards`` —
+    meshless here, so layout-only: rows pad to shard boundaries and the
+    trajectory must stay BITWISE the baseline; the mesh-placed path is
+    exercised in tests/test_engine_collectives.py), bf16 moment storage,
+    and bf16 + SM3-factored second moment.  Each variant records its
+    measured ``engine_state_bytes`` / ``moment_bytes`` (what actually
+    persists between steps, padding included), round time, and its
+    average-model drift vs the baseline after two identical rounds.  The
+    tile height is pinned (block=128) so baseline and sharded layouts pad
+    comparably and the byte reductions measure dtype/factoring, not
+    padding luck.  CI gates this section (``--gate-sharded``).
+    """
+    params = _mlp_template(jax.random.PRNGKey(0), dim)
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    grads = jax.tree.map(
+        lambda x: jnp.broadcast_to(jnp.sin(x), (workers, *x.shape)),
+        params)
+    scale = (1.0 + 0.01 * jnp.arange(k, dtype=jnp.float32))
+    grads_k = jax.tree.map(
+        lambda g: g[None] * scale.reshape((k,) + (1,) * g.ndim), grads)
+    variants = {
+        "baseline": dict(shards=1, moment_dtype="float32", sm3=False),
+        "sharded": dict(shards=shards, moment_dtype="float32", sm3=False),
+        "bf16": dict(shards=shards, moment_dtype="bfloat16", sm3=False),
+        "bf16_sm3": dict(shards=shards, moment_dtype="bfloat16", sm3=True),
+    }
+    out = {"workers": workers, "k": k, "dim": dim, "shards": shards,
+           "n_params": int(n_params),
+           "auto_backend": resolve_backend("auto"), "variants": {}}
+    avg0 = None
+    for name, kv in variants.items():
+        cfg = VRLConfig(algorithm="vrl_sgd", comm_period=k,
+                        learning_rate=0.01, weight_decay=1e-4,
+                        inner_optimizer="adam", update_backend="auto",
+                        moment_dtype=kv["moment_dtype"], sm3=kv["sm3"],
+                        engine=EngineConfig(block=128,
+                                            shards=kv["shards"]))
+        eng = make_engine(cfg, jax.eval_shape(lambda: params))
+        gk_buf = jax.jit(lambda g, eng=eng: jax.vmap(
+            lambda t: flat.flatten_stacked(eng.spec, t,
+                                           dtype=eng.spec.dtype)
+        )(g))(grads_k)
+        rstep = jax.jit(eng.round_step_flat, donate_argnums=(0,))
+        state = eng.init(params, workers)
+        entry = {"rows": int(eng.spec.rows), "shards": int(eng.spec.shards),
+                 "engine_state_bytes": _tree_nbytes(state),
+                 "moment_bytes": _tree_nbytes(state.inner)}
+        for _ in range(2):                 # two deterministic parity rounds
+            state = rstep(state, gk_buf)
+        avg = eng.average_model(state)
+        if avg0 is None:
+            avg0 = avg
+            entry["max_abs_diff_vs_baseline"] = 0.0
+            entry["bitwise_vs_baseline"] = True
+        else:
+            pairs = list(zip(jax.tree.leaves(avg), jax.tree.leaves(avg0)))
+            entry["max_abs_diff_vs_baseline"] = max(
+                float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                      - b.astype(jnp.float32))))
+                for a, b in pairs)
+            entry["bitwise_vs_baseline"] = all(
+                bool(jnp.all(a == b)) for a, b in pairs)
+        box = [state]
+
+        def one_round(box=box, rstep=rstep, gk_buf=gk_buf):
+            box[0] = rstep(box[0], gk_buf)
+            return box[0]
+
+        entry["round_us"] = round(timeit(one_round, iters=iters,
+                                         warmup_iters=1), 1)
+        csv(f"engine/sharded/{name}/d{dim}", entry["round_us"],
+            f"state={entry['engine_state_bytes']}B "
+            f"moments={entry['moment_bytes']}B "
+            f"diff={entry['max_abs_diff_vs_baseline']:.1e}")
+        out["variants"][name] = entry
+    v = out["variants"]
+    out["moment_reduction_bf16"] = round(
+        v["baseline"]["moment_bytes"] / v["bf16"]["moment_bytes"], 2)
+    out["moment_reduction_bf16_sm3"] = round(
+        v["baseline"]["moment_bytes"] / v["bf16_sm3"]["moment_bytes"], 2)
+    _merge_json(out_path, {"sharded": out})
+    return out
+
+
+def gate_sharded(res: dict) -> int:
+    """CI gate over bench_sharded: the layout-only sharded round must be
+    BITWISE the unsharded baseline (zero pad rows are inert — any drift
+    is a real sharding bug), bf16 moments must measure >= 1.7x smaller
+    than fp32 while staying within 5e-2 of the baseline trajectory at
+    this scale, and SM3 must shrink the moments further still.  Returns
+    a process exit code."""
+    v = res["variants"]
+    bad = []
+    if not v["sharded"]["bitwise_vs_baseline"]:
+        bad.append(f"layout-only sharded round is NOT bitwise the "
+                   f"baseline (max diff "
+                   f"{v['sharded']['max_abs_diff_vs_baseline']:.2e})")
+    if res["moment_reduction_bf16"] < 1.7:
+        bad.append(f"bf16 moments only {res['moment_reduction_bf16']}x "
+                   f"smaller than fp32 (< 1.7x)")
+    if v["bf16"]["max_abs_diff_vs_baseline"] > 5e-2:
+        bad.append(f"bf16 trajectory drift "
+                   f"{v['bf16']['max_abs_diff_vs_baseline']:.2e} > 5e-2")
+    if v["bf16_sm3"]["moment_bytes"] >= v["bf16"]["moment_bytes"]:
+        bad.append("SM3 did not shrink the moment buffers below bf16's")
+    if bad:
+        print("SHARDED GATE FAILED: " + "; ".join(bad))
+        return 1
+    print(f"sharded gate OK: layout-only bitwise, bf16 moments "
+          f"{res['moment_reduction_bf16']}x (sm3 "
+          f"{res['moment_reduction_bf16_sm3']}x), drift <= 5e-2")
+    return 0
+
+
 if __name__ == "__main__":
     import argparse
     import sys
@@ -597,7 +767,12 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--bench", default="all",
                     choices=["paper", "engine", "hier", "rounds",
-                             "compressed", "overlap", "all"])
+                             "compressed", "overlap", "sharded", "all"])
+    ap.add_argument("--include-interpret", action="store_true",
+                    help="time the fused Pallas rows even where they "
+                         "would run in interpret mode (off-TPU/GPU they "
+                         "are skipped by default: interpret timings "
+                         "measure python dispatch, not the kernel)")
     ap.add_argument("--dims", default="256,1024",
                     help="comma list of model sizes (dim of the MLP bench)")
     ap.add_argument("--k", type=int, default=8,
@@ -618,6 +793,11 @@ if __name__ == "__main__":
                          "reductions (int8 >= 4x, topk >= 10x) and hold "
                          "each compressed round within this ratio of the "
                          "uncompressed round (0 = no gate)")
+    ap.add_argument("--gate-sharded", action="store_true",
+                    help="bench_sharded: gate the sharded/shrunk-state "
+                         "section (layout-only sharding bitwise, bf16 "
+                         "moments >= 1.7x smaller within 5e-2 drift, SM3 "
+                         "smaller still)")
     args = ap.parse_args()
     dims = tuple(int(d) for d in args.dims.split(","))
 
@@ -625,11 +805,13 @@ if __name__ == "__main__":
     if args.bench in ("paper", "all"):
         main()
     if args.bench in ("engine", "all"):
-        bench_engine(dims=dims)
+        bench_engine(dims=dims, include_interpret=args.include_interpret)
     if args.bench in ("hier", "all"):
-        bench_hierarchical(dims=dims)
+        bench_hierarchical(dims=dims,
+                           include_interpret=args.include_interpret)
     if args.bench in ("rounds", "all"):
         rounds = bench_rounds(dims=dims, k=args.k, iters=args.iters,
+                              include_interpret=args.include_interpret,
                               algs=tuple(a for a in args.algs.split(",")
                                          if a))
         if args.gate_ratio:
@@ -645,4 +827,8 @@ if __name__ == "__main__":
         comp = bench_compressed(dims=dims, k=args.k, iters=args.iters)
         if args.gate_compressed:
             code |= gate_compressed(comp, args.gate_compressed)
+    if args.bench in ("sharded", "all"):
+        shd = bench_sharded(k=args.k, iters=args.iters)
+        if args.gate_sharded:
+            code |= gate_sharded(shd)
     sys.exit(code) if code else None

@@ -1,5 +1,6 @@
 from repro.checkpoint.checkpoint import (  # noqa: F401
     load_meta,
+    moments_meta,
     restore,
     restore_flat_state,
     save,

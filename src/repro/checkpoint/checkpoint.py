@@ -56,6 +56,7 @@ def save(path: str, tree: Any, meta: dict | None = None) -> None:
 def restore(path: str, like: Any) -> Any:
     """Restore into the structure of ``like`` (a template pytree)."""
     data = np.load(os.path.join(path, "arrays.npz"))
+    dtypes = load_meta(path).get("dtypes", {})
     flat_template = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for pth, leaf in flat_template[0]:
@@ -63,6 +64,12 @@ def restore(path: str, like: Any) -> Any:
         if key not in data:
             raise KeyError(f"checkpoint missing {key!r}")
         arr = data[key]
+        # extension dtypes (bfloat16 via ml_dtypes) survive npz as raw
+        # void bytes — re-view them with the recorded dtype, bitwise
+        rec_dt = dtypes.get(key)
+        if (rec_dt is not None and arr.dtype.kind == "V"
+                and rec_dt != str(arr.dtype)):
+            arr = arr.view(np.dtype(rec_dt))
         if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"{key}: shape {arr.shape} != template {leaf.shape}")
         leaves.append(arr)
@@ -90,8 +97,19 @@ def _carries_comm(state: Any) -> bool:
     return len(jax.tree_util.tree_leaves(comm)) > 0
 
 
+def moments_meta(cfg) -> dict:
+    """JSON-safe moment-storage description of a VRLConfig: what dtype the
+    inner-optimizer moments persist at and whether Adam's second moment is
+    SM3-factored.  Recorded at save and validated at restore — bf16 / SM3
+    buffers restored into an fp32 engine (or vice versa) would silently
+    reinterpret state."""
+    return {"moment_dtype": getattr(cfg, "moment_dtype", "float32"),
+            "sm3": bool(getattr(cfg, "sm3", False))}
+
+
 def save_flat_state(path: str, state: Any, spec, meta: dict | None = None,
-                    grid=None, compressors: dict | None = None) -> None:
+                    grid=None, compressors: dict | None = None,
+                    moments: dict | None = None) -> None:
     """Save a fused-engine state plus its flat.FlatSpec layout.
 
     ``grid``: the pod-major (P, D) worker grid for hierarchical states
@@ -100,6 +118,10 @@ def save_flat_state(path: str, state: Any, spec, meta: dict | None = None,
     (``repro.comm.pair_meta``) — recorded (None for uncompressed) so a
     restore into a differently-compressed engine fails loudly instead of
     silently dropping or misreading the error-feedback residual buffers.
+    ``moments``: moment-storage metadata (``moments_meta(cfg)``) — same
+    loud-failure contract for bf16/SM3 moment buffers.  The shard layout
+    needs no extra field: ``spec.meta()`` carries ``shards`` and a
+    mismatch fails the flat_spec comparison.
     """
     if compressors is None and _carries_comm(state):
         raise ValueError(
@@ -109,21 +131,27 @@ def save_flat_state(path: str, state: Any, spec, meta: dict | None = None,
     m = dict(meta or {})
     m["flat_spec"] = spec.meta()
     m["compressors"] = compressors
+    if moments is not None:
+        m["moments"] = moments
     if grid is not None:
         m["worker_grid"] = [int(g) for g in grid]
     save(path, state, meta=m)
 
 
 def restore_flat_state(path: str, state_like: Any, spec, grid=None,
-                       compressors: dict | None = None) -> Any:
+                       compressors: dict | None = None,
+                       moments: dict | None = None) -> Any:
     """Restore a fused-engine state, validating the recorded unravel spec
-    (and, for hierarchical states, the recorded (P, D) worker grid, and
-    the recorded per-level sync compressors).
+    (and, for hierarchical states, the recorded (P, D) worker grid, the
+    recorded per-level sync compressors, and the recorded moment storage).
 
     A compressor mismatch is a hard error: the compressed-sync residuals
     (and drift references) in the checkpoint only mean anything to an
     engine running the SAME compressors — restoring them elsewhere would
     silently drop the carried error feedback or corrupt the next sync.
+    Shard-count and moment-dtype/SM3 mismatches fail the same way (the
+    shard count rides in ``spec.meta()``; moments in the ``moments``
+    record when the saver provided one).
     """
     if compressors is None and _carries_comm(state_like):
         raise ValueError(
@@ -145,6 +173,13 @@ def restore_flat_state(path: str, state_like: Any, spec, grid=None,
             "refusing to restore (the error-feedback residuals would be "
             f"dropped or misread):\n  checkpoint: {rec_comp}\n"
             f"  engine:     {compressors}")
+    rec_mom = recorded.get("moments")
+    if rec_mom is not None and moments is not None and rec_mom != moments:
+        raise ValueError(
+            "checkpoint moment storage does not match the engine's — "
+            "refusing to restore (bf16/SM3 moment buffers would be "
+            f"reinterpreted):\n  checkpoint: {rec_mom}\n"
+            f"  engine:     {moments}")
     rec_grid = recorded.get("worker_grid")
     if (rec_grid is not None and grid is not None
             and [int(g) for g in grid] != rec_grid):

@@ -157,6 +157,12 @@ class EngineConfig:
     launch drivers: k local steps run under a single ``lax.scan`` (state
     donated, losses buffered device-side) followed by the round-closing
     sync, compiled once per (k, shape) instead of k python dispatches.
+    ``shards`` row-block-shards every (W, R, C) engine buffer over a model
+    mesh axis: rows pad to a multiple of ``block * shards`` so each shard
+    holds whole Pallas tiles, per-device engine HBM drops by the shard
+    count, and the round-closing sync becomes a per-shard all-reduce over
+    the worker axes only (still exactly ONE collective per round).
+    ``shards=1`` is bitwise the replicated path.
     """
 
     block: int = 0                  # Pallas tile height; 0 = auto
@@ -164,6 +170,9 @@ class EngineConfig:
     interpret: Optional[bool] = None
     max_pad_waste: float = 0.25
     round_scan: bool = True         # launch drivers use round_step
+    shards: int = 1                 # model-axis shard count for engine state
+    shard_axis: str = "shard"       # mesh axis name backing the shards (the
+                                    # production mesh reuses "model")
 
 
 @dataclass(frozen=True)
@@ -198,6 +207,19 @@ class VRLConfig:
     inner_optimizer: str = "sgd"    # sgd | momentum | adam (beyond-paper)
     clip_norm: float = 0.0          # per-worker global-norm gradient clip
     momentum: float = 0.0
+    # storage dtype for the inner-optimizer moment buffers (momentum /
+    # Adam mu+nu).  The update math stays fp32 in-register on every
+    # executor; only what persists in HBM between steps is quantized.
+    # "float32" (default) is bitwise the current path; "bfloat16" halves
+    # moment HBM at sub-1e-2 trajectory drift.
+    moment_dtype: str = "float32"   # float32 | bfloat16
+    # SM3-style factored second moment for the adam inner optimizer: nu's
+    # (W, R, C) buffer is replaced by row stats (W, R, 1) + lane stats
+    # (W, 1, C) — v̂ = min(row, lane) bounds nu from above and both stats
+    # accumulate the max of the fresh v̂ over their span (Anil et al. 2019)
+    # — shrinking second-moment HBM by ~C/1.  adam-only; ignored by
+    # sgd/momentum.
+    sm3: bool = False
     easgd_alpha: float = 0.3        # elastic coefficient (EASGD baseline)
     # bvr_l_sgd: EMA rate of the bias control variate B (0 disables the
     # correction — the trajectory is then bitwise vrl_sgd)

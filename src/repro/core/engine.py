@@ -166,7 +166,7 @@ from repro.core.types import (CommState, HierCommState, HierState,
                               OverlapState, WorkerState)
 from repro.kernels import vrl_update as vu
 from repro.kernels import xla_update as xu
-from repro.optim.optimizers import AdamState, make_inner
+from repro.optim.optimizers import AdamState, SM3Pair, make_inner
 
 
 BACKENDS = ("auto", "fused", "xla", "reference")
@@ -835,60 +835,138 @@ def _inner_kind(cfg: VRLConfig) -> Tuple[str, float]:
     raise ValueError(cfg.inner_optimizer)
 
 
-def _state_pspecs(state, axes) -> Any:
+_MOMENT_DTYPES = ("float32", "bfloat16")
+
+
+def _moment_opts(cfg: VRLConfig, kind: str):
+    """Resolve (moment storage dtype, SM3 active) for the fused engine.
+
+    The kernels compute fp32 in-register regardless; ``moment_dtype``
+    only picks what persists between steps, so "float32" is bitwise the
+    original path.  SM3 factors Adam's second moment only — sgd/momentum
+    configs carry no nu, so the flag is inert there (same as the
+    reference ``optimizers.adam``)."""
+    name = getattr(cfg, "moment_dtype", "float32")
+    if name not in _MOMENT_DTYPES:
+        raise ValueError(f"unknown moment_dtype {name!r}; known: "
+                         f"{_MOMENT_DTYPES}")
+    sm3 = bool(getattr(cfg, "sm3", False)) and kind == "adam"
+    return jnp.dtype(name), sm3
+
+
+def _resolve_shard_axis(ecfg, mesh) -> Optional[str]:
+    """The mesh axis the row dim splits over, or None.
+
+    ``EngineConfig.shards > 1`` with a mesh carrying ``shard_axis`` at
+    matching size activates real placement; without a mesh (or without
+    the axis) the sharded row padding is layout-only — buffers stay
+    device-local but hold the identical values, which is what the CPU
+    parity tests exercise.  A size mismatch is a config error, loudly.
+    """
+    if mesh is None or ecfg.shards <= 1:
+        return None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sz = sizes.get(ecfg.shard_axis, 1)
+    if sz == 1:
+        return None
+    if sz != ecfg.shards:
+        raise ValueError(
+            f"mesh axis {ecfg.shard_axis!r} has size {sz} but "
+            f"EngineConfig.shards={ecfg.shards}; the row dim splits into "
+            f"exactly one block-aligned piece per shard device")
+    return ecfg.shard_axis
+
+
+def _row_axis(shard_axis, shards: int):
+    """Per-leaf model-shard placement rule: the row dim (-2) splits over
+    ``shard_axis`` iff its extent divides into ``shards`` whole pieces and
+    is not a broadcast dim of 1.  Every flat buffer's rows are padded to a
+    multiple of ``block * shards`` (``flat.make_spec``), the SM3 lane stat
+    carries exactly one row per shard, and size-1 dims (pend_k, Δ2's
+    intra-pod dim) fall through to replicated — so one rule covers the
+    whole state."""
+    def row_ax(x):
+        shape = tuple(getattr(x, "shape", ()))
+        if (shard_axis is not None and shards > 1 and len(shape) >= 2
+                and shape[-2] > 1 and shape[-2] % shards == 0):
+            return shard_axis
+        return None
+
+    return row_ax
+
+
+def _state_pspecs(state, axes, shard_axis=None, shards: int = 1) -> Any:
     """shard_map PartitionSpecs: worker-stacked (ndim 3) leaves shard over
-    the worker axes; everything else (center, scalars) is replicated."""
+    the worker axes, (R, C) leaves (center, comm ref) and every row dim
+    over the model-shard axis when one is active; scalars replicate."""
     ax = tuple(axes) if isinstance(axes, (tuple, list)) else (axes,)
     ax = ax[0] if len(ax) == 1 else ax
+    row_ax = _row_axis(shard_axis, shards)
 
     def one(x):
-        if getattr(x, "ndim", 0) == 3:
-            return P(ax, None, None)
-        return P(*([None] * getattr(x, "ndim", 0)))
+        nd = getattr(x, "ndim", 0)
+        if nd == 3:
+            return P(ax, row_ax(x), None)
+        if nd == 2:
+            return P(row_ax(x), None)
+        return P(*([None] * nd))
 
     return jax.tree.map(one, state)
 
 
-def _hier_pspecs(state: HierFlatState, pod_axis, data_axis) -> HierFlatState:
+def _hier_pspecs(state: HierFlatState, pod_axis, data_axis,
+                 shard_axis=None, shards: int = 1) -> HierFlatState:
     """PartitionSpecs for the pod-major state: (P, D, R, C) leaves shard
     (pod, data); the per-pod Δ2 shards only the pod axis (its intra-pod dim
-    is 1); scalars replicate.  Compressed-sync buffers follow their level:
-    per-worker residuals shard like params, per-pod ref1/resid2 like Δ2,
-    the global ref2 replicates."""
-    wspec = P(pod_axis, data_axis, None, None)
-    podspec = P(pod_axis, None, None, None)
+    is 1); scalars replicate; row dims additionally split over the
+    model-shard axis when one is active (``_row_axis``).  Compressed-sync
+    buffers follow their level: per-worker residuals shard like params,
+    per-pod ref1/resid2 like Δ2, the global ref2 replicates over workers
+    (but shards its rows)."""
+    row_ax = _row_axis(shard_axis, shards)
+    wspec = lambda x: P(pod_axis, data_axis, row_ax(x), None)
+    podspec = lambda x: P(pod_axis, None, row_ax(x), None)
     inner = jax.tree.map(
-        lambda x: wspec if getattr(x, "ndim", 0) == 4 else P(), state.inner)
+        lambda x: wspec(x) if getattr(x, "ndim", 0) == 4 else P(),
+        state.inner)
     comm = state.comm
     cspec = ()
     if isinstance(comm, HierCommState):
-        have = lambda x, s: () if isinstance(x, tuple) else s
+        have = lambda x, f: () if isinstance(x, tuple) else f(x)
         cspec = HierCommState(resid1=have(comm.resid1, wspec),
                               ref1=have(comm.ref1, podspec),
                               resid2=have(comm.resid2, podspec),
-                              ref2=have(comm.ref2, P(None, None)))
+                              ref2=have(comm.ref2,
+                                        lambda x: P(row_ax(x), None)))
     ospec = ()
     if isinstance(state.overlap, OverlapState):
         # level-2 overlap buffers are per-pod (P, 1, ...): pod axis only
-        ospec = OverlapState(pend=podspec, pend_k=podspec)
-    return HierFlatState(params=wspec, delta1=wspec,
-                         delta2=P(pod_axis, None, None, None), inner=inner,
+        ospec = OverlapState(pend=podspec(state.overlap.pend),
+                             pend_k=podspec(state.overlap.pend_k))
+    return HierFlatState(params=wspec(state.params),
+                         delta1=wspec(state.delta1),
+                         delta2=podspec(state.delta2), inner=inner,
                          step=P(), last_sync1=P(), last_sync2=P(),
                          comm=cspec, overlap=ospec)
 
 
 def state_partition_specs(state, worker_axes,
-                          hier_axes: Tuple[str, str] = ("pod", "data")):
+                          hier_axes: Tuple[str, str] = ("pod", "data"),
+                          shard_axis=None, shards: int = 1):
     """PartitionSpec pytree for a fused-engine state (flat or hierarchical).
 
     The launch layer (``launch/dryrun.py``) and the HLO-collective tests use
     this to place engine states on the production mesh: flat (W, R, C)
     buffers shard their worker axis over ``worker_axes``; hierarchical
-    (P, D, R, C) buffers shard pod-major over ``hier_axes``.
+    (P, D, R, C) buffers shard pod-major over ``hier_axes``; with
+    ``shard_axis``/``shards`` set, every buffer's row dim additionally
+    splits over the model-shard axis (FSDP over the flat layout).
     """
     if isinstance(state, HierFlatState):
-        return _hier_pspecs(state, *hier_axes)
-    return _state_pspecs(state, worker_axes)
+        return _hier_pspecs(state, *hier_axes, shard_axis=shard_axis,
+                            shards=shards)
+    return _state_pspecs(state, worker_axes, shard_axis=shard_axis,
+                         shards=shards)
 
 
 def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
@@ -905,7 +983,7 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
     algo = get_spec(cfg.algorithm)
     ecfg = cfg.engine
     fspec = flat.make_spec(template, lanes=ecfg.lanes, block=ecfg.block,
-                           max_waste=ecfg.max_pad_waste)
+                           max_waste=ecfg.max_pad_waste, shards=ecfg.shards)
     interpret = (vu.default_interpret() if ecfg.interpret is None
                  else ecfg.interpret)
     backend = resolve_backend(cfg)
@@ -922,6 +1000,7 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
     ops = vu if backend == "fused" else xu
     block = fspec.block
     kind, beta = _inner_kind(cfg)
+    mdt, sm3 = _moment_opts(cfg, kind)
     lr, wd = cfg.learning_rate, cfg.weight_decay
     delta_dt = jnp.dtype(cfg.delta_dtype)
     comp, _comp2 = comm_mod.resolve_pair(cfg)
@@ -931,7 +1010,8 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
         return _make_hier_engine(cfg, algo, fspec, mesh=mesh, ops=ops,
                                  backend=backend, kind=kind,
                                  beta=beta, lr=lr, wd=wd, delta_dt=delta_dt,
-                                 block=block, interpret=interpret)
+                                 block=block, interpret=interpret,
+                                 mdt=mdt, sm3=sm3)
 
     axis_names = None
     axis_size = 1
@@ -940,6 +1020,8 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
         axis_size = math.prod(sizes[a] for a in worker_axes)
         if axis_size > 1:
             axis_names = tuple(worker_axes)
+    shard_axis = _resolve_shard_axis(ecfg, mesh)
+    on_mesh = axis_names is not None or shard_axis is not None
 
     def _wmean(buf):
         """Global worker mean of a (W_local, R, C) buffer -> (R, C).
@@ -966,10 +1048,21 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
         if kind == "sgd":
             inner = ()
         elif kind == "momentum":
-            inner = jnp.zeros(stacked.shape, jnp.float32)
+            inner = jnp.zeros(stacked.shape, mdt)
+        elif sm3:
+            # factored nu: a (W, R, 1) row stat + a (W, S, C) lane stat
+            # (one lane row per model shard's row span) replace the dense
+            # (W, R, C) buffer — ~R·C/(R + S·C) times smaller
+            nu = SM3Pair(
+                row=jnp.zeros((num_workers, fspec.rows, 1), jnp.float32),
+                col=jnp.zeros((num_workers, fspec.shards, fspec.lanes),
+                              jnp.float32))
+            inner = AdamState(jnp.zeros(stacked.shape, mdt), nu,
+                              jnp.zeros((), jnp.int32))
         else:
-            z = jnp.zeros(stacked.shape, jnp.float32)
-            inner = AdamState(z, z, jnp.zeros((), jnp.int32))
+            inner = AdamState(jnp.zeros(stacked.shape, mdt),
+                              jnp.zeros(stacked.shape, mdt),
+                              jnp.zeros((), jnp.int32))
         center = flat1.astype(jnp.float32) if algo.has_center else None
         comm = ()
         if comp is not None:
@@ -1025,11 +1118,20 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
             t = count.astype(jnp.float32)
             scal = jnp.stack([1.0 - _ADAM_B1 ** t, 1.0 - _ADAM_B2 ** t]
                              ).reshape(1, 2).astype(jnp.float32)
-            new_p, new_mu, new_nu = ops.fused_local_adam(
-                state.params, g, d, state.inner.mu, state.inner.nu, scal,
-                b=b, lr=lr, b1=_ADAM_B1, b2=_ADAM_B2, wd=wd, block=block,
-                interpret=interpret)
-            new_inner = AdamState(new_mu, new_nu, count)
+            if sm3:
+                new_p, new_mu, new_row, new_col = ops.fused_local_adam_sm3(
+                    state.params, g, d, state.inner.mu,
+                    state.inner.nu.row, state.inner.nu.col, scal, b=b,
+                    lr=lr, b1=_ADAM_B1, b2=_ADAM_B2, wd=wd, block=block,
+                    interpret=interpret)
+                new_inner = AdamState(new_mu, SM3Pair(new_row, new_col),
+                                      count)
+            else:
+                new_p, new_mu, new_nu = ops.fused_local_adam(
+                    state.params, g, d, state.inner.mu, state.inner.nu,
+                    scal, b=b, lr=lr, b1=_ADAM_B1, b2=_ADAM_B2, wd=wd,
+                    block=block, interpret=interpret)
+                new_inner = AdamState(new_mu, new_nu, count)
         out = state._replace(params=new_p, inner=new_inner,
                              step=state.step + 1)
         if algo.grad_all_reduce:
@@ -1194,12 +1296,16 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
     if axis_names is not None:
         ax = axis_names[0] if len(axis_names) == 1 else axis_names
 
+    def _specs(state):
+        return _state_pspecs(state, axis_names, shard_axis=shard_axis,
+                             shards=ecfg.shards)
+
     def _sharded(fn, gspec: Optional[P] = None):
-        if axis_names is None:
+        if not on_mesh:
             return fn
 
         def wrapped(state, *rest):
-            sspec = _state_pspecs(state, axis_names)
+            sspec = _specs(state)
             in_specs = (sspec,) if gspec is None else (sspec, gspec)
             return compat.shard_map(fn, mesh=mesh, in_specs=in_specs,
                                     out_specs=sspec,
@@ -1207,11 +1313,12 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
 
         return wrapped
 
-    local_core = _sharded(_core_local, gspec=P(ax, None, None))
+    local_core = _sharded(_core_local, gspec=P(ax, shard_axis, None))
     sync_core = _sharded(_core_sync)
-    train_core = _sharded(_core_train, gspec=P(ax, None, None))
+    train_core = _sharded(_core_train, gspec=P(ax, shard_axis, None))
     round_core = _sharded(_core_round_overlap if cfg.overlap
-                          else _core_round, gspec=P(None, ax, None, None))
+                          else _core_round,
+                          gspec=P(None, ax, shard_axis, None))
 
     round_begin = round_fold = None
     if cfg.overlap:
@@ -1220,22 +1327,22 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
             fold (k is unused by the flat engine; the hierarchical twin
             needs it for the k2 cadence)."""
             del k
-            if axis_names is None:
+            if not on_mesh:
                 return _core_round_begin(state)
-            sspec = _state_pspecs(state, axis_names)
+            sspec = _specs(state)
             return compat.shard_map(
                 _core_round_begin, mesh=mesh, in_specs=(sspec,),
-                out_specs=P(None, None), check_vma=False)(state)
+                out_specs=P(shard_axis, None), check_vma=False)(state)
 
         def round_fold(state, xbar):
             """Fold ``round_begin``'s result at round end (one round
             stale by the local steps run in between)."""
-            if axis_names is None:
+            if not on_mesh:
                 return _fold_overlap(state, xbar)
-            sspec = _state_pspecs(state, axis_names)
+            sspec = _specs(state)
             return compat.shard_map(
                 _fold_overlap, mesh=mesh,
-                in_specs=(sspec, P(None, None)), out_specs=sspec,
+                in_specs=(sspec, P(shard_axis, None)), out_specs=sspec,
                 check_vma=False)(state, xbar)
 
     # --------------------------------------------------------- public API
@@ -1295,8 +1402,9 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
 # ================================================ fused executor ("vrl2")
 def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
                       *, mesh, ops, backend: str, kind: str, beta: float,
-                      lr: float, wd: float,
-                      delta_dt, block: int, interpret: bool) -> Engine:
+                      lr: float, wd: float, delta_dt, block: int,
+                      interpret: bool, mdt=jnp.float32,
+                      sm3: bool = False) -> Engine:
     """The two-level engine over pod-major (P, D, R, C) flat buffers.
 
     Level-1 sync averages within each pod (one psum over the intra-pod mesh
@@ -1321,6 +1429,7 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
             pod_axis = hcfg.axes[0]
         if sizes.get(hcfg.axes[1], 1) > 1:
             data_axis = hcfg.axes[1]
+    shard_axis = _resolve_shard_axis(cfg.engine, mesh)
 
     def _pod_mean(buf):
         """(P_l, D_l, R, C) -> (P_l, 1, R, C).  THE intra-pod all-reduce."""
@@ -1351,10 +1460,19 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
         if kind == "sgd":
             inner = ()
         elif kind == "momentum":
-            inner = jnp.zeros(stacked.shape, jnp.float32)
+            inner = jnp.zeros(stacked.shape, mdt)
+        elif sm3:
+            nu = SM3Pair(
+                row=jnp.zeros((p_total, d_total, fspec.rows, 1),
+                              jnp.float32),
+                col=jnp.zeros((p_total, d_total, fspec.shards, fspec.lanes),
+                              jnp.float32))
+            inner = AdamState(jnp.zeros(stacked.shape, mdt), nu,
+                              jnp.zeros((), jnp.int32))
         else:
-            z = jnp.zeros(stacked.shape, jnp.float32)
-            inner = AdamState(z, z, jnp.zeros((), jnp.int32))
+            inner = AdamState(jnp.zeros(stacked.shape, mdt),
+                              jnp.zeros(stacked.shape, mdt),
+                              jnp.zeros((), jnp.int32))
         comm = ()
         if comp1 is not None or comp2 is not None:
             comm = HierCommState(
@@ -1396,11 +1514,23 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
             t = count.astype(jnp.float32)
             scal = jnp.stack([1.0 - _ADAM_B1 ** t, 1.0 - _ADAM_B2 ** t]
                              ).reshape(1, 2).astype(jnp.float32)
-            new_p, new_mu, new_nu = ops.fused_hier_local_adam(
-                state.params, g, state.delta1, state.delta2, state.inner.mu,
-                state.inner.nu, scal, lr=lr, b1=_ADAM_B1, b2=_ADAM_B2,
-                wd=wd, block=block, interpret=interpret)
-            new_inner = AdamState(new_mu, new_nu, count)
+            if sm3:
+                new_p, new_mu, new_row, new_col = \
+                    ops.fused_hier_local_adam_sm3(
+                        state.params, g, state.delta1, state.delta2,
+                        state.inner.mu, state.inner.nu.row,
+                        state.inner.nu.col, scal, lr=lr, b1=_ADAM_B1,
+                        b2=_ADAM_B2, wd=wd, block=block,
+                        interpret=interpret)
+                new_inner = AdamState(new_mu, SM3Pair(new_row, new_col),
+                                      count)
+            else:
+                new_p, new_mu, new_nu = ops.fused_hier_local_adam(
+                    state.params, g, state.delta1, state.delta2,
+                    state.inner.mu, state.inner.nu, scal, lr=lr,
+                    b1=_ADAM_B1, b2=_ADAM_B2, wd=wd, block=block,
+                    interpret=interpret)
+                new_inner = AdamState(new_mu, new_nu, count)
         return state._replace(params=new_p, inner=new_inner,
                               step=state.step + 1)
 
@@ -1569,12 +1699,19 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
         return _core_round_end_overlap(state, glob)
 
     # ----------------------------------------------------- shard_map wrap
+    meshless = mesh is None or (pod_axis is None and data_axis is None
+                                and shard_axis is None)
+
+    def _specs(state):
+        return _hier_pspecs(state, pod_axis, data_axis,
+                            shard_axis=shard_axis, shards=cfg.engine.shards)
+
     def _sharded(fn, gspec: Optional[P] = None):
-        if mesh is None or (pod_axis is None and data_axis is None):
+        if meshless:
             return fn
 
         def wrapped(state, *rest):
-            sspec = _hier_pspecs(state, pod_axis, data_axis)
+            sspec = _specs(state)
             in_specs = (sspec,) if gspec is None else (sspec, gspec)
             return compat.shard_map(fn, mesh=mesh, in_specs=in_specs,
                                     out_specs=sspec,
@@ -1582,7 +1719,7 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
 
         return wrapped
 
-    gspec = P(pod_axis, data_axis, None, None)
+    gspec = P(pod_axis, data_axis, shard_axis, None)
     local_core = _sharded(_core_local, gspec=gspec)
     train_core = _sharded(_core_train, gspec=gspec)
     sync_core = _sharded(_core_sync)
@@ -1590,13 +1727,12 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
     sync2_core = _sharded(_core_sync2)
     round_core = _sharded(_core_round_overlap if cfg.overlap
                           else _core_round,
-                          gspec=P(None, pod_axis, data_axis, None, None))
+                          gspec=P(None, pod_axis, data_axis, shard_axis,
+                                  None))
     round_end_core = _sharded(_core_round_end)
 
     round_begin = round_fold = None
     if cfg.overlap:
-        meshless = mesh is None or (pod_axis is None and data_axis is None)
-
         def round_begin(state, k: int):
             """The round-START level-2 collective (zeros off the k2
             cadence); ``k`` is this round's length, needed to decide the
@@ -1604,10 +1740,10 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
             _check_round()
             if meshless:
                 return _core_round_begin(state, k)
-            sspec = _hier_pspecs(state, pod_axis, data_axis)
+            sspec = _specs(state)
             return compat.shard_map(
                 functools.partial(_core_round_begin, k=k), mesh=mesh,
-                in_specs=(sspec,), out_specs=P(None, None),
+                in_specs=(sspec,), out_specs=P(shard_axis, None),
                 check_vma=False)(state)
 
         def round_fold(state, glob):
@@ -1616,10 +1752,10 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
             _check_round()
             if meshless:
                 return _core_round_end_overlap(state, glob)
-            sspec = _hier_pspecs(state, pod_axis, data_axis)
+            sspec = _specs(state)
             return compat.shard_map(
                 _core_round_end_overlap, mesh=mesh,
-                in_specs=(sspec, P(None, None)), out_specs=sspec,
+                in_specs=(sspec, P(shard_axis, None)), out_specs=sspec,
                 check_vma=False)(state, glob)
 
     # --------------------------------------------------------- public API

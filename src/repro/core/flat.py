@@ -54,6 +54,9 @@ class FlatSpec(NamedTuple):
     rows: int                       # R — padded row count (multiple of block)
     block: int                      # Pallas grid tile height
     dtype: str                      # buffer dtype for the params buffer
+    shards: int = 1                 # model-axis shard count (rows % (block *
+                                    # shards) == 0, so each shard holds whole
+                                    # Pallas tiles and every tile stays local)
 
     @property
     def padded(self) -> int:
@@ -66,7 +69,7 @@ class FlatSpec(NamedTuple):
                         "dtype": l.dtype, "offset": l.offset, "size": l.size}
                        for l in self.leaves],
             "size": self.size, "lanes": self.lanes, "rows": self.rows,
-            "block": self.block, "dtype": self.dtype,
+            "block": self.block, "dtype": self.dtype, "shards": self.shards,
         }
 
 
@@ -88,11 +91,15 @@ def choose_block(rows: int, *, target: int = 1024,
 
 
 def make_spec(template: Any, *, lanes: int = 256, block: int = 0,
-              max_waste: float = 0.25) -> FlatSpec:
+              max_waste: float = 0.25, shards: int = 1) -> FlatSpec:
     """Build the unravel spec from a SINGLE-MODEL pytree template.
 
     ``template`` leaves may be arrays or ShapeDtypeStructs; only shapes and
     dtypes are read.  ``block=0`` selects the tile height automatically.
+    ``shards`` pads rows up to a multiple of ``block * shards`` so the row
+    axis splits into equal shards on tile boundaries — sharding only adds
+    zero pad rows (inert through every update), never changes unflattened
+    values, and ``shards=1`` reproduces the unsharded layout exactly.
     """
     flat, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
@@ -106,13 +113,17 @@ def make_spec(template: Any, *, lanes: int = 256, block: int = 0,
         off += size
     if not leaves:
         raise ValueError("empty template pytree")
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
     dtype = str(jnp.result_type(*[np.dtype(l.dtype) for l in leaves]))
     rows_needed = -(-off // lanes)
     blk = int(block) if block else choose_block(rows_needed,
                                                 max_waste=max_waste)
-    rows = -(-rows_needed // blk) * blk
+    quantum = blk * int(shards)
+    rows = -(-rows_needed // quantum) * quantum
     return FlatSpec(treedef=treedef, leaves=tuple(leaves), size=off,
-                    lanes=lanes, rows=rows, block=blk, dtype=dtype)
+                    lanes=lanes, rows=rows, block=blk, dtype=dtype,
+                    shards=int(shards))
 
 
 def _check(spec: FlatSpec, tree: Any, stacked: bool):

@@ -257,6 +257,89 @@ def fused_local_adam(p, g, d, mu, nu, scal, *, lr: float, b1: float = 0.9,
     )(*ins, scal)
 
 
+def _fused_adam_sm3_kernel(*refs, lr, b1, b2, eps, wd, tps, use_delta,
+                           use_bias):
+    """SM3-factored Adam: nu is never materialized at (W, R, C) — it is
+    rebuilt per tile from the row stat (W, R, 1) and the per-shard lane
+    stat (W, S, C) via v̂ = min(row, col), updated, and re-factored.
+
+    The lane stat's output block is revisited by the ``tps`` consecutive
+    row tiles of its shard (grid is row-major), so it is NOT donated —
+    aliasing it would feed tile i+1 the partially-accumulated stat through
+    the min() above.  First visit initializes, later visits max-accumulate;
+    fp32 max is exact and order-free, so the result is bitwise the xla
+    twin's single max over the shard's rows.
+    """
+    v, i = _correction(refs, 2, use_delta, use_bias)
+    mu_ref, row_ref, col_ref, s_ref = refs[i], refs[i + 1], refs[i + 2], \
+        refs[i + 3]
+    po, muo, rowo, colo = refs[-4], refs[-3], refs[-2], refs[-1]
+    p = _f32(refs[0])
+    c1 = s_ref[0, 0]
+    c2 = s_ref[0, 1]
+    mu = b1 * _f32(mu_ref) + (1.0 - b1) * v
+    vhat = jnp.minimum(_f32(row_ref), _f32(col_ref))
+    nu = b2 * vhat + (1.0 - b2) * v * v
+    step = lr * (mu / c1) / (jnp.sqrt(nu / c2) + eps)
+    if wd:
+        step = step + lr * wd * p
+    po[...] = (p - step).astype(po.dtype)
+    muo[...] = mu.astype(muo.dtype)
+    rowo[...] = jnp.max(nu, axis=-1, keepdims=True).astype(rowo.dtype)
+    tile_col = jnp.max(nu, axis=-2, keepdims=True).astype(colo.dtype)
+    ti = pl.program_id(len(colo.shape) - 2)   # row-tile grid index
+    first = (ti % tps) == 0
+
+    @pl.when(first)
+    def _init():
+        colo[...] = tile_col
+
+    @pl.when(jnp.logical_not(first))
+    def _acc():
+        colo[...] = jnp.maximum(colo[...], tile_col)
+
+
+def fused_local_adam_sm3(p, g, d, mu, row, col, scal, *, lr: float,
+                         b1: float = 0.9, b2: float = 0.999,
+                         eps: float = 1e-8, wd: float = 0.0,
+                         block: int = 1024, interpret=None, b=None):
+    """SM3-factored Adam inner step fused with the corrections.
+
+    ``row``: (W, R, 1) fp32 row-max stat; ``col``: (W, S, C) fp32 lane-max
+    stat, one row per model shard's row span (S=1 ⇒ classic SM3 over the
+    whole buffer).  Per-shard spans keep the stat update local under
+    row-block sharding — a finer cover is still a valid upper bound.
+    Returns (p', mu', row', col'); p/mu/row donated, col not (see kernel).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    w, r, c = p.shape
+    shards = col.shape[-2]
+    assert (r // block) % shards == 0, (r, block, shards)
+    tps = (r // block) // shards
+    use_delta, use_bias = d is not None, b is not None
+    ins = ((p, g) + ((d,) if use_delta else ())
+           + ((b,) if use_bias else ()) + (mu, row, col))
+    n3 = len(ins) - 2                   # (W, R, C) operands
+    specs = _grid_specs(w, r, c, block, n3)
+    row_spec = pl.BlockSpec((1, block, 1), lambda wi, i: (wi, i, 0))
+    col_spec = pl.BlockSpec((1, 1, c), lambda wi, i: (wi, i // tps, 0))
+    return pl.pallas_call(
+        functools.partial(_fused_adam_sm3_kernel, lr=lr, b1=b1, b2=b2,
+                          eps=eps, wd=wd, tps=tps, use_delta=use_delta,
+                          use_bias=use_bias),
+        grid=(w, r // block),
+        in_specs=specs + [row_spec, col_spec, _scal_spec(2)],
+        out_specs=[specs[0], specs[0], row_spec, col_spec],
+        out_shape=[jax.ShapeDtypeStruct((w, r, c), p.dtype),
+                   jax.ShapeDtypeStruct((w, r, c), mu.dtype),
+                   jax.ShapeDtypeStruct(row.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(col.shape, jnp.float32)],
+        input_output_aliases={0: 0, len(ins) - 3: 1, len(ins) - 2: 2},
+        interpret=interpret,
+    )(*ins, scal)
+
+
 def _fused_sync_kernel(p_ref, xb_ref, d_ref, s_ref, po_ref, do_ref):
     p = _f32(p_ref)
     xb = _f32(xb_ref)[None]     # (block, C) broadcast over the worker dim
@@ -807,6 +890,74 @@ def fused_hier_local_adam(p, g, d1, d2, mu, nu, scal, *, lr: float,
         input_output_aliases={0: 0, 4: 1, 5: 2},
         interpret=interpret,
     )(p, g, d1, d2, mu, nu, scal)
+
+
+def _hier_adam_sm3_kernel(p_ref, g_ref, d1_ref, d2_ref, mu_ref, row_ref,
+                          col_ref, s_ref, po, muo, rowo, colo, *, lr, b1,
+                          b2, eps, wd, tps):
+    """Pod-major SM3 Adam — same factored construction as
+    ``_fused_adam_sm3_kernel`` with v = g − Δ1 − Δ2; the innermost grid
+    dim is the row tile, so the lane stat's ``tps`` revisits stay
+    consecutive (col NOT donated, same aliasing hazard)."""
+    v = _f32(g_ref) - _f32(d1_ref) - _f32(d2_ref)
+    p = _f32(p_ref)
+    c1 = s_ref[0, 0]
+    c2 = s_ref[0, 1]
+    mu = b1 * _f32(mu_ref) + (1.0 - b1) * v
+    vhat = jnp.minimum(_f32(row_ref), _f32(col_ref))
+    nu = b2 * vhat + (1.0 - b2) * v * v
+    step = lr * (mu / c1) / (jnp.sqrt(nu / c2) + eps)
+    if wd:
+        step = step + lr * wd * p
+    po[...] = (p - step).astype(po.dtype)
+    muo[...] = mu.astype(muo.dtype)
+    rowo[...] = jnp.max(nu, axis=-1, keepdims=True).astype(rowo.dtype)
+    tile_col = jnp.max(nu, axis=-2, keepdims=True).astype(colo.dtype)
+    first = (pl.program_id(2) % tps) == 0
+
+    @pl.when(first)
+    def _init():
+        colo[...] = tile_col
+
+    @pl.when(jnp.logical_not(first))
+    def _acc():
+        colo[...] = jnp.maximum(colo[...], tile_col)
+
+
+def fused_hier_local_adam_sm3(p, g, d1, d2, mu, row, col, scal, *,
+                              lr: float, b1: float = 0.9, b2: float = 0.999,
+                              eps: float = 1e-8, wd: float = 0.0,
+                              block: int = 1024, interpret=None):
+    """SM3-factored Adam with both Δ corrections on (P, D, R, C) buffers.
+
+    ``row``: (P, D, R, 1); ``col``: (P, D, S, C) per-shard lane stats.
+    Returns (p', mu', row', col'); p/mu/row donated, col not.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    pp, dd, r, c = p.shape
+    shards = col.shape[-2]
+    assert (r // block) % shards == 0, (r, block, shards)
+    tps = (r // block) // shards
+    specs = _grid4_specs(block, c, 4)
+    row_spec = pl.BlockSpec((1, 1, block, 1),
+                            lambda pi, di, i: (pi, di, i, 0))
+    col_spec = pl.BlockSpec((1, 1, 1, c),
+                            lambda pi, di, i: (pi, di, i // tps, 0))
+    return pl.pallas_call(
+        functools.partial(_hier_adam_sm3_kernel, lr=lr, b1=b1, b2=b2,
+                          eps=eps, wd=wd, tps=tps),
+        grid=(pp, dd, r // block),
+        in_specs=[specs[0], specs[1], specs[2], _pod4_spec(block, c),
+                  specs[3], row_spec, col_spec, _scal4_spec(2)],
+        out_specs=[specs[0], specs[3], row_spec, col_spec],
+        out_shape=[jax.ShapeDtypeStruct(p.shape, p.dtype),
+                   jax.ShapeDtypeStruct(mu.shape, mu.dtype),
+                   jax.ShapeDtypeStruct(row.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(col.shape, jnp.float32)],
+        input_output_aliases={0: 0, 4: 1, 5: 2},
+        interpret=interpret,
+    )(p, g, d1, d2, mu, row, col, scal)
 
 
 def _hier_sync1_kernel(p_ref, xb_ref, d_ref, s_ref, po_ref, do_ref):

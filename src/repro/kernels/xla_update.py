@@ -92,6 +92,45 @@ def fused_local_adam(p, g, d, mu, nu, scal, *, lr: float, b1: float = 0.9,
             nu_new.astype(nu.dtype))
 
 
+def _sm3_second_moment(v, row, col, b2):
+    """v̂ = min(row, col) rebuilt per element, EMA'd with the fresh g²,
+    re-factored into the two stats.  ``row``: (..., R, 1); ``col``:
+    (..., S, C) with one lane-stat row per shard's row span.  fp32 max is
+    exact and order-free, so the per-span max matches the Pallas kernel's
+    tile-by-tile accumulation bitwise."""
+    shards = col.shape[-2]
+    r = v.shape[-2]
+    span = r // shards
+    col_b = jnp.repeat(_f32(col), span, axis=-2)     # (..., R, C)
+    vhat = jnp.minimum(_f32(row), col_b)
+    nu = b2 * vhat + (1.0 - b2) * v * v
+    new_row = jnp.max(nu, axis=-1, keepdims=True)
+    spanned = nu.reshape(nu.shape[:-2] + (shards, span, nu.shape[-1]))
+    new_col = jnp.max(spanned, axis=-2)
+    return nu, new_row, new_col
+
+
+def fused_local_adam_sm3(p, g, d, mu, row, col, scal, *, lr: float,
+                         b1: float = 0.9, b2: float = 0.999,
+                         eps: float = 1e-8, wd: float = 0.0,
+                         block: int = 0, interpret=None, b=None):
+    """SM3-factored Adam twin of ``vrl_update.fused_local_adam_sm3``:
+    ``row`` (W, R, 1) / ``col`` (W, S, C) fp32 stats replace the dense nu.
+    Returns (p', mu', row', col')."""
+    del block, interpret
+    v = _corrected(g, d, b)
+    p32 = _f32(p)
+    c1 = scal[0, 0]
+    c2 = scal[0, 1]
+    mu_new = b1 * _f32(mu) + (1.0 - b1) * v
+    nu, new_row, new_col = _sm3_second_moment(v, row, col, b2)
+    step = lr * (mu_new / c1) / (jnp.sqrt(nu / c2) + eps)
+    if wd:
+        step = step + lr * wd * p32
+    return ((p32 - step).astype(p.dtype), mu_new.astype(mu.dtype),
+            new_row, new_col)
+
+
 def fused_sync_vrl(p, xbar, d, scal, *, block: int = 0, interpret=None):
     """Δ' = Δ + (x̂ − p)/(k_eff γ); p' = x̂ on (W, R, C) buffers.
 
@@ -308,6 +347,26 @@ def fused_hier_local_adam(p, g, d1, d2, mu, nu, scal, *, lr: float,
         step = step + lr * wd * p32
     return ((p32 - step).astype(p.dtype), mu_new.astype(mu.dtype),
             nu_new.astype(nu.dtype))
+
+
+def fused_hier_local_adam_sm3(p, g, d1, d2, mu, row, col, scal, *,
+                              lr: float, b1: float = 0.9, b2: float = 0.999,
+                              eps: float = 1e-8, wd: float = 0.0,
+                              block: int = 0, interpret=None):
+    """Pod-major SM3 Adam twin: ``row`` (P, D, R, 1) / ``col`` (P, D, S, C).
+    Returns (p', mu', row', col')."""
+    del block, interpret
+    v = _f32(g) - _f32(d1) - _f32(d2)
+    p32 = _f32(p)
+    c1 = scal[0, 0]
+    c2 = scal[0, 1]
+    mu_new = b1 * _f32(mu) + (1.0 - b1) * v
+    nu, new_row, new_col = _sm3_second_moment(v, row, col, b2)
+    step = lr * (mu_new / c1) / (jnp.sqrt(nu / c2) + eps)
+    if wd:
+        step = step + lr * wd * p32
+    return ((p32 - step).astype(p.dtype), mu_new.astype(mu.dtype),
+            new_row, new_col)
 
 
 def fused_sync_hier1(p, xbar_pod, d1, scal, *, block: int = 0,

@@ -22,6 +22,7 @@ Usage:
 """
 import argparse
 import dataclasses
+import functools
 import json
 import math
 import sys
@@ -36,12 +37,14 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.comm import compressors as comm_mod
-from repro.configs.base import HierConfig, InputShape, MeshConfig, VRLConfig
+from repro.configs.base import (EngineConfig, HierConfig, InputShape,
+                                MeshConfig, VRLConfig)
 from repro.configs import registry
 from repro.core import engine as engine_mod
 from repro.core import schedule as schedule_mod
 from repro.launch import roofline as rl
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import (CHIPS_PER_POD, HBM_PER_CHIP,
+                               make_production_mesh)
 from repro.models import transformer
 from repro.models.param import abstract as abstract_params
 from repro.serve.engine import make_prefill, make_serve_step
@@ -247,6 +250,119 @@ def _model_flops_decode(cfg, shape: InputShape) -> float:
     return 2.0 * cfg.active_param_count() * shape.global_batch
 
 
+# --------------------------------------------------- engine-state memory
+def _leaf_per_device(shape, nbytes: int, workers: int, shards: int) -> int:
+    """Per-device bytes of one engine-state leaf under the engine's
+    placement rules: worker-stacked leading dims ((W, ...) or pod-major
+    (P, D, ...)) split over the worker axes, and the row dim (-2) splits
+    over the shard axis exactly when ``core.engine._row_axis`` would
+    shard it — ``shape[-2] > 1 and shape[-2] % shards == 0``.  Everything
+    else (step counters, pend_k) replicates."""
+    div = 1
+    if len(shape) >= 3 and shape[0] == workers:
+        div *= workers                              # (W, R, C) stacks
+    elif len(shape) >= 4 and shape[0] * shape[1] == workers:
+        div *= workers                              # (P, D, R, C) grids
+    if (shards > 1 and len(shape) >= 2
+            and shape[-2] > 1 and shape[-2] % shards == 0):
+        div *= shards
+    return nbytes // div
+
+
+def _engine_state_bytes(cfg, vrl_cfg: VRLConfig, workers: int) -> dict:
+    """{leaf path: (shape, dtype, bytes, per_device_bytes)} for the flat
+    engine's state, from ``eval_shape`` alone — no allocation, no compile,
+    so it works at kimi-k2-1t scale on any host."""
+    template = jax.eval_shape(functools.partial(
+        transformer.init_params, cfg, dtype=jnp.bfloat16),
+        jax.random.PRNGKey(0))
+    eng = engine_mod.make_engine(vrl_cfg, template)
+    state = jax.eval_shape(lambda: eng.init(
+        transformer.init_params(cfg, jax.random.PRNGKey(0),
+                                dtype=jnp.bfloat16), workers))
+    shards = vrl_cfg.engine.shards
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
+        key = "/".join(str(getattr(p, "name", getattr(p, "key",
+                       getattr(p, "idx", p)))) for p in path)
+        nb = int(np.prod(leaf.shape, dtype=np.int64)
+                 * jnp.dtype(leaf.dtype).itemsize) if leaf.shape else \
+            jnp.dtype(leaf.dtype).itemsize
+        out[key] = {"shape": list(leaf.shape), "dtype": str(leaf.dtype),
+                    "bytes": nb,
+                    "per_device_bytes": _leaf_per_device(
+                        leaf.shape, nb, workers, shards)}
+    return out
+
+
+def engine_mem(arch_id: str, *, algorithm: str = "vrl_sgd",
+               inner: str = "adam", workers: int = 0, shards: int = 1,
+               moment_dtype: str = "float32", sm3: bool = False,
+               verbose: bool = True) -> dict:
+    """Analytic engine-state HBM artifact for one (arch, sharding,
+    moment-storage) point, plus the unsharded-fp32 baseline.
+
+    Fields:
+      buffers            — per engine-state leaf: shape, dtype, total
+                           bytes, per-device bytes under the placement
+                           rules (worker dims / worker axes, row dim /
+                           shard axis)
+      total_bytes        — engine state summed over all workers (what a
+                           checkpoint holds; placement-invariant)
+      per_device_bytes   — what ONE chip persists between steps
+      baseline_per_device_bytes, reduction
+                         — the same arch at shards=1 / fp32 / no SM3,
+                           and baseline/current (the headline factor)
+      devices_used       — workers x shards chips the placement occupies
+      fits_pod           — devices_used <= CHIPS_PER_POD and
+                           per_device_bytes <= HBM_PER_CHIP (v5e 16 GiB)
+      t_engine_pass      — roofline HBM seconds of one fused local step's
+                           engine traffic (2x per-device bytes / HBM BW)
+    """
+    mesh_cfg = registry.mesh_roles(arch_id, multi_pod=False, serving=False)
+    cfg = registry.padded_arch(arch_id, mesh_cfg)
+    workers = workers or mesh_cfg.num_workers
+    delta_dt = ("bfloat16" if (arch_id in registry._FSDP_ARCHS
+                               or os.environ.get("VRL_DELTA_BF16"))
+                else "float32")
+
+    def _cfg(s, mdt, sm):
+        return VRLConfig(algorithm=algorithm, inner_optimizer=inner,
+                         update_backend="xla", delta_dtype=delta_dt,
+                         moment_dtype=mdt, sm3=sm,
+                         engine=EngineConfig(shards=s))
+
+    bufs = _engine_state_bytes(cfg, _cfg(shards, moment_dtype, sm3), workers)
+    base = _engine_state_bytes(cfg, _cfg(1, "float32", False), workers)
+    per_dev = sum(b["per_device_bytes"] for b in bufs.values())
+    base_dev = sum(b["per_device_bytes"] for b in base.values())
+    devices = workers * shards
+    art = {
+        "arch": arch_id, "algorithm": algorithm, "inner": inner,
+        "workers": workers, "shards": shards,
+        "moment_dtype": moment_dtype, "sm3": sm3,
+        "delta_dtype": delta_dt,
+        "buffers": bufs,
+        "total_bytes": sum(b["bytes"] for b in bufs.values()),
+        "per_device_bytes": per_dev,
+        "baseline_per_device_bytes": base_dev,
+        "reduction": round(base_dev / per_dev, 2) if per_dev else 0.0,
+        "devices_used": devices,
+        "hbm_per_chip": HBM_PER_CHIP, "chips_per_pod": CHIPS_PER_POD,
+        "fits_pod": (devices <= CHIPS_PER_POD
+                     and per_dev <= HBM_PER_CHIP),
+        "t_engine_pass": rl.engine_pass_time(per_dev),
+    }
+    if verbose:
+        print(f"[engine-mem] {arch_id} {algorithm}/{inner} W={workers} "
+              f"shards={shards} moments={moment_dtype}"
+              f"{'+sm3' if sm3 else ''}: "
+              f"{per_dev/2**30:.2f} GiB/device "
+              f"(baseline {base_dev/2**30:.2f}, {art['reduction']}x), "
+              f"{devices} chips, fits_pod={art['fits_pod']}")
+    return art
+
+
 def lower_one(arch_id: str, shape_id: str, *, multi_pod: bool,
               vrl_cfg: Optional[VRLConfig] = None,
               fn_kind: Optional[str] = None, verbose: bool = True,
@@ -257,6 +373,8 @@ def lower_one(arch_id: str, shape_id: str, *, multi_pod: bool,
               overlap: bool = False, deadline: float = 0.0,
               compress: Optional[str] = None,
               compress2: Optional[str] = None,
+              shards: int = 1, moment_dtype: str = "float32",
+              sm3: bool = False,
               mesh_override: Optional[dict] = None,
               cfg_override: Optional[dict] = None, tag: str = "",
               last_only: bool = False, no_remat: bool = False):
@@ -318,6 +436,12 @@ def lower_one(arch_id: str, shape_id: str, *, multi_pod: bool,
                   else None),
         compress2=(comm_mod.parse_compressor(compress2) if compress2
                    else None),
+        moment_dtype=moment_dtype, sm3=sm3,
+        # the production mesh carries no dedicated shard axis — engine row
+        # shards REUSE the tensor axis "model" (launch/mesh.py), so
+        # shards must equal that axis's size when > 1
+        engine=EngineConfig(shards=shards,
+                            shard_axis="model" if shards > 1 else "shard"),
         delta_dtype="bfloat16" if (arch_id in registry._FSDP_ARCHS
                                    or os.environ.get("VRL_DELTA_BF16"))
         else "float32")
@@ -363,8 +487,10 @@ def lower_one(arch_id: str, shape_id: str, *, multi_pod: bool,
                 # no "pod" axis, so its (1, W) grid shards data only
                 haxes = tuple(a if a in mesh_cfg.axis_names else None
                               for a in engine_mod.hier_config(vrl_cfg).axes)
+                sh_ax = sh.engine_shard_axis(mesh_cfg, vrl_cfg.engine)
                 st_spec = engine_mod.state_partition_specs(
-                    state_abs, mesh_cfg.worker_axes, hier_axes=haxes)
+                    state_abs, mesh_cfg.worker_axes, hier_axes=haxes,
+                    shard_axis=sh_ax, shards=vrl_cfg.engine.shards)
             else:
                 st_spec = state_specs(cfg, mesh_cfg, vrl_cfg)
             sts = compat.shardings(mesh, st_spec)
@@ -579,6 +705,32 @@ def main(argv=None) -> int:
     ap.add_argument("--compress2", default=None,
                     help="override the cross-pod sync2 compressor "
                          "(hier_vrl_sgd; default: --compress)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="row-shard the engine state over the mesh's "
+                         "'model' axis (must equal its size when > 1); "
+                         "also sets the --engine-mem placement")
+    ap.add_argument("--moment-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="inner-optimizer moment storage dtype")
+    ap.add_argument("--sm3", action="store_true",
+                    help="SM3-factored adam second moment")
+    ap.add_argument("--engine-mem", action="store_true",
+                    help="emit the ANALYTIC engine-state memory artifact "
+                         "(eval_shape only — no compile, works at "
+                         "kimi-k2-1t scale): per-buffer + per-device "
+                         "bytes, the unsharded-fp32 baseline and "
+                         "reduction factor, and pod-fit under v5e HBM.  "
+                         "Appends one JSON line per arch to --out")
+    ap.add_argument("--inner", default="adam",
+                    choices=["sgd", "momentum", "adam"],
+                    help="--engine-mem inner optimizer (moment buffers "
+                         "are the point, so adam by default)")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="--engine-mem worker count (0 = the arch's "
+                         "single-pod mesh role)")
+    ap.add_argument("--gate-bytes", type=int, default=0,
+                    help="--engine-mem CI gate: exit 1 if any arch's "
+                         "per-device engine bytes exceed this budget")
     ap.add_argument("--worker-axes", default=None,
                     help="comma list overriding VRL worker mesh axes")
     ap.add_argument("--fsdp-axes", default=None)
@@ -603,6 +755,28 @@ def main(argv=None) -> int:
     shapes = list(registry.INPUT_SHAPES) if (args.all or not args.shape) \
         else [args.shape]
     meshes = [False, True] if args.mesh == "both" else [args.mesh == "multi"]
+
+    if args.engine_mem:
+        over_budget = []
+        for arch in archs:
+            art = engine_mem(arch, algorithm=args.algorithm,
+                             inner=args.inner, workers=args.workers,
+                             shards=args.shards,
+                             moment_dtype=args.moment_dtype, sm3=args.sm3)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(art) + "\n")
+            if args.gate_bytes and art["per_device_bytes"] > args.gate_bytes:
+                over_budget.append(
+                    f"{arch}: {art['per_device_bytes']} > {args.gate_bytes}")
+        if over_budget:
+            print("engine-mem gate FAILED:\n  " + "\n  ".join(over_budget),
+                  file=sys.stderr)
+            return 1
+        print(f"engine-mem: {len(archs)} arch(s) OK"
+              + (f" (gate {args.gate_bytes} B/device)" if args.gate_bytes
+                 else ""))
+        return 0
 
     results = []
     failures = 0
@@ -634,6 +808,8 @@ def main(argv=None) -> int:
                             round_k=args.round_k,
                             compress=args.compress,
                             compress2=args.compress2,
+                            shards=args.shards,
+                            moment_dtype=args.moment_dtype, sm3=args.sm3,
                             mesh_override=mesh_override or None,
                             cfg_override=cfg_override or None,
                             tag=args.tag or ("u2" if args.two_layer else ""),

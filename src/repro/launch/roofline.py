@@ -185,6 +185,17 @@ class Roofline:
                 f"{self.bottleneck:10s} | {self.useful_ratio:6.3f}")
 
 
+def engine_pass_time(per_device_engine_bytes: float) -> float:
+    """HBM time of one fused local step's engine-state traffic: the flat
+    buffers stream through once (read) and write back in place, so the
+    term is 2x the PER-DEVICE engine bytes over HBM bandwidth.  Row-
+    sharding the engine divides per-device bytes by the shard count, and
+    bf16/SM3 moments shrink the moment share — both cut this term
+    directly, which is what the dry-run's engine-memory artifact prices
+    (``launch/dryrun.py --engine-mem``)."""
+    return 2.0 * per_device_engine_bytes / HBM_BW
+
+
 def round_walltime(t_local: float, t_coll: float, *,
                    overlap: bool) -> float:
     """Predicted wall-clock of one communication round from its two

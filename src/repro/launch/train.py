@@ -34,13 +34,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint as ckpt
-from repro import compat
 from repro.comm import compressors as comm_mod
 from repro.configs import registry
 from repro.configs.base import EngineConfig, HierConfig, VRLConfig
 from repro.core import engine as engine_mod
 from repro.core import schedule as schedule_mod
 from repro.data import lm_token_stream
+from repro.launch import mesh as mesh_mod
 from repro.models import transformer as T
 from repro.train.loss import cross_entropy_lm
 from repro.train.train_loop import make_train_step
@@ -79,6 +79,25 @@ def main(argv=None) -> int:
                          "the per-leaf reference path")
     ap.add_argument("--block", type=int, default=0,
                     help="engine Pallas tile height (0 = auto)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="row-block-shard every engine buffer over a model "
+                         "mesh axis: per-device engine HBM drops by this "
+                         "factor and the sync stays ONE (per-shard) all-"
+                         "reduce.  With --mesh-grid the mesh grows a "
+                         "trailing 'shard' axis (needs workers*shards "
+                         "devices); without it the layout pads rows to "
+                         "shard boundaries but runs replicated.  1 = "
+                         "bitwise the unsharded path")
+    ap.add_argument("--moment-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="storage dtype for inner-optimizer moment buffers "
+                         "(math stays fp32 in-register); bfloat16 halves "
+                         "moment HBM")
+    ap.add_argument("--sm3", action="store_true",
+                    help="SM3-factored adam second moment: nu's (W, R, C) "
+                         "buffer becomes row (W, R, 1) + lane (W, S, C) "
+                         "stats — ~lanes-fold less second-moment HBM "
+                         "(adam only)")
     ap.add_argument("--no-round", dest="round", action="store_false",
                     default=True,
                     help="dispatch every local step from python instead of "
@@ -160,8 +179,10 @@ def main(argv=None) -> int:
                     comm_schedule=sched_arg, compress=comp_arg,
                     compress2=comp2_arg, overlap=args.overlap,
                     deadline=args.deadline,
+                    moment_dtype=args.moment_dtype, sm3=args.sm3,
                     engine=EngineConfig(block=args.block,
-                                        round_scan=args.round), hier=hier)
+                                        round_scan=args.round,
+                                        shards=args.shards), hier=hier)
     sched = engine_mod.comm_schedule(vrl)    # explicit or the algo default
     if sched is not None:
         print(f"comm schedule: stages {sched.stages} (k repeats from the "
@@ -170,14 +191,13 @@ def main(argv=None) -> int:
     mesh = None
     worker_axes = ("data",)
     if args.mesh_grid:
-        shape = hier.grid if hier else (1, args.workers)
-        n = shape[0] * shape[1]
-        if len(jax.devices()) < n:
-            raise SystemExit(f"--mesh-grid needs {n} devices, have "
-                             f"{len(jax.devices())} (set XLA_FLAGS="
-                             f"--xla_force_host_platform_device_count={n})")
-        mesh = compat.make_mesh(shape, ("pod", "data"),
-                                devices=jax.devices()[:n])
+        try:
+            mesh = mesh_mod.make_engine_mesh(
+                args.workers, shards=args.shards,
+                pods=hier.grid[0] if hier else 0,
+                shard_axis=vrl.engine.shard_axis)
+        except ValueError as e:
+            raise SystemExit(f"--mesh-grid: {e}")
         worker_axes = ("pod", "data")
         print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
     bundle = make_train_step(cfg, vrl, remat=not args.smoke, mesh=mesh,
@@ -194,8 +214,19 @@ def main(argv=None) -> int:
           + f", round_scan={args.round}")
     if bundle.engine is not None:
         es = bundle.engine.spec
+        moments = ("" if args.moment_dtype == "float32" and not args.sm3
+                   else f", moments={args.moment_dtype}"
+                        + ("+sm3" if args.sm3 else ""))
+        shard_note = ""
+        if es.shards > 1:
+            placed = mesh is not None and vrl.engine.shard_axis in (
+                mesh.axis_names if mesh is not None else ())
+            shard_note = (f", shards={es.shards}"
+                          + ("" if placed else " (layout only — no mesh "
+                             "axis; rows pad to shard boundaries)"))
         print(f"engine: flat buffer {es.rows}x{es.lanes} "
-              f"({es.padded - es.size} pad elems), block={es.block}")
+              f"({es.padded - es.size} pad elems), block={es.block}"
+              f"{shard_note}{moments}")
     if args.overlap:
         print(f"overlap: sync collective issued at round start (one-round-"
               f"stale fold at the boundary"
@@ -237,7 +268,8 @@ def main(argv=None) -> int:
             ckpt.save_flat_state(
                 args.ckpt, state, bundle.engine.spec, meta=meta,
                 grid=bundle.engine.grid,
-                compressors=comm_mod.pair_meta(bundle.engine.compressors))
+                compressors=comm_mod.pair_meta(bundle.engine.compressors),
+                moments=ckpt.moments_meta(vrl))
         else:
             ckpt.save(args.ckpt, state, meta=meta)
         print(f"checkpointed -> {args.ckpt}")

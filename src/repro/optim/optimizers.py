@@ -4,6 +4,17 @@ All of them are pytree transforms with the interface
     opt.init(params) -> state
     opt.update(params, grads, state) -> (new_params, new_state)
 Weight decay is decoupled (AdamW-style) and applied by every optimizer.
+
+Moment storage is decoupled from moment math: ``moment_dtype`` controls
+only what persists between steps (bf16 halves moment HBM); every update
+reads the stored moments up to fp32, computes in fp32, and casts the
+result back down.  ``float32`` is bitwise the original path.
+
+``sm3=True`` switches Adam's second moment to the SM3 factored form
+(Anil et al. 2019): per matrix-like leaf, nu's full buffer is replaced by
+a row-max and a lane-max statistic over the trailing 2D face, with
+v̂ = min(row, lane) bounding nu from above — the fused engine applies the
+same construction to its (R, C) flat buffers.
 """
 from __future__ import annotations
 
@@ -34,18 +45,24 @@ def sgd(lr: float, weight_decay: float = 0.0) -> Optimizer:
 
 
 def momentum(lr: float, beta: float = 0.9, weight_decay: float = 0.0,
-             nesterov: bool = False) -> Optimizer:
+             nesterov: bool = False,
+             moment_dtype: Any = jnp.float32) -> Optimizer:
+    mdt = jnp.dtype(moment_dtype)
+
     def init(params):
-        return jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+        return jax.tree.map(lambda x: jnp.zeros_like(x, mdt), params)
 
     def _g(x, g):
         g = g.astype(jnp.float32)
         return g + weight_decay * x.astype(jnp.float32) if weight_decay else g
 
     def update(params, grads, bufs):
-        new_m = jax.tree.map(lambda x, g, m: beta * m + _g(x, g),
-                             params, grads, bufs)
+        new_m = jax.tree.map(
+            lambda x, g, m: (beta * m.astype(jnp.float32)
+                             + _g(x, g)).astype(mdt),
+            params, grads, bufs)
         def upd(x, g, m):
+            m = m.astype(jnp.float32)
             step_dir = _g(x, g) + beta * m if nesterov else m
             return (x.astype(jnp.float32) - lr * step_dir).astype(x.dtype)
         new_p = jax.tree.map(upd, params, grads, new_m)
@@ -60,44 +77,94 @@ class AdamState(NamedTuple):
     count: jax.Array
 
 
+class SM3Pair(NamedTuple):
+    """Factored second-moment statistics for one matrix-like leaf: ``row``
+    is the max over the last (lane) dim, ``col`` the max over the
+    second-to-last (row) dim — ``min(row, col)`` bounds the dense nu from
+    above.  Always fp32 (the stats are ~(R + C)/(R·C) of the dense buffer,
+    so quantizing them buys nothing)."""
+
+    row: jax.Array
+    col: jax.Array
+
+
+def _sm3_factored(x) -> bool:
+    return getattr(x, "ndim", 0) >= 2
+
+
 def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
-         weight_decay: float = 0.0) -> Optimizer:
+         weight_decay: float = 0.0, moment_dtype: Any = jnp.float32,
+         sm3: bool = False) -> Optimizer:
+    mdt = jnp.dtype(moment_dtype)
+
     def init(params):
-        z = lambda x: jnp.zeros_like(x, jnp.float32)
-        return AdamState(jax.tree.map(z, params), jax.tree.map(z, params),
-                         jnp.zeros((), jnp.int32))
+        mu = jax.tree.map(lambda x: jnp.zeros_like(x, mdt), params)
+        if sm3:
+            def stats(x):
+                if not _sm3_factored(x):
+                    return jnp.zeros_like(x, jnp.float32)
+                return SM3Pair(
+                    row=jnp.zeros(x.shape[:-1] + (1,), jnp.float32),
+                    col=jnp.zeros(x.shape[:-2] + (1, x.shape[-1]),
+                                  jnp.float32))
+            nu = jax.tree.map(stats, params)
+        else:
+            nu = jax.tree.map(lambda x: jnp.zeros_like(x, mdt), params)
+        return AdamState(mu, nu, jnp.zeros((), jnp.int32))
+
+    def _upd_one(x, g, m_old, nu_old, c1, c2):
+        g = g.astype(jnp.float32)
+        m = b1 * m_old.astype(jnp.float32) + (1 - b1) * g
+        if sm3 and isinstance(nu_old, SM3Pair):
+            vhat = jnp.minimum(nu_old.row, nu_old.col)
+            v = b2 * vhat + (1 - b2) * jnp.square(g)
+            nu_new = SM3Pair(row=jnp.max(v, axis=-1, keepdims=True),
+                             col=jnp.max(v, axis=-2, keepdims=True))
+        else:
+            v = (b2 * nu_old.astype(jnp.float32)
+                 + (1 - b2) * jnp.square(g))
+            nu_new = v.astype(mdt)
+        step = lr * (m / c1) / (jnp.sqrt(v / c2) + eps)
+        if weight_decay:
+            step = step + lr * weight_decay * x.astype(jnp.float32)
+        return ((x.astype(jnp.float32) - step).astype(x.dtype),
+                m.astype(mdt), nu_new)
 
     def update(params, grads, state):
         count = state.count + 1
         c1 = 1.0 - b1 ** count.astype(jnp.float32)
         c2 = 1.0 - b2 ** count.astype(jnp.float32)
-        new_mu = jax.tree.map(
-            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
-            state.mu, grads)
-        new_nu = jax.tree.map(
-            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
-            state.nu, grads)
-
-        def upd(x, m, v):
-            step = lr * (m / c1) / (jnp.sqrt(v / c2) + eps)
-            if weight_decay:
-                step = step + lr * weight_decay * x.astype(jnp.float32)
-            return (x.astype(jnp.float32) - step).astype(x.dtype)
-
-        new_p = jax.tree.map(upd, params, new_mu, new_nu)
-        return new_p, AdamState(new_mu, new_nu, count)
+        p_leaves, tdef = jax.tree_util.tree_flatten(params)
+        g_leaves = jax.tree_util.tree_leaves(grads)
+        mu_leaves = jax.tree_util.tree_leaves(state.mu)
+        nu_leaves = jax.tree.leaves(
+            state.nu, is_leaf=lambda n: isinstance(n, SM3Pair))
+        new_p, new_mu, new_nu = [], [], []
+        for x, g, m, v in zip(p_leaves, g_leaves, mu_leaves, nu_leaves):
+            xp, mp, vp = _upd_one(x, g, m, v, c1, c2)
+            new_p.append(xp)
+            new_mu.append(mp)
+            new_nu.append(vp)
+        return (jax.tree_util.tree_unflatten(tdef, new_p),
+                AdamState(jax.tree_util.tree_unflatten(tdef, new_mu),
+                          jax.tree_util.tree_unflatten(tdef, new_nu),
+                          count))
 
     return Optimizer(init, update)
 
 
 def make_inner(cfg) -> Optimizer:
     """Build the inner optimizer from a VRLConfig."""
+    mdt = getattr(cfg, "moment_dtype", "float32")
     if cfg.inner_optimizer == "sgd":
         if cfg.momentum:
-            return momentum(cfg.learning_rate, cfg.momentum, cfg.weight_decay)
+            return momentum(cfg.learning_rate, cfg.momentum, cfg.weight_decay,
+                            moment_dtype=mdt)
         return sgd(cfg.learning_rate, cfg.weight_decay)
     if cfg.inner_optimizer == "momentum":
-        return momentum(cfg.learning_rate, cfg.momentum or 0.9, cfg.weight_decay)
+        return momentum(cfg.learning_rate, cfg.momentum or 0.9,
+                        cfg.weight_decay, moment_dtype=mdt)
     if cfg.inner_optimizer == "adam":
-        return adam(cfg.learning_rate, weight_decay=cfg.weight_decay)
+        return adam(cfg.learning_rate, weight_decay=cfg.weight_decay,
+                    moment_dtype=mdt, sm3=getattr(cfg, "sm3", False))
     raise ValueError(cfg.inner_optimizer)

@@ -78,6 +78,32 @@ def worker_stacked_spec(spec: P, mesh_cfg: MeshConfig) -> P:
     return P(_norm(tuple(mesh_cfg.worker_axes)), *spec)
 
 
+def engine_shard_axis(mesh_cfg: MeshConfig, ecfg) -> Optional[str]:
+    """Resolve the engine-state row-shard axis against a MeshConfig.
+
+    The flat-buffer engine shards every (W, R, C) buffer's row dim over
+    ``ecfg.shard_axis`` (``EngineConfig``); on the production mesh that
+    axis REUSES the tensor axis "model" — engine rows and model tensor
+    dims shard over the same devices, so neither replicates across the
+    other's axis.  Returns None when sharding is off (``shards <= 1``) or
+    the mesh simply lacks the axis (host smoke meshes), and raises when
+    the axis exists at the WRONG size — a silent half-shard would desync
+    the per-shard all-reduce.
+    """
+    if getattr(ecfg, "shards", 1) <= 1:
+        return None
+    sizes = dict(zip(mesh_cfg.axis_names, mesh_cfg.shape))
+    ax = ecfg.shard_axis
+    if ax not in sizes:
+        return None
+    if sizes[ax] != ecfg.shards:
+        raise ValueError(
+            f"engine shards={ecfg.shards} but mesh axis {ax!r} has size "
+            f"{sizes[ax]} — the row-shard count must equal the mesh axis "
+            f"backing it")
+    return ax
+
+
 def batch_spec(mesh_cfg: MeshConfig, *, worker_stacked: bool, extra_dims: int) -> P:
     """Spec for (W, local_batch, ...) train batches or (batch, ...) serve."""
     w = tuple(mesh_cfg.worker_axes)

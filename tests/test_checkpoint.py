@@ -82,3 +82,60 @@ def test_flat_state_residuals_roundtrip(tmp_path):
     with pytest.raises(ValueError, match="compressor"):
         ckpt.restore_flat_state(str(tmp_path / "u"), s0, eng0.spec,
                                 compressors=meta)
+
+
+def test_sharded_quantized_state_roundtrip(tmp_path):
+    """Sharded + quantized engine state round-trips bitwise, and the two
+    layout dials fail loudly on mismatch: a different shard count changes
+    ``spec.meta()`` (row padding is shard-aligned) and fails the flat_spec
+    comparison; different moment storage (bf16 momentum, SM3 second
+    moment) fails the ``moments`` record comparison."""
+    import dataclasses
+
+    import pytest
+
+    from repro.configs.base import EngineConfig
+
+    cfg = VRLConfig(algorithm="vrl_sgd", comm_period=2, learning_rate=0.05,
+                    warmup=False, update_backend="xla",
+                    inner_optimizer="adam",
+                    moment_dtype="bfloat16", sm3=True,
+                    engine=EngineConfig(block=8, shards=4))
+    template = {"w": jnp.zeros((40, 24)), "b": jnp.zeros((17,))}
+    eng = make_engine(cfg, template)
+    p0 = {"w": jnp.ones((40, 24)) * 0.3, "b": jnp.ones((17,)) * -0.1}
+    state = eng.init(p0, 2)
+    step = jax.jit(eng.train_step)
+    for t in range(3):     # past a sync so moments/delta are non-trivial
+        g = jax.tree.map(lambda x: jnp.sin(x + t), eng.params_tree(state))
+        state = step(state, g)
+    assert state.inner.mu.dtype == jnp.bfloat16
+    moments = ckpt.moments_meta(cfg)
+    assert moments == {"moment_dtype": "bfloat16", "sm3": True}
+    ckpt.save_flat_state(str(tmp_path / "q"), state, eng.spec,
+                         meta={"step": 3}, moments=moments)
+    out = ckpt.restore_flat_state(str(tmp_path / "q"), state, eng.spec,
+                                  moments=moments)
+    # bf16 momentum and the SM3 (row, col) fp32 stats restore BITWISE —
+    # including the sub-fp32 dtype surviving the npz round-trip
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(out)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # a different shard count is a different row padding: loud flat_spec
+    # mismatch, not a silently reshaped restore
+    cfg2 = dataclasses.replace(cfg, engine=EngineConfig(block=8, shards=2))
+    eng2 = make_engine(cfg2, template)
+    s2 = eng2.init(p0, 2)
+    with pytest.raises(ValueError, match="flat-buffer layout"):
+        ckpt.restore_flat_state(str(tmp_path / "q"), s2, eng2.spec,
+                                moments=ckpt.moments_meta(cfg2))
+    # different moment storage refuses both ways
+    cfg3 = dataclasses.replace(cfg, moment_dtype="float32", sm3=False)
+    with pytest.raises(ValueError, match="moment"):
+        ckpt.restore_flat_state(str(tmp_path / "q"), state, eng.spec,
+                                moments=ckpt.moments_meta(cfg3))
+    ckpt.save_flat_state(str(tmp_path / "p"), state, eng.spec,
+                         moments=ckpt.moments_meta(cfg3))  # saver lied
+    with pytest.raises(ValueError, match="moment"):
+        ckpt.restore_flat_state(str(tmp_path / "p"), state, eng.spec,
+                                moments=moments)

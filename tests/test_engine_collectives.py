@@ -157,6 +157,120 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
+SCRIPT_SHARDED = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses
+    import json
+    import re
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro import compat
+    from repro.configs.base import EngineConfig, VRLConfig
+    from repro.core import make_engine
+    from repro.core.engine import state_partition_specs
+
+    # (2 workers x 4 shards) mesh: every engine buffer's row dim splits
+    # over "shard", workers over "data" — the round-closing sync must STAY
+    # exactly one all-reduce (per-shard, worker axis only)
+    mesh = jax.make_mesh((2, 4), ("data", "shard"), devices=jax.devices())
+    template = {"w": jnp.zeros((64, 16)), "b": jnp.zeros((33,))}
+    cfg = VRLConfig(algorithm="vrl_sgd", comm_period=4, learning_rate=0.05,
+                    weight_decay=0.0, warmup=False, update_backend="fused",
+                    inner_optimizer="adam",
+                    engine=EngineConfig(block=8, shards=4))
+    eng = make_engine(cfg, template, mesh=mesh, worker_axes=("data",))
+    p0 = {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 16)),
+          "b": jax.random.normal(jax.random.PRNGKey(1), (33,))}
+
+    def place(e, st):
+        specs = state_partition_specs(st, ("data",), shard_axis="shard",
+                                      shards=4)
+        return jax.device_put(st, compat.shardings(mesh, specs))
+
+    state = place(eng, eng.init(p0, 2))
+    out = {}
+    # the params buffer really is row-sharded: each device holds 1/4 of
+    # the rows for its single worker
+    w, r, c = state.params.shape
+    out["shard_shape"] = list(
+        state.params.sharding.shard_shape(state.params.shape))
+    out["expect_shard_shape"] = [1, r // 4, c]
+
+    def grads(params, t):
+        return jax.tree.map(lambda x: jnp.sin(3.0 * x + t) + 0.1 * x, params)
+
+    def count_ar(hlo):
+        return len(re.findall(r"all-reduce(?:-start)?\\(", hlo))
+
+    hlo_sync = jax.jit(eng.sync).lower(state).compile().as_text()
+    out["sync_all_reduce"] = count_ar(hlo_sync)
+    # HLO counts go over the layout-native hot path (pre-flattened,
+    # shard-placed grads buffer, as the round benchmark drives it):
+    # pytree grads would be unflattened/reflattened across the sharded
+    # row dim inside jit, and the SPMD partitioner's resharding of that
+    # reshape emits masked all-reduces that are artifacts of the test
+    # harness, not engine communication
+    gk_buf = jax.device_put(
+        jnp.sin(0.01 * jnp.arange(4 * w * r * c, dtype=jnp.float32)
+                ).reshape(4, w, r, c),
+        NamedSharding(mesh, P(None, "data", "shard", None)))
+    hlo_round = jax.jit(eng.round_step_flat, donate_argnums=(0,)
+                        ).lower(state, gk_buf).compile().as_text()
+    out["round_all_reduce"] = count_ar(hlo_round)
+    # the local steps' contribution: the whole round minus the one sync
+    out["local_all_reduce"] = out["round_all_reduce"] - out["sync_all_reduce"]
+
+    # trajectory parity: the sharded-mesh run matches the meshless
+    # unsharded engine (same config at shards=1; sharding is placement,
+    # not math)
+    eng0 = make_engine(dataclasses.replace(
+        cfg, engine=EngineConfig(block=8, shards=1)), template)
+    s0 = eng0.init(p0, 2)
+    step = jax.jit(lambda s, t: eng.train_step(
+        s, grads(eng.params_tree(s), t)))
+    step0 = jax.jit(lambda s, t: eng0.train_step(
+        s, grads(eng0.params_tree(s), t)))
+    for t in range(9):
+        state = step(state, jnp.float32(t))
+        s0 = step0(s0, jnp.float32(t))
+    out["mesh_vs_unsharded_err"] = max(
+        float(jnp.max(jnp.abs(a - b))) for a, b in
+        zip(jax.tree.leaves(eng.params_tree(state)),
+            jax.tree.leaves(eng0.params_tree(s0))))
+
+    # quantized + factored moments on the sharded mesh: bf16 momentum and
+    # the SM3 (row, col) stats place cleanly (col's shard dim splits over
+    # "shard"), the sync count holds, and the trajectory matches the
+    # meshless xla twin at the SAME shard count (the SM3 cover depends on
+    # shards, so like compares with like)
+    cfg_q = dataclasses.replace(cfg, moment_dtype="bfloat16", sm3=True)
+    eng_q = make_engine(cfg_q, template, mesh=mesh, worker_axes=("data",))
+    sq = place(eng_q, eng_q.init(p0, 2))
+    out["sm3_col_shard_shape"] = list(
+        sq.inner.nu.col.sharding.shard_shape(sq.inner.nu.col.shape))
+    hlo_sync_q = jax.jit(eng_q.sync).lower(sq).compile().as_text()
+    out["sm3_sync_all_reduce"] = count_ar(hlo_sync_q)
+    eng_qx = make_engine(dataclasses.replace(
+        cfg_q, update_backend="xla"), template)
+    sqx = eng_qx.init(p0, 2)
+    stepq = jax.jit(lambda s, t: eng_q.train_step(
+        s, grads(eng_q.params_tree(s), t)))
+    stepqx = jax.jit(lambda s, t: eng_qx.train_step(
+        s, grads(eng_qx.params_tree(s), t)))
+    for t in range(9):
+        sq = stepq(sq, jnp.float32(t))
+        sqx = stepqx(sqx, jnp.float32(t))
+    out["sm3_mesh_vs_xla_err"] = max(
+        float(jnp.max(jnp.abs(a - b))) for a, b in
+        zip(jax.tree.leaves(eng_q.params_tree(sq)),
+            jax.tree.leaves(eng_qx.params_tree(sqx))))
+    print(json.dumps(out))
+""")
+
+
 def test_fused_sync_is_one_flat_all_reduce():
     env = dict(os.environ, PYTHONPATH="src")
     res = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
@@ -184,3 +298,55 @@ def test_fused_sync_is_one_flat_all_reduce():
     # and the sharded trajectory matches the reference path (sum/N vs mean
     # rounding differs, so a slightly looser bound than the 1-device parity)
     assert out["mesh_vs_reference_err"] < 1e-5, out
+
+
+def test_row_sharded_round_is_one_all_reduce():
+    """Model-axis sharding of the engine buffers keeps the collective
+    contract: on a (data=2, shard=4) mesh every (W, R, C) buffer's row dim
+    splits over "shard", and the compiled round STILL shows exactly one
+    sync all-reduce (a per-shard all-reduce over the worker axis only —
+    1/shards of the bytes per device, same collective count).  The sharded
+    trajectory is placement, not math: it matches the meshless unsharded
+    engine, and the quantized variant (bf16 momentum + SM3 factored second
+    moment) matches its meshless xla twin at the same shard count."""
+    env = dict(os.environ, PYTHONPATH="src")
+    res = subprocess.run([sys.executable, "-c", SCRIPT_SHARDED], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stderr[-2000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    # the buffers really are row-sharded, 1/4 of the rows per device
+    assert out["shard_shape"] == out["expect_shard_shape"], out
+    assert out["sm3_col_shard_shape"] == [1, 1, 256], out
+    # the headline property survives sharding: one all-reduce, total
+    assert out["sync_all_reduce"] == 1, out
+    assert out["local_all_reduce"] == 0, out
+    assert out["round_all_reduce"] == 1, out
+    assert out["sm3_sync_all_reduce"] == 1, out
+    # sharding is placement-only: trajectories match the meshless runs
+    assert out["mesh_vs_unsharded_err"] <= 1e-6, out
+    assert out["sm3_mesh_vs_xla_err"] <= 1e-5, out
+
+
+def test_shard_axis_size_mismatch_fails_loudly():
+    """A config asking for shards=N against a mesh whose shard axis has a
+    different (>1) size must refuse loudly, not silently half-shard.  A
+    size-1 (or absent) axis instead degrades to layout-only padding — the
+    single-device smoke path — and returns no placement axis."""
+    import pytest
+
+    from repro.configs.base import EngineConfig, MeshConfig
+    from repro.sharding import specs as sh
+
+    ecfg = EngineConfig(block=8, shards=4, shard_axis="shard")
+    bad = MeshConfig(shape=(4, 2), axis_names=("data", "shard"),
+                     worker_axes=("data",), tensor_axes=())
+    with pytest.raises(ValueError, match="shard"):
+        sh.engine_shard_axis(bad, ecfg)
+    good = MeshConfig(shape=(2, 4), axis_names=("data", "shard"),
+                      worker_axes=("data",), tensor_axes=())
+    assert sh.engine_shard_axis(good, ecfg) == "shard"
+    # absent axis: layout-only, no placement
+    flat = MeshConfig(shape=(8,), axis_names=("data",),
+                      worker_axes=("data",), tensor_axes=())
+    assert sh.engine_shard_axis(flat, ecfg) is None
+    assert sh.engine_shard_axis(good, EngineConfig(shards=1)) is None

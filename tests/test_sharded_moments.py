@@ -1,0 +1,213 @@
+"""Parity matrix for the shrunk engine state: bf16 momentum and the SM3
+factored second moment across all three executors, layout-only sharding
+as a bitwise no-op, and composition smokes with the other round features
+(compressed sync, overlapped rounds, the hierarchical engine).
+
+The moment dials change STORAGE, not the algorithm: SM3 at fp32 must
+track the reference executor at the repo's fused-parity tolerance, and
+bf16 storage adds only rounding noise that stays a small multiple of a
+bf16 ulp over a short run.  Sharding never changes math at all — the row
+padding it adds is inert (zero lanes), so shards=1 and shards=4 produce
+bitwise-identical unflattened trees.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import compressors as cc
+from repro.configs.base import EngineConfig, HierConfig, VRLConfig
+from repro.core import get_algorithm, make_engine
+
+TEMPLATE = {"w": jnp.zeros((40, 24)), "b": jnp.zeros((17,))}
+
+
+def _params0():
+    return {"w": jax.random.normal(jax.random.PRNGKey(0), (40, 24)) * 0.3,
+            "b": jax.random.normal(jax.random.PRNGKey(1), (17,)) * 0.3}
+
+
+def _cfg(**kw):
+    kw.setdefault("engine", EngineConfig(block=8))
+    return VRLConfig(algorithm="vrl_sgd", comm_period=2, learning_rate=0.05,
+                     weight_decay=1e-3, warmup=False,
+                     inner_optimizer="adam", **kw)
+
+
+def _grads(params, t):
+    """Per-worker phase so workers drift between syncs (exercises the
+    drift correction), matching the engine-parity test's pseudo-grads."""
+    def one(x):
+        w = x.shape[0]
+        phase = jnp.arange(w, dtype=x.dtype).reshape(
+            (w,) + (1,) * (x.ndim - 1))
+        return jnp.sin(3.0 * x + 0.7 * t + phase) + 0.1 * x
+    return jax.tree.map(one, params)
+
+
+def _run(cfg, steps=7, workers=4):
+    eng = make_engine(cfg, TEMPLATE)
+    state = eng.init(_params0(), workers)
+    step = jax.jit(lambda s, t: eng.train_step(
+        s, _grads(eng.params_tree(s), t)))
+    for t in range(steps):
+        state = step(state, jnp.float32(t))
+    return eng, state
+
+
+def _run_reference(cfg, steps=7, workers=4):
+    """The per-leaf tree path (update_backend='reference' in train_loop):
+    ``get_algorithm`` driven directly, averaged over the worker axis."""
+    alg = get_algorithm(cfg.algorithm)
+    state = alg.init(cfg, _params0(), workers)
+    step = jax.jit(lambda s, t: alg.train_step(
+        cfg, s, _grads(s.params, t)))
+    for t in range(steps):
+        state = step(state, jnp.float32(t))
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0), state.params)
+
+
+def _avg(eng, state):
+    return eng.average_model(state)
+
+
+def _max_diff(a, b):
+    return max(float(jnp.max(jnp.abs(jnp.asarray(x, jnp.float32)
+                                     - jnp.asarray(y, jnp.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ------------------------------------------------- executor parity matrix
+def test_sm3_fp32_parity_across_executors():
+    """SM3's factored vhat = min(row, col) is the same program on both
+    flat executors (fused Pallas and xla twin share the packed-buffer
+    cover): parity at the fused-engine tolerance.  The per-leaf reference
+    covers each LEAF's own rows/lanes — a different (still upper-bounding)
+    cover, so it tracks only at the approximation scale, not to ulps."""
+    outs = {"reference": _run_reference(_cfg(update_backend="reference",
+                                             sm3=True))}
+    for backend in ("xla", "fused"):
+        cfg = _cfg(update_backend=backend, sm3=True)
+        outs[backend] = _avg(*_run(cfg))
+    assert _max_diff(outs["xla"], outs["fused"]) < 1e-5
+    assert _max_diff(outs["xla"], outs["reference"]) < 1e-1
+    assert _max_diff(outs["fused"], outs["reference"]) < 1e-1
+
+
+def test_bf16_moments_parity_across_executors():
+    """bf16 moment storage (dense nu, no SM3 so all three covers agree)
+    rounds at the same program points everywhere; executors may land on
+    adjacent bf16 values (their pre-rounding ULP-level differences can
+    straddle a rounding boundary), so the bound is a few bf16 ulps
+    through the lr, not fp32-tight."""
+    outs = {"reference": _run_reference(
+        _cfg(update_backend="reference", moment_dtype="bfloat16"))}
+    for backend in ("xla", "fused"):
+        cfg = _cfg(update_backend=backend, moment_dtype="bfloat16")
+        outs[backend] = _avg(*_run(cfg))
+    assert _max_diff(outs["xla"], outs["fused"]) < 1e-3
+    assert _max_diff(outs["xla"], outs["reference"]) < 1e-3
+    assert _max_diff(outs["fused"], outs["reference"]) < 1e-3
+
+
+def test_bf16_trajectory_tracks_fp32():
+    """Quantized moments stay on the fp32 trajectory over a multi-round
+    run — the drift bound the sharded benchmark gates on."""
+    base = _avg(*_run(_cfg(update_backend="xla"), steps=9))
+    bf16 = _avg(*_run(_cfg(update_backend="xla",
+                           moment_dtype="bfloat16"), steps=9))
+    sm3 = _avg(*_run(_cfg(update_backend="xla", moment_dtype="bfloat16",
+                          sm3=True), steps=9))
+    assert 0.0 < _max_diff(bf16, base) < 5e-2
+    assert _max_diff(sm3, base) < 2e-1  # factored vhat is an approximation
+
+
+# ------------------------------------------------- layout-only sharding
+def test_sharded_layout_is_bitwise():
+    """shards=N without a mesh only grows the inert row padding: the
+    unflattened trees are BITWISE those of shards=1 at the same block, on
+    both flat executors."""
+    for backend in ("xla", "fused"):
+        e1, s1 = _run(_cfg(update_backend=backend,
+                           engine=EngineConfig(block=8, shards=1)))
+        e4, s4 = _run(_cfg(update_backend=backend,
+                           engine=EngineConfig(block=8, shards=4)))
+        assert s4.params.shape[-2] % 4 == 0
+        assert s4.params.shape[-2] >= s1.params.shape[-2]
+        for a, b in zip(jax.tree.leaves(_avg(e1, s1)),
+                        jax.tree.leaves(_avg(e4, s4))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sharded_moment_state_shapes():
+    """The moment dials actually shrink the buffers: bf16 halves mu/nu,
+    SM3 replaces nu's (W, R, C) with a row stat plus one col row per
+    shard."""
+    cfg = _cfg(moment_dtype="bfloat16", sm3=True,
+               engine=EngineConfig(block=8, shards=4))
+    eng, state = _run(cfg, steps=2)
+    w, r, c = state.params.shape
+    assert state.inner.mu.dtype == jnp.bfloat16
+    assert state.inner.nu.row.shape == (w, r, 1)
+    assert state.inner.nu.col.shape == (w, 4, c)
+    dense = w * r * c * 4
+    sm3_bytes = (state.inner.nu.row.nbytes + state.inner.nu.col.nbytes)
+    # exactly (R + shards*C)/(R*C) of the dense fp32 buffer — at real
+    # model rows (R >> shards, C = 256 lanes) that's >100x; even at this
+    # toy R=32 it's several-fold
+    assert sm3_bytes == 4 * (w * r + w * 4 * c)
+    assert sm3_bytes < dense / 4
+
+
+# ------------------------------------------------- composition smokes
+def test_compose_with_compressed_sync():
+    """Sharded + quantized engine under top-k compressed sync: runs, sync
+    fires (error-feedback residual is non-trivial), params stay finite."""
+    cfg = _cfg(update_backend="xla", moment_dtype="bfloat16", sm3=True,
+               compress=cc.parse_compressor("topk:8"),
+               engine=EngineConfig(block=8, shards=4))
+    eng, state = _run(cfg, steps=5)
+    assert float(jnp.max(jnp.abs(state.comm.resid))) > 0.0
+    assert all(bool(jnp.all(jnp.isfinite(x)))
+               for x in jax.tree.leaves(_avg(eng, state)))
+
+
+def test_compose_with_overlapped_rounds():
+    """Sharded + quantized engine under overlapped rounds: the stale-fold
+    round runs and stays finite through several boundaries."""
+    cfg = _cfg(update_backend="xla", moment_dtype="bfloat16",
+               overlap=True, engine=EngineConfig(block=8, shards=4))
+    eng = make_engine(cfg, TEMPLATE)
+    state = eng.init(_params0(), 4)
+    rstep = jax.jit(eng.round_step, donate_argnums=(0,))
+    for t in range(4):
+        gk = jax.tree.map(
+            lambda x: jnp.stack([jnp.sin(3.0 * x + 0.7 * (2 * t + i))
+                                 + 0.1 * x for i in range(2)]),
+            eng.params_tree(state))
+        state = rstep(state, gk)
+    assert all(bool(jnp.all(jnp.isfinite(x)))
+               for x in jax.tree.leaves(_avg(eng, state)))
+
+
+def test_compose_with_hierarchical_engine():
+    """The two-level (P, D, R, C) engine takes the same dials: sharded
+    rows + bf16/SM3 moments, fused-vs-xla parity at the bf16 bound."""
+    outs = {}
+    for backend in ("xla", "fused"):
+        cfg = VRLConfig(algorithm="hier_vrl_sgd", learning_rate=0.05,
+                        weight_decay=1e-3, warmup=False,
+                        inner_optimizer="adam", update_backend=backend,
+                        moment_dtype="bfloat16", sm3=True,
+                        hier=HierConfig(k1=2, k2=4, grid=(2, 2)),
+                        engine=EngineConfig(block=8, shards=2))
+        eng = make_engine(cfg, TEMPLATE)
+        state = eng.init(_params0(), 4)
+        step = jax.jit(lambda s, t, e=eng: e.train_step(
+            s, _grads(e.params_tree(s), t)))
+        for t in range(9):      # crosses both sync levels
+            state = step(state, jnp.float32(t))
+        assert state.inner.mu.dtype == jnp.bfloat16
+        outs[backend] = _avg(eng, state)
+    assert _max_diff(outs["fused"], outs["xla"]) < 1e-3
