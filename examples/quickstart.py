@@ -61,6 +61,42 @@ def train(algorithm: str, data, compress: str | None = None,
     return losses
 
 
+def train_elastic(data) -> list[float]:
+    """VRL-SGD with elastic membership: worker 1 crashes a third of the
+    way in and rejoins at two thirds — the run never stops, the other
+    workers' invariants are repaired in place."""
+    cfg = registry.smoke_arch("qwen2-0.5b", num_layers=2, d_model=64,
+                              d_ff=128, vocab_size=64, num_heads=4,
+                              num_kv_heads=2, head_dim=16)
+    vrl = VRLConfig(algorithm="vrl_sgd", comm_period=K, learning_rate=0.2,
+                    membership=True)
+    bundle = make_train_step(cfg, vrl, remat=False)
+    state = bundle.init_state(jax.random.PRNGKey(0), WORKERS)
+    step = jax.jit(bundle.train_step)
+    set_member = jax.jit(bundle.engine.set_membership)
+
+    @jax.jit
+    def eval_avg(state, toks, labels):
+        logits, _ = T.forward(cfg, bundle.average_model(state),
+                              toks.reshape(-1, SEQ))
+        return cross_entropy_lm(logits, labels.reshape(-1, SEQ))
+
+    mask = np.ones(WORKERS, np.float32)
+    losses = []
+    for t in range(STEPS):
+        if t == STEPS // 3:              # crash: drop worker 1, repair
+            mask[1] = 0.0
+            state = set_member(state, mask)
+        if t == 2 * STEPS // 3:          # rejoin from the consensus
+            mask[1] = 1.0
+            state = set_member(state, mask)
+        toks = jnp.asarray(data[t])
+        labels = jnp.roll(toks, -1, axis=-1)
+        state, _ = step(state, toks, labels)
+        losses.append(float(eval_avg(state, toks, labels)))
+    return losses
+
+
 def main():
     cfg = registry.smoke_arch("qwen2-0.5b", vocab_size=64)
     print("non-identical data: each worker samples its own skewed unigram "
@@ -119,6 +155,32 @@ def main():
     print(f"  {'vrl+shard':10s} avg-model loss: start {losses_q[0]:.3f} -> "
           f"final {np.mean(losses_q[-10:]):.3f}  "
           f"(4-way row-sharded buffers, bf16 + SM3 factored moments)")
+
+    # Fault tolerance: with membership=True the state carries an
+    # active-worker mask and every sync is a masked mean over it — a
+    # crashed worker's rows stay in the buffers (nothing recompiles) but
+    # no sync reads them.  engine.set_membership is the between-rounds
+    # repair: it recentres Δ over the survivors (Σ_i Δ_i = 0 again, the
+    # invariant that makes the next sync a correct VRL update) and
+    # reseeds rejoiners from the continuing consensus.  Unlike
+    # --deadline (a straggler who MISSES a round but keeps training),
+    # a crash leaves the active set until its rejoin.  On the launch
+    # driver the whole story is flag-driven — deterministic fault
+    # injection, divergence rollback, atomic step checkpoints, and
+    # elastic restarts that reshard a W-worker checkpoint onto W':
+    #   PYTHONPATH=src python -m repro.launch.train --smoke --workers 8 \
+    #       --membership --guard --ckpt /tmp/run --ckpt-every 10 \
+    #       --faults "nan@3:12,crash@1:15,rejoin@1:30,killsave:20"
+    #   PYTHONPATH=src python -m repro.launch.train --smoke --workers 4 \
+    #       --ckpt /tmp/run --resume auto        # 8 -> 4, Δ recentred
+    # What survives a crash: the newest COMPLETE ckpt-XXXXXXXX dir (the
+    # save commits via atomic rename, so a mid-save kill leaves the
+    # previous good step), the global step, params/Δ/bias/moments, and
+    # compressor/layout metadata that refuses mismatched restores.
+    losses_e = train_elastic(data)
+    print(f"  {'vrl+elastic':10s} avg-model loss: start {losses_e[0]:.3f} "
+          f"-> final {np.mean(losses_e[-10:]):.3f}  "
+          f"(worker 1 crashed at step 50, rejoined at 100)")
 
 
 if __name__ == "__main__":

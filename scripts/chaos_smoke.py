@@ -1,0 +1,85 @@
+"""CI chaos smoke: faulted + killed + resharded run vs the fault-free run.
+
+Three driver invocations on an 8-device host mesh
+(``--xla_force_host_platform_device_count=8``):
+
+  1. clean    — W=8, no faults, 40 steps               -> clean.json
+  2. chaos A  — W=8 with an injected NaN gradient, a crash/rejoin pair,
+                and a simulated kill inside the step-20 checkpoint save;
+                the process "dies" mid-run (--steps 24)
+  3. chaos B  — ``--resume auto`` restart at W=4 (resharding the W=8
+                checkpoint), same fault schedule, runs to 40 -> chaos.json
+
+Gate: the chaos run's final average-model loss is finite and within
+tolerance of the clean run's.  The trajectories legitimately differ
+(membership churn + resharding change the effective batch), so the
+tolerance is loose — this is a liveness-and-sanity gate, not a bitwise
+one (bitwise full-mask parity is asserted in tests/test_fault.py).
+
+Run from the repo root:  python scripts/chaos_smoke.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+
+FAULTS = "nan@1:12,crash@1:15,rejoin@1:30,killsave:20"
+COMMON = ["--arch", "qwen2-0.5b", "--smoke", "--batch", "2", "--seq", "32",
+          "--k", "5", "--lr", "0.02", "--backend", "xla", "--mesh-grid"]
+
+
+def run(tag, extra, *, devices=8, check=True):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices} "
+                        + env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = os.path.abspath("src")
+    cmd = [sys.executable, "-m", "repro.launch.train"] + COMMON + extra
+    print(f"--- {tag}: {' '.join(extra)}", flush=True)
+    proc = subprocess.run(cmd, env=env, text=True, capture_output=True)
+    sys.stdout.write(proc.stdout[-3000:])
+    sys.stderr.write(proc.stderr[-3000:])
+    if check and proc.returncode != 0:
+        raise SystemExit(f"{tag} failed with rc={proc.returncode}")
+    return proc
+
+
+def main() -> int:
+    work = tempfile.mkdtemp(prefix="chaos-smoke-")
+    clean_json = os.path.join(work, "clean.json")
+    chaos_json = os.path.join(work, "chaos.json")
+    ckpt = os.path.join(work, "ckpt")
+    try:
+        run("clean", ["--workers", "8", "--steps", "40",
+                      "--loss-out", clean_json])
+        run("chaos-A (dies mid-run)",
+            ["--workers", "8", "--steps", "24", "--membership", "--guard",
+             "--faults", FAULTS, "--ckpt", ckpt, "--ckpt-every", "10"])
+        run("chaos-B (resume auto, resharded 8 -> 4)",
+            ["--workers", "4", "--steps", "40", "--membership", "--guard",
+             "--faults", FAULTS, "--ckpt", ckpt, "--ckpt-every", "10",
+             "--resume", "auto", "--loss-out", chaos_json])
+        with open(clean_json) as f:
+            clean = json.load(f)["avg_model_loss"]
+        with open(chaos_json) as f:
+            chaos = json.load(f)["avg_model_loss"]
+        tol = max(0.5, 0.15 * clean)
+        print(f"clean avg_model_loss {clean:.4f}  "
+              f"chaos avg_model_loss {chaos:.4f}  tol {tol:.4f}")
+        if not (chaos == chaos and abs(chaos) != float("inf")):
+            raise SystemExit("chaos run produced a non-finite final loss")
+        if abs(chaos - clean) > tol:
+            raise SystemExit(
+                f"chaos final loss {chaos:.4f} deviates from clean "
+                f"{clean:.4f} by more than {tol:.4f}")
+        print("chaos smoke OK")
+        return 0
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

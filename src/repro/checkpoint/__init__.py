@@ -1,8 +1,18 @@
 from repro.checkpoint.checkpoint import (  # noqa: F401
+    SimulatedKill,
+    kill_save,
+    latest_step,
     load_meta,
     moments_meta,
     restore,
     restore_flat_state,
     save,
     save_flat_state,
+    save_step,
+    step_dir,
+    validate_flat_meta,
+)
+from repro.checkpoint.reshard import (  # noqa: F401
+    restore_resharded,
+    saved_workers,
 )

@@ -5,18 +5,82 @@ restore the tree structure is rebuilt from the recorded key paths. No orbax
 dependency (offline container) — npz is fine at smoke/example scale, and the
 format records shard metadata so a real deployment can swap in a tensor-store
 backend behind the same interface.
+
+Atomicity
+---------
+
+A checkpoint is ONE file: ``arrays.npz`` with the json metadata embedded as
+a ``__meta__`` uint8 entry.  ``save`` writes a temp file in the same
+directory, fsyncs, and ``os.replace``s it over the final name — the rename
+is the commit point, so a process killed mid-save (for real, or via
+:func:`kill_save`) leaves either the previous complete checkpoint or a
+stale ``arrays.npz.tmp.*`` that the next save sweeps up; never a torn
+``arrays.npz``.  A sidecar ``meta.json`` is still written (best-effort,
+after the commit) for human inspection, and ``load_meta`` falls back to it
+for checkpoints from before the embedded format.
+
+Step-dir layout (``save_step`` / ``latest_step``): a run's checkpoint root
+holds ``ckpt-XXXXXXXX/`` per saved step plus an atomically-updated
+``latest`` pointer file; ``retain`` prunes all but the newest N step dirs.
+``--resume auto`` resolves through ``latest_step`` and survives a lost or
+stale pointer by falling back to a directory scan.
 """
 from __future__ import annotations
 
+import contextlib
+import glob
 import json
 import os
-from typing import Any
+import shutil
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
 
 
 SEP = "/"
+META_KEY = "__meta__"
+LATEST = "latest"
+
+
+class SimulatedKill(RuntimeError):
+    """Raised by a save under ``kill_save`` — stands in for SIGKILL at the
+    worst moment of a checkpoint write (tests and the chaos harness catch
+    it where a real kill would need a process restart)."""
+
+
+_KILL = {"phase": None}
+
+
+@contextlib.contextmanager
+def kill_save(phase: str = "mid-write"):
+    """Arm a one-shot simulated kill inside the next ``save``.
+
+    ``phase="mid-write"``: the temp file is torn (truncated to half its
+    bytes) and ``SimulatedKill`` raises BEFORE the commit rename — the
+    published ``arrays.npz`` must be untouched.
+    ``phase="pre-rename"``: the temp file is complete but the rename never
+    happens — the checkpoint still must not be considered written.
+    """
+    if phase not in ("mid-write", "pre-rename"):
+        raise ValueError(f"unknown kill_save phase {phase!r}")
+    prev = _KILL["phase"]
+    _KILL["phase"] = phase
+    try:
+        yield
+    finally:
+        _KILL["phase"] = prev
+
+
+def _maybe_kill(phase: str, tmp: str | None = None) -> None:
+    if _KILL["phase"] != phase:
+        return
+    _KILL["phase"] = None                      # one-shot: a kill fires once
+    if phase == "mid-write" and tmp is not None:
+        size = os.path.getsize(tmp)
+        with open(tmp, "r+b") as f:
+            f.truncate(max(size // 2, 1))
+    raise SimulatedKill(f"simulated kill during checkpoint save ({phase})")
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -40,7 +104,9 @@ def _path_str(p) -> str:
 def save(path: str, tree: Any, meta: dict | None = None) -> None:
     os.makedirs(path, exist_ok=True)
     flat = _flatten(tree)
-    np.savez(os.path.join(path, "arrays.npz"), **flat)
+    if META_KEY in flat:
+        raise ValueError(f"tree key {META_KEY!r} collides with the "
+                         f"embedded-metadata entry")
     treedef = jax.tree_util.tree_structure(tree)
     info = {
         "keys": list(flat.keys()),
@@ -49,8 +115,26 @@ def save(path: str, tree: Any, meta: dict | None = None) -> None:
         "shapes": {k: list(v.shape) for k, v in flat.items()},
         "dtypes": {k: str(v.dtype) for k, v in flat.items()},
     }
-    with open(os.path.join(path, "meta.json"), "w") as f:
-        json.dump(info, f, indent=1)
+    payload = np.frombuffer(json.dumps(info).encode("utf-8"), np.uint8)
+    final = os.path.join(path, "arrays.npz")
+    # sweep temp files orphaned by a previous kill — they were never
+    # published, so they are garbage by construction
+    for stale in glob.glob(final + ".tmp.*"):
+        with contextlib.suppress(OSError):
+            os.remove(stale)
+    tmp = f"{final}.tmp.{os.getpid()}"
+    with open(tmp, "wb") as f:
+        np.savez(f, **{META_KEY: payload}, **flat)
+        f.flush()
+        os.fsync(f.fileno())
+    # a SimulatedKill here leaves the temp behind, like a real SIGKILL
+    # would — the published arrays.npz is untouched either way
+    _maybe_kill("mid-write", tmp)
+    _maybe_kill("pre-rename")
+    os.replace(tmp, final)                       # the commit point
+    with contextlib.suppress(OSError):           # sidecar: human-readable,
+        with open(os.path.join(path, "meta.json"), "w") as f:  # best-effort
+            json.dump(info, f, indent=1)
 
 
 def restore(path: str, like: Any) -> Any:
@@ -77,8 +161,83 @@ def restore(path: str, like: Any) -> Any:
 
 
 def load_meta(path: str) -> dict:
+    """Checkpoint metadata — embedded ``__meta__`` npz entry first (the
+    atomic format), sidecar ``meta.json`` as the legacy fallback."""
+    npz = os.path.join(path, "arrays.npz")
+    if os.path.exists(npz):
+        with np.load(npz) as data:
+            if META_KEY in data:
+                return json.loads(bytes(data[META_KEY]).decode("utf-8"))
     with open(os.path.join(path, "meta.json")) as f:
         return json.load(f)
+
+
+# ------------------------------------------------------- step-dir layout
+
+def step_dir(root: str, step: int) -> str:
+    return os.path.join(root, f"ckpt-{step:08d}")
+
+
+def _write_latest(root: str, name: str) -> None:
+    tmp = os.path.join(root, f".latest.tmp.{os.getpid()}")
+    with open(tmp, "w") as f:
+        f.write(name)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, os.path.join(root, LATEST))
+
+
+def _complete(root: str, name: str) -> bool:
+    return os.path.exists(os.path.join(root, name, "arrays.npz"))
+
+
+def save_step(root: str, step: int, save_fn: Callable[[str], None],
+              *, retain: int = 0) -> str:
+    """Write one checkpoint under the step-dir layout.
+
+    ``save_fn(path)`` does the actual write (``save`` /
+    ``save_flat_state`` bound to the run's state) into the step dir;
+    only after it returns is the ``latest`` pointer flipped — a save
+    killed mid-write leaves the pointer on the previous good step.
+    ``retain > 0`` then prunes all but the newest ``retain`` step dirs
+    (the one just written always survives).
+    """
+    os.makedirs(root, exist_ok=True)
+    d = step_dir(root, step)
+    save_fn(d)
+    _write_latest(root, os.path.basename(d))
+    if retain > 0:
+        _prune(root, retain)
+    return d
+
+
+def latest_step(root: str) -> Optional[tuple[int, str]]:
+    """(step, path) of the newest COMPLETE checkpoint under ``root``, or
+    None.  Trusts the ``latest`` pointer when it names a complete step
+    dir; otherwise (pointer lost, stale, or torn) falls back to scanning
+    the step dirs."""
+    if not os.path.isdir(root):
+        return None
+    name = None
+    lf = os.path.join(root, LATEST)
+    if os.path.exists(lf):
+        with open(lf) as f:
+            cand = f.read().strip()
+        if cand and _complete(root, cand):
+            name = cand
+    if name is None:
+        steps = sorted(d for d in os.listdir(root)
+                       if d.startswith("ckpt-") and _complete(root, d))
+        if not steps:
+            return None
+        name = steps[-1]
+    return int(name.rsplit("-", 1)[1]), os.path.join(root, name)
+
+
+def _prune(root: str, retain: int) -> None:
+    steps = sorted(d for d in os.listdir(root) if d.startswith("ckpt-"))
+    for name in steps[:-retain]:
+        shutil.rmtree(os.path.join(root, name), ignore_errors=True)
 
 
 # ----------------------------------------------------- flat-engine states
@@ -160,6 +319,18 @@ def restore_flat_state(path: str, state_like: Any, spec, grid=None,
             "repro.comm.pair_meta(engine.compressors) so the recorded "
             "compressors can be validated")
     recorded = load_meta(path)["meta"]
+    validate_flat_meta(recorded, spec, compressors=compressors,
+                       moments=moments, grid=grid)
+    return restore(path, state_like)
+
+
+def validate_flat_meta(recorded: dict, spec, *, compressors=None,
+                       moments=None, grid=None) -> None:
+    """The restore-compatibility gate shared by ``restore_flat_state``
+    and the resharding restore: layout spec, sync compressors, moment
+    storage and (hierarchical) worker grid must all match the target
+    engine, each failing with a message naming the field and both
+    values."""
     rec_spec = recorded.get("flat_spec")
     if rec_spec is not None and rec_spec != spec.meta():
         raise ValueError(
@@ -186,4 +357,3 @@ def restore_flat_state(path: str, state_like: Any, spec, grid=None,
         raise ValueError(
             f"checkpoint worker grid {rec_grid} does not match the "
             f"engine's grid {list(grid)}")
-    return restore(path, state_like)

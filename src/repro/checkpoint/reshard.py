@@ -1,0 +1,137 @@
+"""Checkpointed resharding: restore a W-worker flat state onto W' workers.
+
+An elastic restart rarely gets the same fleet back.  ``restore_resharded``
+takes a flat-engine checkpoint saved at ``W`` workers and rebuilds a valid
+``FlatWorkerState`` for an engine initialized at ``W' != W``, by
+host-side row surgery on the (W, R, C) buffers:
+
+  params / moments   new row j copies saved row ``j % W`` (tiling — every
+                     new worker starts at a position the old run actually
+                     held, and moments stay consistent with their params)
+  delta / bias       tiled the same way, then RECENTRED to zero mean in
+                     float64 — the paper's invariant Σ_i Δ_i = 0 (and
+                     Σ_i B_i = 0 for BVR) is what makes the first post-
+                     restart sync a correct VRL update, and tiling alone
+                     breaks it whenever W' is not a multiple of W
+  comm residuals     zeroed — error feedback accumulated by the old
+                     membership has no meaningful owner in the new one
+                     (the first post-restart sync simply compresses a
+                     slightly larger payload)
+  comm references    kept — the drift reference is membership-independent
+  overlap pend       rebuilt from the resharded params (pend_k = 1): the
+                     next overlapped collective averages real positions
+  member             fresh full mask at W' (template's own init values)
+  step counters      kept — the run resumes its global step
+
+The unravel spec is W-independent (it describes one worker's (R, C)
+layout), so the same compatibility gate as ``restore_flat_state`` applies
+— layout, compressors, and moment storage must match, each failure naming
+the field and both values.  Hierarchical (pod-grid) checkpoints are
+refused: resharding a (P, D) grid is a topology decision, not row
+surgery.  Data assignments are resharded separately with
+``data.partition.repartition``.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpoint import (SEP, _carries_comm, _path_str,
+                                         load_meta, validate_flat_meta)
+
+
+def saved_workers(path: str) -> int:
+    """Leading worker-axis size of the checkpoint at ``path``."""
+    shapes = load_meta(path).get("shapes", {})
+    if "params" not in shapes:
+        raise ValueError(
+            f"checkpoint at {path!r} has no 'params' entry — not a "
+            f"flat-engine state")
+    return int(shapes["params"][0])
+
+
+def _tile(arr: np.ndarray, w_new: int) -> np.ndarray:
+    return arr[np.arange(w_new) % arr.shape[0]]
+
+
+def _recenter(arr: np.ndarray) -> np.ndarray:
+    shift = arr.astype(np.float64).mean(axis=0, keepdims=True)
+    return (arr.astype(np.float64) - shift).astype(arr.dtype)
+
+
+def restore_resharded(path: str, state_like: Any, spec, *,
+                      compressors: dict | None = None,
+                      moments: dict | None = None) -> Any:
+    """Restore the checkpoint at ``path`` into ``state_like`` (a fresh
+    ``engine.init`` state at the NEW worker count), resharding the
+    worker axis per the module rules."""
+    recorded = load_meta(path)["meta"]
+    if recorded.get("worker_grid") is not None:
+        raise ValueError(
+            "resharding a hierarchical (pod-grid) checkpoint is not "
+            f"supported — recorded grid {recorded['worker_grid']}; "
+            "restore onto the same grid, or retrain the pod topology")
+    if compressors is None and _carries_comm(state_like):
+        raise ValueError(
+            "restore target carries compressed-sync buffers (comm.resid/"
+            "ref) but no compressor metadata was given — pass compressors="
+            "repro.comm.pair_meta(engine.compressors) so the recorded "
+            "compressors can be validated")
+    validate_flat_meta(recorded, spec, compressors=compressors,
+                       moments=moments)
+
+    data = np.load(os.path.join(path, "arrays.npz"))
+    dtypes = load_meta(path).get("dtypes", {})
+
+    def _load(key):
+        arr = data[key]
+        rec_dt = dtypes.get(key)
+        if (rec_dt is not None and arr.dtype.kind == "V"
+                and rec_dt != str(arr.dtype)):
+            arr = arr.view(np.dtype(rec_dt))
+        return arr
+
+    if "params" not in data:
+        raise ValueError(f"checkpoint at {path!r} has no 'params' entry — "
+                         f"not a flat-engine state")
+    w_old = int(data["params"].shape[0])
+    w_new = int(state_like.params.shape[0])
+    new_params = _tile(_load("params"), w_new)
+
+    flat_template, treedef = jax.tree_util.tree_flatten_with_path(
+        state_like)
+    leaves = []
+    for pth, leaf in flat_template:
+        key = SEP.join(_path_str(p) for p in pth)
+        top = key.split(SEP, 1)[0]
+        tshape = tuple(getattr(leaf, "shape", ()))
+        if top == "member":
+            leaves.append(np.asarray(leaf))          # fresh full mask
+            continue
+        if top == "overlap":
+            if key.endswith("pend"):
+                leaves.append(new_params.astype(np.asarray(leaf).dtype))
+            else:                                    # pend_k
+                leaves.append(np.ones(tshape, np.float32))
+            continue
+        if key not in data:
+            raise KeyError(f"checkpoint missing {key!r}")
+        arr = _load(key)
+        if top == "params":
+            arr = new_params
+        elif top in ("delta", "bias"):
+            arr = _recenter(_tile(arr, w_new))
+        elif top == "comm" and "resid" in key:
+            arr = np.zeros(tshape, np.asarray(leaf).dtype)
+        elif arr.ndim >= 1 and arr.shape[0] == w_old \
+                and tshape[:1] == (w_new,):
+            arr = _tile(arr, w_new)                  # moments & friends
+        if tshape != tuple(arr.shape):
+            raise ValueError(
+                f"{key}: resharded shape {arr.shape} != template "
+                f"{tshape} (saved at W={w_old}, restoring at W={w_new})")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -271,6 +271,17 @@ class VRLConfig:
     # Requires ``overlap=True``; with compression, requires an
     # error-feedback compressor.  0.0 disables (bitwise no-deadline path).
     deadline: float = 0.0
+    # elastic membership: thread an active-worker mask through every sync
+    # mean so workers can drop (crash) and rejoin mid-run without poisoning
+    # the shared mean.  The state carries a ``MemberState`` (mask + active
+    # counts); ``Engine.set_membership`` repairs the invariants on every
+    # change (Σ_i Δ_i = 0 over the survivors, rejoiners re-seeded from the
+    # current reference point).  With the mask fully active the trajectory
+    # is bitwise the membership=False path, and the compiled round still
+    # lowers to exactly ONE sync all-reduce (the counts ride in state, no
+    # second collective).  Engine backends only; easgd's center update
+    # assumes a fixed worker count and refuses the mask.
+    membership: bool = False
 
 
 @dataclass(frozen=True)

@@ -31,5 +31,6 @@ from repro.core.types import (  # noqa: F401
     CommState,
     HierCommState,
     HierState,
+    MemberState,
     WorkerState,
 )

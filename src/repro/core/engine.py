@@ -145,6 +145,33 @@ builds the exact blocking program (no new buffers or ops, bitwise).  Only
 the round drivers (``round_step``/``round_begin``+``round_fold``)
 overlap; the per-step ``train_step`` path stays blocking and should not
 be mixed with overlapped rounds (it would not maintain ``pend``).
+
+Elastic membership (``VRLConfig.membership``)
+---------------------------------------------
+
+Real workers crash and rejoin.  With ``membership=True`` the state carries
+a ``types.MemberState`` (an active-worker {0,1} mask plus the active
+counts) and every sync mean runs over the ACTIVE workers only: dead rows
+are excluded with a ``where`` (a multiply would propagate a crashed
+worker's NaNs as ``NaN * 0``) and the divisor is the state-carried count,
+so the masked sync is STILL exactly one all-reduce per round — no second
+collective to count survivors.  Dead rows stay allocated (layouts and
+compiled programs never change); ``Engine.set_membership(state, active)``
+is the out-of-round repair step that makes a membership change safe:
+
+  * continuing workers: Δ (and BVR's B) recentred to mean zero over the
+    continuing set — algebraically identical to redistributing every
+    dropped worker's Δ across the survivors, but computed without reading
+    a dropped row, so crash NaNs cannot leak — keeping Σ_i Δ_i = 0 exact;
+  * dropped + rejoining workers: params (and overlap ``pend``) re-seeded
+    from the continuing consensus x̂, Δ/B/moments/EF residuals zeroed — a
+    rejoiner restarts from the current reference point.
+
+With the mask fully active the trajectory is bitwise the
+``membership=False`` path.  Hierarchical runs mask per level: intra-pod
+means divide by per-pod active counts and the cross-pod mean is uniform
+over ALIVE pods (the weighting that keeps Σ_p Δ2 = 0 through pod churn).
+easgd's center update assumes a fixed worker count and refuses the mask.
 """
 from __future__ import annotations
 
@@ -163,7 +190,7 @@ from repro.configs.base import HierConfig, VRLConfig
 from repro.core import flat
 from repro.core import schedule as schedule_mod
 from repro.core.types import (CommState, HierCommState, HierState,
-                              OverlapState, WorkerState)
+                              MemberState, OverlapState, WorkerState)
 from repro.kernels import vrl_update as vu
 from repro.kernels import xla_update as xu
 from repro.optim.optimizers import AdamState, SM3Pair, make_inner
@@ -671,6 +698,9 @@ class FlatWorkerState(NamedTuple):
     overlap: Any = ()           # overlapped-round OverlapState: pend
                                 # (W, R, C) fp32, pend_k (W, 1, 1) fp32 —
                                 # () when cfg.overlap is off
+    member: Any = ()            # elastic-membership MemberState: active
+                                # (W, 1, 1) fp32 mask + n_active () fp32 —
+                                # () when cfg.membership is off
 
 
 class HierFlatState(NamedTuple):
@@ -696,6 +726,10 @@ class HierFlatState(NamedTuple):
     overlap: Any = ()           # overlapped level-2 OverlapState: pend
                                 # (P, 1, R, C) fp32, pend_k (P, 1, 1, 1)
                                 # fp32 — () when cfg.overlap is off
+    member: Any = ()            # elastic-membership MemberState: active
+                                # (P, D, 1, 1) fp32, n_pod (P, 1, 1, 1)
+                                # per-pod counts, n_active () = alive pods
+                                # — () when cfg.membership is off
 
 
 class Engine(NamedTuple):
@@ -730,6 +764,12 @@ class Engine(NamedTuple):
     backend: str = "fused"      # resolved executor: "fused" | "xla"
     compressors: Any = (None, None)  # resolved (level-1, level-2)
                                      # CompressorSpecs (None = identity)
+    set_membership: Any = None  # membership only: (state, (W,) mask) ->
+                                # state — the invariant-preserving repair
+                                # for a changed active set (jit it with
+                                # donate_argnums=(0,); NOT part of the
+                                # compiled round).  None when
+                                # cfg.membership is off.
 
 
 class RoundCache:
@@ -814,6 +854,16 @@ def _validate_overlap(cfg: VRLConfig, algo: AlgoSpec, comp_overlapped):
         raise ValueError(
             "deadline misses park the skipped payload in the EF residual; "
             "the overlapped sync's compressor needs error_feedback=True")
+
+
+def _validate_membership(cfg: VRLConfig, algo: AlgoSpec):
+    if not getattr(cfg, "membership", False):
+        return
+    if algo.sync == "elastic":
+        raise ValueError(
+            "membership composes with mean-style syncs; easgd's center "
+            f"update assumes a fixed worker count — {algo.name!r} cannot "
+            "run with membership=True")
 
 
 # Adam moment/bias-correction bases.  Must equal optimizers.adam's defaults
@@ -943,11 +993,16 @@ def _hier_pspecs(state: HierFlatState, pod_axis, data_axis,
         # level-2 overlap buffers are per-pod (P, 1, ...): pod axis only
         ospec = OverlapState(pend=podspec(state.overlap.pend),
                              pend_k=podspec(state.overlap.pend_k))
+    mspec = ()
+    if isinstance(state.member, MemberState):
+        mspec = MemberState(active=wspec(state.member.active),
+                            n_active=P(),
+                            n_pod=podspec(state.member.n_pod))
     return HierFlatState(params=wspec(state.params),
                          delta1=wspec(state.delta1),
                          delta2=podspec(state.delta2), inner=inner,
                          step=P(), last_sync1=P(), last_sync2=P(),
-                         comm=cspec, overlap=ospec)
+                         comm=cspec, overlap=ospec, member=mspec)
 
 
 def state_partition_specs(state, worker_axes,
@@ -1005,6 +1060,8 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
     delta_dt = jnp.dtype(cfg.delta_dtype)
     comp, _comp2 = comm_mod.resolve_pair(cfg)
     _validate_overlap(cfg, algo, _comp2 if algo.sync == "vrl2" else comp)
+    _validate_membership(cfg, algo)
+    member_on = bool(getattr(cfg, "membership", False))
 
     if algo.sync == "vrl2":
         return _make_hier_engine(cfg, algo, fspec, mesh=mesh, ops=ops,
@@ -1023,11 +1080,24 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
     shard_axis = _resolve_shard_axis(ecfg, mesh)
     on_mesh = axis_names is not None or shard_axis is not None
 
-    def _wmean(buf):
+    def _wmean(buf, member=()):
         """Global worker mean of a (W_local, R, C) buffer -> (R, C).
 
         On the mesh this is THE communication event: one all-reduce over
-        the flat buffer."""
+        the flat buffer.  With a ``MemberState`` the mean runs over ACTIVE
+        workers only: dead rows are excluded with a ``where`` (a multiply
+        would propagate a crashed worker's NaNs as ``NaN * 0``) and the
+        divisor is the state-carried active count — still the same single
+        all-reduce, and bitwise the unmasked mean at a full mask."""
+        if isinstance(member, MemberState):
+            s = jnp.sum(jnp.where(member.active > 0, buf, 0), axis=0)
+            if axis_names is not None:
+                s = jax.lax.psum(s, axis_names)
+            # Multiply by the reciprocal rather than divide: XLA folds the
+            # unmasked ``sum / W`` into ``sum * (1/W)``, and bitwise parity
+            # of the full-mask program requires the same op sequence here
+            # (a runtime divide rounds differently once fused downstream).
+            return s * (1.0 / member.n_active)
         if axis_names is None:
             return jnp.mean(buf, axis=0)
         total = buf.shape[0] * axis_size
@@ -1081,11 +1151,19 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
             overlap = OverlapState(
                 pend=stacked.astype(jnp.float32).copy(),
                 pend_k=jnp.ones((num_workers, 1, 1), jnp.float32))
+        member = ()
+        if member_on:
+            # everyone starts active; the count rides in state so the
+            # masked means never need a second collective
+            member = MemberState(
+                active=jnp.ones((num_workers, 1, 1), jnp.float32),
+                n_active=jnp.asarray(float(num_workers), jnp.float32))
         return FlatWorkerState(params=stacked, delta=delta, inner=inner,
                                center=center,
                                step=jnp.zeros((), jnp.int32),
                                last_sync=jnp.zeros((), jnp.int32),
-                               bias=bias, comm=comm, overlap=overlap)
+                               bias=bias, comm=comm, overlap=overlap,
+                               member=member)
 
     # ------------------------------------------------- core step functions
     # These see LOCAL shards (W_local, R, C) when shard_mapped.
@@ -1095,12 +1173,13 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
                 # S-SGD: the per-step gradient IS the payload (ref ≡ 0)
                 e = state.comm.resid if comp.error_feedback else None
                 dec, e_out = ef_rt(g, None, e)
-                g = jnp.broadcast_to(_wmean(dec)[None], g.shape)
+                g = jnp.broadcast_to(_wmean(dec, state.member)[None],
+                                     g.shape)
                 if comp.error_feedback:
                     state = state._replace(
                         comm=state.comm._replace(resid=e_out))
             else:
-                g = jnp.broadcast_to(_wmean(g)[None], g.shape)
+                g = jnp.broadcast_to(_wmean(g, state.member)[None], g.shape)
         d = state.delta if algo.use_delta else None
         b = state.bias if bias_on else None
         if kind == "sgd":
@@ -1147,7 +1226,7 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
         cm = state.comm
         e = cm.resid if comp.error_feedback else None
         dec, e_out = ef_rt(state.params, cm.ref, e)
-        xbar = cm.ref + _wmean(dec)
+        xbar = cm.ref + _wmean(dec, state.member)
         cm = CommState(resid=(e_out if comp.error_feedback else ()),
                        ref=xbar)
         return xbar, state._replace(comm=cm)
@@ -1170,7 +1249,7 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
         if comp is not None:
             xbar, state = _comp_mean(state)
         else:
-            xbar = _wmean(state.params)
+            xbar = _wmean(state.params, state.member)
         if algo.sync == "average":
             new_p = jnp.broadcast_to(xbar[None], state.params.shape
                                      ).astype(state.params.dtype)
@@ -1277,7 +1356,9 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
                               last_sync=state.step)
 
     def _core_round_begin(state: FlatWorkerState) -> jax.Array:
-        return _wmean(state.overlap.pend)
+        # masked: a dead worker's pend is retired from the collective
+        # (not retransmitted forever) until it rejoins with a fresh one
+        return _wmean(state.overlap.pend, state.member)
 
     def _core_round_overlap(state: FlatWorkerState, gk: jax.Array
                             ) -> FlatWorkerState:
@@ -1290,6 +1371,59 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
         state, _ = jax.lax.scan(lambda s, g: (_core_local(s, g), None),
                                 state, gk)
         return _fold_overlap(state, xbar)
+
+    # --------------------------------------------- membership repair
+    def _core_set_membership(state: FlatWorkerState, new_active: jax.Array
+                             ) -> FlatWorkerState:
+        """Repair the state invariants for a changed active set.
+
+        Mask-value-driven (the mask is an operand, not a trace constant),
+        so one jit covers every drop/rejoin pattern.  Continuing workers:
+        Δ (and B) recentred to mean zero over the continuing set —
+        algebraically identical to redistributing each dropped worker's Δ
+        across the survivors (Σ_cont Δ = −Σ_dropped Δ before the repair),
+        but computed without ever reading a dropped row, so a crashed
+        worker's NaNs cannot leak.  Dropped + rejoining workers: params
+        (and overlap pend) re-seeded from the continuing consensus x̂;
+        Δ/B/moments/EF residuals zeroed."""
+        def _gsum(x):
+            s = jnp.sum(x, axis=0)
+            if axis_names is not None:
+                s = jax.lax.psum(s, axis_names)
+            return s
+
+        old = state.member.active                          # (W_l, 1, 1)
+        cont = old * new_active
+        keep = cont > 0
+        n_cont = jnp.maximum(jnp.sum(_gsum(cont)), 1.0)
+        n_new = jnp.sum(_gsum(new_active))
+        xhat = _gsum(jnp.where(keep, state.params.astype(jnp.float32), 0.0)
+                     ) / n_cont                            # (R, C)
+        params = jnp.where(keep, state.params,
+                           xhat.astype(state.params.dtype)[None])
+
+        def recenter(buf):
+            shift = _gsum(jnp.where(keep, buf, 0)) / n_cont
+            return jnp.where(keep, buf - shift.astype(buf.dtype)[None],
+                             jnp.zeros((), buf.dtype))
+
+        delta = recenter(state.delta) if algo.use_delta else state.delta
+        bias = recenter(state.bias) if bias_on else state.bias
+        inner = jax.tree.map(
+            lambda x: (jnp.where(keep, x, jnp.zeros((), x.dtype))
+                       if getattr(x, "ndim", 0) == 3 else x), state.inner)
+        comm = state.comm
+        if isinstance(comm, CommState) and not isinstance(comm.resid,
+                                                          tuple):
+            comm = comm._replace(resid=jnp.where(keep, comm.resid, 0.0))
+        ov = state.overlap
+        if isinstance(ov, OverlapState):
+            ov = OverlapState(pend=jnp.where(keep, ov.pend, xhat[None]),
+                              pend_k=jnp.where(keep, ov.pend_k, 1.0))
+        member = MemberState(active=new_active, n_active=n_new)
+        return state._replace(params=params, delta=delta, bias=bias,
+                              inner=inner, comm=comm, overlap=ov,
+                              member=member)
 
     # ----------------------------------------------------- shard_map wrap
     ax = None
@@ -1345,6 +1479,21 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
                 in_specs=(sspec, P(shard_axis, None)), out_specs=sspec,
                 check_vma=False)(state, xbar)
 
+    set_membership = None
+    if member_on:
+        member_core = _sharded(_core_set_membership,
+                               gspec=P(ax, None, None))
+
+        def set_membership(state: FlatWorkerState, active
+                           ) -> FlatWorkerState:
+            """Change the active set to ``active`` ((W,) bools/floats),
+            repairing the invariants: Σ Δ (and Σ B) over the new active
+            set is exactly zero, rejoiners restart from the continuing
+            consensus.  Call between rounds (jit with
+            donate_argnums=(0,)); one jit covers every mask value."""
+            m = jnp.asarray(active, jnp.float32).reshape(-1)[:, None, None]
+            return member_core(state, m)
+
     # --------------------------------------------------------- public API
     def _gbuf(grads: Any) -> jax.Array:
         return flat.flatten_stacked(fspec, grads, dtype=fspec.dtype)
@@ -1381,6 +1530,11 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
         return flat.unflatten_stacked(fspec, state.params)
 
     def avg_model(state: FlatWorkerState) -> Any:
+        if isinstance(state.member, MemberState):
+            s = jnp.sum(jnp.where(state.member.active > 0, state.params,
+                                  0), axis=0)
+            return flat.unflatten_tree(
+                fspec, s * (1.0 / state.member.n_active))
         return flat.unflatten_tree(fspec, jnp.mean(state.params, axis=0))
 
     return Engine(algorithm=cfg.algorithm, spec=fspec, algo=algo,
@@ -1396,7 +1550,8 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
                   # canonical means pair_meta(cfg) == pair_meta(engine
                   # .compressors) — checkpoint metadata agrees whichever
                   # form a caller derives it from)
-                  compressors=(comp, _comp2))
+                  compressors=(comp, _comp2),
+                  set_membership=set_membership)
 
 
 # ================================================ fused executor ("vrl2")
@@ -1431,16 +1586,41 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
             data_axis = hcfg.axes[1]
     shard_axis = _resolve_shard_axis(cfg.engine, mesh)
 
-    def _pod_mean(buf):
-        """(P_l, D_l, R, C) -> (P_l, 1, R, C).  THE intra-pod all-reduce."""
+    member_on = bool(getattr(cfg, "membership", False))
+
+    def _pod_mean(buf, member=()):
+        """(P_l, D_l, R, C) -> (P_l, 1, R, C).  THE intra-pod all-reduce.
+
+        Masked form: mean over each pod's ACTIVE members (state-carried
+        per-pod counts); an all-dead pod divides by 1 and is excluded
+        from the cross-pod mean by its zero count."""
+        if isinstance(member, MemberState):
+            s = jnp.sum(jnp.where(member.active > 0, buf, 0), axis=1,
+                        keepdims=True)
+            if data_axis is not None:
+                s = jax.lax.psum(s, data_axis)
+            # reciprocal-multiply, matching XLA's fold of the unmasked
+            # constant divide (bitwise parity at full mask)
+            return s * (1.0 / jnp.maximum(member.n_pod, 1.0))
         s = jnp.sum(buf, axis=1, keepdims=True)
         if data_axis is not None:
             s = jax.lax.psum(s, data_axis)
         return s / d_total
 
-    def _cross_mean(pod_avg):
+    def _cross_mean(pod_avg, member=()):
         """(P_l, 1, R, C) pod averages -> (R, C).  THE cross-pod
-        all-reduce."""
+        all-reduce.
+
+        Masked form: uniform mean over ALIVE pods — the weighting that
+        keeps Σ_p Δ2 = 0 exact through pod-level churn (``n_active`` is
+        the alive-pod count on the hierarchical engine)."""
+        if isinstance(member, MemberState):
+            alive = member.n_pod > 0
+            s = jnp.sum(jnp.where(alive, pod_avg, 0), axis=(0, 1))
+            if pod_axis is not None:
+                s = jax.lax.psum(s, pod_axis)
+            # reciprocal-multiply (see _pod_mean): full-mask bitwise parity
+            return s * (1.0 / member.n_active)
         s = jnp.sum(pod_avg, axis=(0, 1))
         if pod_axis is not None:
             s = jax.lax.psum(s, pod_axis)
@@ -1492,11 +1672,18 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
                 pend=jnp.broadcast_to(flat1.astype(jnp.float32),
                                       (p_total, 1, *flat1.shape)).copy(),
                 pend_k=jnp.ones((p_total, 1, 1, 1), jnp.float32))
+        member = ()
+        if member_on:
+            member = MemberState(
+                active=jnp.ones((p_total, d_total, 1, 1), jnp.float32),
+                n_active=jnp.asarray(float(p_total), jnp.float32),
+                n_pod=jnp.full((p_total, 1, 1, 1), float(d_total),
+                               jnp.float32))
         return HierFlatState(params=stacked, delta1=delta1, delta2=delta2,
                              inner=inner, step=jnp.zeros((), jnp.int32),
                              last_sync1=jnp.zeros((), jnp.int32),
                              last_sync2=jnp.zeros((), jnp.int32),
-                             comm=comm, overlap=overlap)
+                             comm=comm, overlap=overlap, member=member)
 
     # ------------------------------------------------- core step functions
     def _core_local(state: HierFlatState, g: jax.Array) -> HierFlatState:
@@ -1543,12 +1730,12 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
             cm = state.comm
             e = cm.resid1 if comp1.error_feedback else None
             dec, e_out = ef1_rt(state.params, cm.ref1, e)
-            xbar = cm.ref1 + _pod_mean(dec)
+            xbar = cm.ref1 + _pod_mean(dec, state.member)
             state = state._replace(comm=cm._replace(
                 ref1=xbar,
                 resid1=(e_out if comp1.error_feedback else ())))
         else:
-            xbar = _pod_mean(state.params)
+            xbar = _pod_mean(state.params, state.member)
         scal = (k_eff * lr).reshape(1, 1).astype(jnp.float32)
         new_p, new_d1 = ops.fused_sync_hier1(
             state.params, xbar.astype(state.params.dtype), state.delta1,
@@ -1568,12 +1755,12 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
             pod = state.params[:, 0]                    # (P_l, R, C)
             e = (cm.resid2[:, 0] if comp2.error_feedback else None)
             dec, e_out = ef2_rt(pod, cm.ref2, e)
-            glob = cm.ref2 + _cross_mean(dec[:, None])
+            glob = cm.ref2 + _cross_mean(dec[:, None], state.member)
             state = state._replace(comm=cm._replace(
                 ref2=glob,
                 resid2=(e_out[:, None] if comp2.error_feedback else ())))
         else:
-            glob = _cross_mean(state.params[:, :1])
+            glob = _cross_mean(state.params[:, :1], state.member)
         if comp1 is not None:
             # level-2 moves every worker to x̂: re-anchor ref1 so the next
             # intra-pod payload is small again
@@ -1634,8 +1821,9 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
         reads."""
         do2 = (state.step + k - state.last_sync2) >= k2
         zeros = jnp.zeros(state.overlap.pend.shape[2:], jnp.float32)
-        return jax.lax.cond(do2, lambda s: _cross_mean(s.overlap.pend),
-                            lambda s: zeros, state)
+        return jax.lax.cond(
+            do2, lambda s: _cross_mean(s.overlap.pend, s.member),
+            lambda s: zeros, state)
 
     def _fold2(state: HierFlatState, glob: jax.Array) -> HierFlatState:
         """Apply the stale cross-pod mean: c_p = x̂_stale − pend2_p folds
@@ -1698,6 +1886,85 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
                                 state, gk)
         return _core_round_end_overlap(state, glob)
 
+    # --------------------------------------------- membership repair
+    def _core_set_membership(state: HierFlatState, new_active: jax.Array
+                             ) -> HierFlatState:
+        """Two-level twin of the flat repair: Δ1 recentred per pod over
+        that pod's continuing members (Σ_d Δ1 = 0 within every pod with
+        survivors), Δ2 recentred over the pods that stay alive
+        (Σ_p Δ2 = 0 over the new alive set); dropped/rejoining workers —
+        and fully-replaced pods' per-pod buffers — re-seeded from the
+        continuing consensus x̂."""
+        def _data_sum(x):                      # (P_l, D_l, ...) → (P_l, 1, ...)
+            s = jnp.sum(x, axis=1, keepdims=True)
+            if data_axis is not None:
+                s = jax.lax.psum(s, data_axis)
+            return s
+
+        def _pod_sum(x):                       # data-replicated (P_l, 1, ...)
+            s = jnp.sum(x, axis=(0, 1))
+            if pod_axis is not None:
+                s = jax.lax.psum(s, pod_axis)
+            return s
+
+        def _all_sum(x):                       # raw (P_l, D_l, ...) → global
+            s = jnp.sum(x, axis=(0, 1))
+            axes = tuple(a for a in (pod_axis, data_axis) if a is not None)
+            if axes:
+                s = jax.lax.psum(s, axes)
+            return s
+
+        old = state.member.active                      # (P_l, D_l, 1, 1)
+        cont = old * new_active
+        keep = cont > 0
+        n_cont = jnp.maximum(jnp.sum(_all_sum(cont)), 1.0)
+        n_cont_pod = _data_sum(cont)                   # (P_l, 1, 1, 1)
+        pod_keep = n_cont_pod > 0
+        n_new_pod = _data_sum(new_active)
+        xhat = _all_sum(jnp.where(keep, state.params.astype(jnp.float32),
+                                  0.0)) / n_cont       # (R, C)
+        params = jnp.where(keep, state.params,
+                           xhat.astype(state.params.dtype)[None, None])
+        s1 = _data_sum(jnp.where(keep, state.delta1, 0)
+                       ) / jnp.maximum(n_cont_pod, 1.0)
+        delta1 = jnp.where(keep, state.delta1 - s1.astype(state.delta1.dtype),
+                           jnp.zeros((), state.delta1.dtype))
+        n_pods_cont = jnp.maximum(
+            jnp.sum(_pod_sum(pod_keep.astype(jnp.float32))), 1.0)
+        s2 = _pod_sum(jnp.where(pod_keep, state.delta2, 0)) / n_pods_cont
+        delta2 = jnp.where(pod_keep,
+                           state.delta2 - s2.astype(state.delta2.dtype
+                                                    )[None, None],
+                           jnp.zeros((), state.delta2.dtype))
+        inner = jax.tree.map(
+            lambda x: (jnp.where(keep, x, jnp.zeros((), x.dtype))
+                       if getattr(x, "ndim", 0) == 4 else x), state.inner)
+        comm = state.comm
+        if isinstance(comm, HierCommState):
+            have = lambda x: not isinstance(x, tuple)
+            comm = HierCommState(
+                resid1=(jnp.where(keep, comm.resid1, 0.0)
+                        if have(comm.resid1) else ()),
+                # a fully-replaced pod's shared intra-pod reference is
+                # re-anchored to x̂ (its new members all start there)
+                ref1=(jnp.where(pod_keep, comm.ref1, xhat[None, None])
+                      if have(comm.ref1) else ()),
+                resid2=(jnp.where(pod_keep, comm.resid2, 0.0)
+                        if have(comm.resid2) else ()),
+                ref2=comm.ref2)
+        ov = state.overlap
+        if isinstance(ov, OverlapState):
+            ov = OverlapState(
+                pend=jnp.where(pod_keep, ov.pend, xhat[None, None]),
+                pend_k=jnp.where(pod_keep, ov.pend_k, 1.0))
+        member = MemberState(
+            active=new_active,
+            n_active=jnp.sum(_pod_sum((n_new_pod > 0).astype(jnp.float32))),
+            n_pod=n_new_pod)
+        return state._replace(params=params, delta1=delta1, delta2=delta2,
+                              inner=inner, comm=comm, overlap=ov,
+                              member=member)
+
     # ----------------------------------------------------- shard_map wrap
     meshless = mesh is None or (pod_axis is None and data_axis is None
                                 and shard_axis is None)
@@ -1758,6 +2025,19 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
                 in_specs=(sspec, P(shard_axis, None)), out_specs=sspec,
                 check_vma=False)(state, glob)
 
+    set_membership = None
+    if member_on:
+        member_core = _sharded(_core_set_membership,
+                               gspec=P(pod_axis, data_axis, None, None))
+
+        def set_membership(state: HierFlatState, active) -> HierFlatState:
+            """Change the active set to ``active`` ((W,) or (P, D)
+            bools/floats, pod-major), repairing the two-level invariants.
+            Call between rounds (jit with donate_argnums=(0,))."""
+            m = jnp.asarray(active, jnp.float32).reshape(
+                p_total, d_total)[:, :, None, None]
+            return member_core(state, m)
+
     # --------------------------------------------------------- public API
     def _gbuf(grads: Any) -> jax.Array:
         return flat.flatten_grid(fspec, grads, dtype=fspec.dtype)
@@ -1800,6 +2080,11 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
         return flat.unflatten_grid(fspec, state.params)
 
     def avg_model(state):
+        if isinstance(state.member, MemberState):
+            m = state.member.active
+            s = jnp.sum(jnp.where(m > 0, state.params, 0), axis=(0, 1))
+            return flat.unflatten_tree(
+                fspec, s * (1.0 / jnp.maximum(jnp.sum(m), 1.0)))
         return flat.unflatten_tree(fspec,
                                    jnp.mean(state.params, axis=(0, 1)))
 
@@ -1814,4 +2099,5 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
                   round_step_flat=round_step_flat,
                   round_begin=round_begin, round_fold=round_fold,
                   backend=backend,
-                  compressors=(comp1, comp2))
+                  compressors=(comp1, comp2),
+                  set_membership=set_membership)

@@ -60,6 +60,36 @@ class HierCommState(NamedTuple):
     ref2: Any = ()
 
 
+class MemberState(NamedTuple):
+    """Elastic-membership state for fault-tolerant rounds.
+
+    ``active``: {0, 1} fp32 mask over workers, shaped to broadcast against
+    the flat buffers — flat engine ``(W, 1, 1)``, hierarchical
+    ``(P, D, 1, 1)``.  Dead workers keep their rows in the buffers (the
+    layout never changes, so nothing recompiles); every sync mean excludes
+    them with a ``where`` (not a multiply — a multiply would propagate a
+    dead worker's NaNs as ``NaN * 0``).
+
+    ``n_active``: () fp32 — the divisor of the top-level masked mean,
+    carried in state so the masked sync stays exactly ONE all-reduce (no
+    second collective to count survivors).  Flat engine: number of active
+    workers.  Hierarchical: number of ALIVE pods (>= 1 active member) —
+    the cross-pod mean is uniform over alive pods, which is the weighting
+    that keeps Σ_pods Δ2 = 0 through pod-level churn.
+
+    ``n_pod``: hierarchical only — per-pod active-member counts
+    ``(P, 1, 1, 1)`` fp32 (the intra-pod mean's divisors; a pod is alive
+    iff its count is > 0).  () on the flat engine.
+
+    Counts are updated exclusively by ``Engine.set_membership`` (the
+    repair step), never inside the compiled round.
+    """
+
+    active: Any
+    n_active: Any
+    n_pod: Any = ()
+
+
 class OverlapState(NamedTuple):
     """Double-buffered overlap state for the overlapped round (one per
     hierarchy level).

@@ -49,6 +49,22 @@ def iid_partition(n: int, num_workers: int, seed: int = 0) -> list[np.ndarray]:
     return list(np.array_split(idx, num_workers))
 
 
+def repartition(parts: list[np.ndarray],
+                num_workers: int) -> list[np.ndarray]:
+    """Re-split an existing partition over a different worker count
+    (checkpointed resharding: resume a W-worker run on W' workers).
+
+    Concatenates the old assignment in worker order and ``array_split``s
+    it — every index appears exactly once afterwards, and the old
+    per-worker ordering (including any non-iid structure) is preserved
+    as contiguous runs, which is the closest W'-way analogue of the
+    original skew."""
+    if num_workers < 1:
+        raise ValueError(f"num_workers must be >= 1, got {num_workers}")
+    allidx = np.concatenate([np.asarray(p) for p in parts])
+    return list(np.array_split(allidx, num_workers))
+
+
 def label_skew(labels: np.ndarray, parts: list[np.ndarray]) -> float:
     """Mean total-variation distance between worker label dists and global."""
     classes = np.unique(labels)

@@ -1,0 +1,10 @@
+# Deterministic fault injection for elastic fault-tolerant rounds:
+# seedable schedules of gradient poison (NaN/Inf), worker crash/rejoin,
+# and simulated mid-save kills, consumed by launch/train.py's chaos path.
+from repro.fault.schedule import (  # noqa: F401
+    FaultEvent,
+    FaultSchedule,
+    GRAD_KINDS,
+    KINDS,
+    MEMBER_KINDS,
+)

@@ -23,10 +23,25 @@ intra-pod axis and level-2 only the cross-pod axis):
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
       --workers 8 --pods 2 --algorithm hier_vrl_sgd --k1 2 --k2 8 \
       --mesh-grid
+
+Fault tolerance (elastic rounds): ``--faults`` replays a deterministic
+chaos schedule (gradient NaN/Inf, worker crash/rejoin, simulated mid-save
+kill), ``--membership`` threads the survivor mask through every sync (the
+repair keeps Σ_i Δ_i = 0 exactly), ``--guard`` checks finiteness each
+round and rolls back to the last good checkpoint (or the round-start
+snapshot) with bounded retries, and ``--resume auto`` restarts from the
+newest complete checkpoint — resharding the worker axis if ``--workers``
+changed:
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
+      --workers 4 --steps 40 --k 5 --membership --guard \
+      --faults "nan@1:12,crash@1:15,rejoin@1:30" \
+      --ckpt /tmp/run --ckpt-every 10 --resume auto
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -40,10 +55,64 @@ from repro.configs.base import EngineConfig, HierConfig, VRLConfig
 from repro.core import engine as engine_mod
 from repro.core import schedule as schedule_mod
 from repro.data import lm_token_stream
+from repro.fault import FaultSchedule
 from repro.launch import mesh as mesh_mod
 from repro.models import transformer as T
 from repro.train.loss import cross_entropy_lm
 from repro.train.train_loop import make_train_step
+
+
+def _validate_args(args) -> None:
+    """Early, named range checks — a bad flag should fail before the
+    model compiles, not as an inscrutable shape error mid-run."""
+    if not (0.0 <= args.deadline <= 1.0):
+        raise SystemExit(f"--deadline is a probability in [0, 1], got "
+                         f"{args.deadline}")
+    if args.ckpt_every <= 0:
+        raise SystemExit(f"--ckpt-every must be a positive step count, "
+                         f"got {args.ckpt_every}")
+    if args.shards < 1:
+        raise SystemExit(f"--shards must be >= 1, got {args.shards}")
+    if args.steps < 1:
+        raise SystemExit(f"--steps must be >= 1, got {args.steps}")
+    if args.k < 1:
+        raise SystemExit(f"--k must be >= 1, got {args.k}")
+    if args.workers < 1:
+        raise SystemExit(f"--workers must be >= 1, got {args.workers}")
+    if args.ckpt_retain < 0:
+        raise SystemExit(f"--ckpt-retain must be >= 0 (0 keeps all), got "
+                         f"{args.ckpt_retain}")
+    if args.max_retries < 0:
+        raise SystemExit(f"--max-retries must be >= 0, got "
+                         f"{args.max_retries}")
+
+
+def _build_faults(args) -> FaultSchedule | None:
+    if not args.faults:
+        return None
+    if not args.round:
+        raise SystemExit("--faults injects per-round; drop --no-round")
+    try:
+        if args.faults == "random":
+            fs = FaultSchedule.random(
+                args.steps, args.workers,
+                seed=args.fault_seed if args.fault_seed is not None
+                else args.seed,
+                killsave=bool(args.ckpt))
+        else:
+            fs = FaultSchedule.parse(args.faults)
+    except ValueError as e:
+        raise SystemExit(f"--faults: {e}")
+    for e in fs.events:
+        if e.worker >= args.workers:
+            raise SystemExit(f"--faults: event {e.kind}@{e.worker}:"
+                             f"{e.step} targets a worker >= --workers "
+                             f"{args.workers}")
+    for e in fs.membership_events():
+        if fs.active_at(e.step, args.workers).sum() < 1:
+            raise SystemExit(f"--faults: schedule leaves no active worker "
+                             f"at step {e.step}")
+    return fs
 
 
 def main(argv=None) -> int:
@@ -135,11 +204,54 @@ def main(argv=None) -> int:
     ap.add_argument("--alpha", type=float, default=0.05,
                     help="Dirichlet non-iid skew (lower = more skewed)")
     ap.add_argument("--identical", action="store_true")
-    ap.add_argument("--ckpt", default=None, help="checkpoint dir")
+    ap.add_argument("--ckpt", default=None,
+                    help="checkpoint ROOT dir: saves land in per-step "
+                         "ckpt-XXXXXXXX/ subdirs with an atomic 'latest' "
+                         "pointer (each save is temp-file + rename, so a "
+                         "kill mid-save never tears a checkpoint)")
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--ckpt-retain", type=int, default=3,
+                    help="keep only the newest N step checkpoints "
+                         "(0 = keep all)")
+    ap.add_argument("--resume", default=None,
+                    help="'auto' resumes from the newest complete "
+                         "checkpoint under --ckpt (fresh start if none); "
+                         "a path resumes from that step dir.  If "
+                         "--workers differs from the save, the flat state "
+                         "is RESHARDED (rows tiled, Δ recentred to Σ=0, "
+                         "EF residuals dropped); layout/compressor/moment "
+                         "mismatches still fail loudly")
+    ap.add_argument("--faults", default=None,
+                    help="deterministic chaos schedule: 'kind@worker:step' "
+                         "events joined by commas — nan/inf (gradient "
+                         "poison), crash/rejoin (membership), "
+                         "killsave:step (die inside the next checkpoint "
+                         "save).  'random' draws a schedule from "
+                         "--fault-seed.  Example: "
+                         "'nan@1:12,crash@1:15,rejoin@1:30,killsave:20'")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="seed for --faults random (default: --seed)")
+    ap.add_argument("--membership", action="store_true",
+                    help="elastic membership: thread an active-worker "
+                         "mask through every sync (masked means stay ONE "
+                         "all-reduce; Σ Δ = 0 is repaired exactly on every "
+                         "drop/rejoin; full mask is bitwise the plain "
+                         "path).  Auto-enabled by crash/rejoin faults.")
+    ap.add_argument("--guard", action="store_true",
+                    help="divergence guard: check loss/param finiteness "
+                         "each round; on failure roll back to the last "
+                         "good checkpoint (or the round-start snapshot) "
+                         "and retry with backoff, bounded by "
+                         "--max-retries")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="divergence-guard rollback budget")
+    ap.add_argument("--loss-out", default=None,
+                    help="write final {steps, final_loss, avg_model_loss} "
+                         "json here (chaos CI compares runs with it)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
+    _validate_args(args)
 
     cfg = (registry.smoke_arch(args.arch) if args.smoke
            else registry.get_arch(args.arch))
@@ -173,12 +285,23 @@ def main(argv=None) -> int:
         raise SystemExit("--overlap hides the sync behind the next round's "
                          "local steps, which needs round execution; drop "
                          "--no-round")
+    faults = _build_faults(args)
+    membership = args.membership
+    if faults is not None and faults.membership_events() and not membership:
+        print("faults: schedule has crash/rejoin events — enabling "
+              "--membership")
+        membership = True
+    if membership and args.backend == "reference":
+        raise SystemExit("--membership needs the flat-buffer engine's "
+                         "MemberState; --backend reference has none")
+    if faults is not None:
+        print(f"faults: {faults.describe()}")
     vrl = VRLConfig(algorithm=args.algorithm, comm_period=args.k,
                     learning_rate=args.lr, warmup=args.warmup,
                     update_backend=args.backend, bvr_beta=args.bvr_beta,
                     comm_schedule=sched_arg, compress=comp_arg,
                     compress2=comp2_arg, overlap=args.overlap,
-                    deadline=args.deadline,
+                    deadline=args.deadline, membership=membership,
                     moment_dtype=args.moment_dtype, sm3=args.sm3,
                     engine=EngineConfig(block=args.block,
                                         round_scan=args.round,
@@ -200,8 +323,11 @@ def main(argv=None) -> int:
             raise SystemExit(f"--mesh-grid: {e}")
         worker_axes = ("pod", "data")
         print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
-    bundle = make_train_step(cfg, vrl, remat=not args.smoke, mesh=mesh,
-                             worker_axes=worker_axes)
+    try:
+        bundle = make_train_step(cfg, vrl, remat=not args.smoke, mesh=mesh,
+                                 worker_axes=worker_axes)
+    except ValueError as e:
+        raise SystemExit(str(e))
     state = bundle.init_state(jax.random.PRNGKey(args.seed), args.workers)
     n_params = (bundle.engine.spec.size if bundle.engine is not None else
                 sum(p.size for p in jax.tree.leaves(state.params))
@@ -262,17 +388,83 @@ def main(argv=None) -> int:
         logits, _ = T.forward(cfg, avg, toks.reshape(-1, args.seq))
         return cross_entropy_lm(logits, labels.reshape(-1, args.seq))
 
-    def checkpoint(t):
-        meta = {"step": t, "arch": args.arch}
+    def save_into(path, t):
+        meta = {"step": t, "arch": args.arch, "workers": args.workers}
         if bundle.engine is not None:
             ckpt.save_flat_state(
-                args.ckpt, state, bundle.engine.spec, meta=meta,
+                path, state, bundle.engine.spec, meta=meta,
                 grid=bundle.engine.grid,
                 compressors=comm_mod.pair_meta(bundle.engine.compressors),
                 moments=ckpt.moments_meta(vrl))
         else:
-            ckpt.save(args.ckpt, state, meta=meta)
-        print(f"checkpointed -> {args.ckpt}")
+            ckpt.save(path, state, meta=meta)
+
+    def checkpoint(t):
+        # simulate a process dying inside the save: the atomic-rename
+        # format must leave the previous complete checkpoint in place
+        if faults is not None and faults.killsave_at(t):
+            try:
+                with ckpt.kill_save():
+                    ckpt.save_step(args.ckpt, t, lambda p: save_into(p, t),
+                                   retain=args.ckpt_retain)
+            except ckpt.SimulatedKill:
+                print(f"chaos: simulated kill during save at step {t} — "
+                      f"'latest' still points at the previous good step")
+            return
+        ckpt.save_step(args.ckpt, t, lambda p: save_into(p, t),
+                       retain=args.ckpt_retain)
+        print(f"checkpointed -> {ckpt.step_dir(args.ckpt, t)}")
+
+    def load_from(path):
+        """Restore into the freshly-initialized state — resharding the
+        worker axis when the save's W differs from this run's."""
+        if bundle.engine is None:
+            return ckpt.restore(path, state)
+        comps_meta = comm_mod.pair_meta(bundle.engine.compressors)
+        mom = ckpt.moments_meta(vrl)
+        if bundle.engine.grid is None:
+            w_saved = ckpt.saved_workers(path)
+            if w_saved != args.workers:
+                print(f"resume: resharding {w_saved} -> {args.workers} "
+                      f"workers (Δ recentred, EF residuals dropped)")
+                return ckpt.restore_resharded(
+                    path, state, bundle.engine.spec,
+                    compressors=comps_meta, moments=mom)
+        return ckpt.restore_flat_state(
+            path, state, bundle.engine.spec, grid=bundle.engine.grid,
+            compressors=comps_meta, moments=mom)
+
+    start_t = 0
+    if args.resume:
+        if args.resume == "auto":
+            if not args.ckpt:
+                raise SystemExit("--resume auto finds checkpoints under "
+                                 "--ckpt; pass --ckpt too")
+            found = ckpt.latest_step(args.ckpt)
+            if found is None:
+                print("resume auto: no complete checkpoint — fresh start")
+                resume_path = None
+            else:
+                start_t, resume_path = found
+        else:
+            resume_path = args.resume
+        if args.resume != "auto" or resume_path is not None:
+            try:
+                restored = load_from(resume_path)
+            except (ValueError, KeyError, FileNotFoundError) as e:
+                raise SystemExit(f"--resume {args.resume}: {e}")
+            state = jax.tree.map(jnp.asarray, restored)
+            start_t = int(ckpt.load_meta(resume_path)["meta"].get(
+                "step", start_t))
+            print(f"resumed step {start_t} from {resume_path}")
+    if start_t >= args.steps:
+        print(f"resume: checkpoint step {start_t} >= --steps "
+              f"{args.steps} — nothing to do")
+        if args.loss_out:
+            with open(args.loss_out, "w") as f:
+                json.dump({"steps": start_t, "final_loss": None,
+                           "avg_model_loss": None}, f)
+        return 0
 
     t0 = time.time()
     if args.round:
@@ -288,7 +480,21 @@ def main(argv=None) -> int:
         warm_first = (sched is None and args.warmup
                       and engine_mod.get_spec(args.algorithm).warmup_aware)
         round_fn = engine_mod.RoundCache(bundle.round_step)
-        t = r = 0
+        # chaos machinery: the fault round is its own RoundCache (the
+        # (k, W) multiplier is one more scanned operand, so it compiles
+        # separately and the clean path stays the clean executable)
+        fault_round_fn = (engine_mod.RoundCache(bundle.round_step_fault)
+                          if faults is not None else None)
+        set_member = None
+        cur_mask = np.ones(args.workers, np.float32)
+        if membership and bundle.engine is not None:
+            set_member = jax.jit(bundle.engine.set_membership)
+            if hasattr(state, "member") and not isinstance(
+                    state.member, tuple):
+                cur_mask = np.asarray(state.member.active).reshape(-1)
+        health_fn = jax.jit(bundle.health) if args.guard else None
+        retries = 0
+        t, r = start_t, 0
         while t < args.steps:
             if sched is not None:
                 rk = sched.period_starting_at(t)
@@ -317,9 +523,51 @@ def main(argv=None) -> int:
                       f"avg_model_loss {float(el):.4f}  "
                       f"({(time.time()-t0)/t:.2f}s/step)")
                 break
+            # membership repair at the round boundary: fold the fault
+            # schedule's crash/rejoin history into a mask; one jitted
+            # set_membership call redistributes the leavers' Δ over the
+            # survivors (Σ Δ stays 0) and re-anchors rejoiners
+            if faults is not None and set_member is not None:
+                mask = faults.active_at(t, args.workers)
+                if not np.array_equal(mask, cur_mask):
+                    state = set_member(state, mask)
+                    cur_mask = mask
+                    print(f"membership: step {t} active "
+                          f"{int(mask.sum())}/{args.workers} "
+                          f"{mask.astype(int).tolist()}")
+            snap = jax.device_get(state) if args.guard else None
             toks = jnp.asarray(data[t:t + rk])          # (rk, W, b, s)
             labels = jnp.roll(toks, -1, axis=-1)
-            state, losses = round_fn(state, toks, labels)
+            gmul = (faults.grad_mul(t, rk, args.workers)
+                    if faults is not None else None)
+            if gmul is not None:
+                print(f"chaos: gradient fault in round [{t}, {t + rk})")
+                state, losses = fault_round_fn(state, toks, labels,
+                                               jnp.asarray(gmul))
+            else:
+                state, losses = round_fn(state, toks, labels)
+            if health_fn is not None and not bool(
+                    health_fn(state, jnp.mean(losses))):
+                if retries >= args.max_retries:
+                    raise SystemExit(
+                        f"divergence guard: state still non-finite after "
+                        f"{retries} rollbacks at step {t + rk} — aborting")
+                retries += 1
+                time.sleep(min(0.05 * 2 ** retries, 1.0))   # backoff
+                found = ckpt.latest_step(args.ckpt) if args.ckpt else None
+                if found is not None and found[0] <= t:
+                    back_t, back_path = found
+                    state = jax.tree.map(jnp.asarray, load_from(back_path))
+                    t = back_t
+                else:                       # no checkpoint: round-start
+                    state = jax.tree.map(jnp.asarray, snap)
+                if set_member is not None and hasattr(state, "member") \
+                        and not isinstance(state.member, tuple):
+                    cur_mask = np.asarray(state.member.active).reshape(-1)
+                print(f"divergence guard: non-finite state — rolled back "
+                      f"to step {t} (retry {retries}/{args.max_retries})")
+                continue
+            retries = 0
             t += rk
             r += 1
             if r % args.log_every == 0 or r == 1 or t >= args.steps:
@@ -332,7 +580,7 @@ def main(argv=None) -> int:
                 checkpoint(t)
     else:
         step = jax.jit(bundle.train_step)
-        for t in range(args.steps):
+        for t in range(start_t, args.steps):
             toks = jnp.asarray(data[t])
             labels = jnp.roll(toks, -1, axis=-1)
             state, loss = step(state, toks, labels)
@@ -349,6 +597,16 @@ def main(argv=None) -> int:
                  f"{'s' if round_fn.compiles != 1 else ''} "
                  f"(k={list(round_fn.cached_ks)})")
     print(f"done: {args.steps} steps in {time.time()-t0:.1f}s{extra}")
+    if args.loss_out:
+        # final metrics off the average model over one fresh batch — the
+        # chaos CI gate compares these across faulted/clean runs
+        toks_f = jnp.asarray(data[args.steps - 1])
+        labels_f = jnp.roll(toks_f, -1, axis=-1)
+        el = float(eval_avg(state, toks_f, labels_f))
+        with open(args.loss_out, "w") as f:
+            json.dump({"steps": int(args.steps), "final_loss": el,
+                       "avg_model_loss": el}, f)
+        print(f"loss-out: avg_model_loss {el:.4f} -> {args.loss_out}")
     return 0
 
 

@@ -63,6 +63,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, VRLConfig
 from repro.core import engine as engine_mod
 from repro.core import get_algorithm
+from repro.core.types import MemberState
 from repro.models import transformer
 from repro.train.loss import chunked_cross_entropy_lm, cross_entropy_lm
 
@@ -88,6 +89,16 @@ class StepBundle(NamedTuple):
     sync2_step: Any = None      # hierarchical only: cross-pod sync alone
     round_step: Any = None      # (state, tokens_k, labels_k) ->
                                 #   (state, (k,) losses): one scanned round
+    round_step_fault: Any = None  # (state, tokens_k, labels_k, gmul) ->
+                                #   (state, losses): round_step with a
+                                #   (k, W) per-step/worker gradient
+                                #   multiplier (1 = clean; NaN/Inf/scale
+                                #   injects a fault on that worker) —
+                                #   the chaos harness's entry point
+    health: Any = None          # (state, loss) -> () bool: loss finite
+                                #   AND every ACTIVE worker's params
+                                #   finite (dead rows excluded) — the
+                                #   divergence guard's predicate
 
 
 def make_train_step(model_cfg: ModelConfig, vrl_cfg: VRLConfig,
@@ -155,7 +166,43 @@ def make_train_step(model_cfg: ModelConfig, vrl_cfg: VRLConfig,
 
         return round_step
 
+    def _grad_mul(grads, m):
+        """Scale a worker-stacked grad pytree by a per-worker multiplier
+        ``m`` (W,) — folded to the (P, D) grid on the hierarchical path.
+        1.0 is a no-op; NaN/Inf poisons that worker's local step exactly
+        like a sick accelerator would (clipping already happened, so the
+        poison is not renormalized away)."""
+        if hier:
+            mg = m.reshape(hcfg.grid)
+            return jax.tree.map(
+                lambda g: g * mg.reshape(mg.shape + (1,) * (g.ndim - 2)
+                                         ).astype(g.dtype), grads)
+        return jax.tree.map(
+            lambda g: g * m.reshape((-1,) + (1,) * (g.ndim - 1)
+                                    ).astype(g.dtype), grads)
+
+    def _make_round_fault(grads_fn, local_fn, round_end_fn):
+        """Fault-injecting twin of ``_make_round``: the extra ``gmul``
+        (k, W) array rides the same scan, so a chaos round compiles to
+        the same one-sync program with one fused multiply added."""
+
+        def round_step_fault(state, tokens_k, labels_k, gmul):
+            def body(s, tl):
+                grads, loss = grads_fn(s, tl[0], tl[1])
+                return local_fn(s, _grad_mul(grads, tl[2])), loss
+
+            state, losses = jax.lax.scan(
+                body, state, (tokens_k, labels_k, gmul))
+            return round_end_fn(state), losses
+
+        return round_step_fault
+
     backend = engine_mod.resolve_backend(vrl_cfg)
+    if backend == "reference" and getattr(vrl_cfg, "membership", False):
+        raise ValueError(
+            "membership (elastic fault tolerance) needs the flat-buffer "
+            "engine's MemberState; update_backend='reference' has none — "
+            "use 'auto', 'xla' or 'fused'")
     if backend == "reference" and vrl_cfg.overlap:
         raise ValueError(
             "overlap needs the flat-buffer engine (its double-buffered "
@@ -168,10 +215,34 @@ def make_train_step(model_cfg: ModelConfig, vrl_cfg: VRLConfig,
         eng = engine_mod.make_engine(vrl_cfg, template, mesh=mesh,
                                      worker_axes=tuple(worker_axes))
 
+        def _loss_mean(state, losses):
+            """Mean over ACTIVE workers when elastic membership is on —
+            a dead worker's NaN loss must not poison the reported loss
+            (or the divergence guard reading it).  Reciprocal-multiply so
+            the full-mask program is bitwise ``jnp.mean``."""
+            m = getattr(state, "member", ())
+            if isinstance(m, MemberState):
+                lm = m.active.reshape(losses.shape)
+                n = (m.n_active if isinstance(m.n_pod, tuple)
+                     else jnp.sum(m.n_pod))
+                s = jnp.sum(jnp.where(lm > 0, losses, 0))
+                return s * (1.0 / jnp.maximum(n, 1.0))
+            return jnp.mean(losses)
+
         def grads_fn(state, tokens, labels):
             ptree = eng.params_tree(state)
             grads, losses = stack_vmap(ptree, tokens, labels)
-            return grads, jnp.mean(losses)
+            return grads, _loss_mean(state, losses)
+
+        def health(state, loss):
+            """() bool: loss finite and every ACTIVE worker's params
+            finite.  Dead rows are excluded so a crashed worker's NaNs
+            do not trip the guard after its drop."""
+            p = state.params
+            m = getattr(state, "member", ())
+            if isinstance(m, MemberState):
+                p = jnp.where(m.active > 0, p, 0)
+            return jnp.isfinite(loss) & jnp.all(jnp.isfinite(p))
 
         def train_step(state, tokens, labels):
             grads, loss = grads_fn(state, tokens, labels)
@@ -203,14 +274,30 @@ def make_train_step(model_cfg: ModelConfig, vrl_cfg: VRLConfig,
                 state, losses = jax.lax.scan(body, state,
                                              (tokens_k, labels_k))
                 return eng.round_fold(state, xbar), losses
+
+            def round_step_fault(state, tokens_k, labels_k, gmul):
+                k = jax.tree.leaves(tokens_k)[0].shape[0]
+                xbar = eng.round_begin(state, k)
+
+                def body(s, tl):
+                    grads, loss = grads_fn(s, tl[0], tl[1])
+                    return eng.local_step(s, _grad_mul(grads, tl[2])), loss
+
+                state, losses = jax.lax.scan(
+                    body, state, (tokens_k, labels_k, gmul))
+                return eng.round_fold(state, xbar), losses
         else:
             round_step = _make_round(grads_fn,
                                      lambda s, g: eng.local_step(s, g),
                                      eng.round_end)
+            round_step_fault = _make_round_fault(
+                grads_fn, lambda s, g: eng.local_step(s, g), eng.round_end)
         return StepBundle(init_state, train_step, local_step, eng.sync,
                           grads_fn, eng.average_model, eng,
                           sync1_step=eng.sync1, sync2_step=eng.sync2,
-                          round_step=round_step)
+                          round_step=round_step,
+                          round_step_fault=round_step_fault,
+                          health=health)
 
     def grads_fn(state, tokens, labels):
         grads, losses = stack_vmap(state.params, tokens, labels)
@@ -250,10 +337,20 @@ def make_train_step(model_cfg: ModelConfig, vrl_cfg: VRLConfig,
     else:
         round_end = sync_step
 
+    def health(state, loss):
+        ok = jnp.isfinite(loss)
+        for leaf in jax.tree.leaves(state.params):
+            ok = ok & jnp.all(jnp.isfinite(leaf))
+        return ok
+
     round_step = _make_round(grads_fn,
                              lambda s, g: alg.local_step(vrl_cfg, s, g),
                              round_end)
+    round_step_fault = _make_round_fault(
+        grads_fn, lambda s, g: alg.local_step(vrl_cfg, s, g), round_end)
     return StepBundle(init_state, train_step, local_step, sync_step,
                       grads_fn, alg.average_model,
                       sync1_step=sync1, sync2_step=sync2,
-                      round_step=round_step)
+                      round_step=round_step,
+                      round_step_fault=round_step_fault,
+                      health=health)

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import checkpoint as ckpt
 from repro.comm import compressors as cc
@@ -139,3 +140,201 @@ def test_sharded_quantized_state_roundtrip(tmp_path):
     with pytest.raises(ValueError, match="moment"):
         ckpt.restore_flat_state(str(tmp_path / "p"), state, eng.spec,
                                 moments=moments)
+
+
+# ------------------------------------------------ atomicity & step layout
+
+
+def test_torn_write_preserves_previous_checkpoint(tmp_path):
+    """A kill mid-save (temp file torn, no rename) leaves the previous
+    complete checkpoint untouched and restorable; the orphaned temp is
+    swept by the next successful save.  Same story for a kill between
+    write and rename (complete temp, never committed)."""
+    import glob
+    import os
+
+    import pytest
+
+    d = str(tmp_path / "a")
+    v1 = {"a": jnp.arange(6.0).reshape(2, 3)}
+    v2 = {"a": jnp.arange(6.0).reshape(2, 3) * 10}
+    ckpt.save(d, v1, meta={"step": 1})
+
+    with pytest.raises(ckpt.SimulatedKill, match="mid-write"):
+        with ckpt.kill_save("mid-write"):
+            ckpt.save(d, v2, meta={"step": 2})
+    # the published file is the OLD checkpoint, bit-for-bit usable
+    out = ckpt.restore(d, v1)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(v1["a"]))
+    assert ckpt.load_meta(d)["meta"]["step"] == 1
+    # the torn temp is on disk (as after a real SIGKILL)...
+    assert glob.glob(os.path.join(d, "arrays.npz.tmp.*"))
+
+    with pytest.raises(ckpt.SimulatedKill, match="pre-rename"):
+        with ckpt.kill_save("pre-rename"):
+            ckpt.save(d, v2, meta={"step": 2})
+    assert ckpt.load_meta(d)["meta"]["step"] == 1
+
+    # ...and the next save sweeps it and commits
+    ckpt.save(d, v2, meta={"step": 2})
+    assert not glob.glob(os.path.join(d, "arrays.npz.tmp.*"))
+    out = ckpt.restore(d, v1)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(v2["a"]))
+    assert ckpt.load_meta(d)["meta"]["step"] == 2
+
+
+def test_save_step_latest_and_retention(tmp_path):
+    """Step-dir layout: the ``latest`` pointer tracks the newest complete
+    save, ``retain`` prunes old step dirs, and ``latest_step`` survives a
+    lost or lying pointer by directory scan."""
+    import os
+
+    root = str(tmp_path / "run")
+    tree = {"a": jnp.ones((2,))}
+    for step in (2, 4, 6):
+        ckpt.save_step(root, step,
+                       lambda p, s=step: ckpt.save(p, tree,
+                                                   meta={"step": s}),
+                       retain=2)
+    got = ckpt.latest_step(root)
+    assert got is not None
+    step, path = got
+    assert step == 6 and path == ckpt.step_dir(root, 6)
+    assert ckpt.load_meta(path)["meta"]["step"] == 6
+    # retain=2: the oldest step dir is gone, the newest two remain
+    assert not os.path.exists(ckpt.step_dir(root, 2))
+    assert os.path.exists(ckpt.step_dir(root, 4))
+    # a killed save_step never flips the pointer
+    import pytest
+    with pytest.raises(ckpt.SimulatedKill):
+        with ckpt.kill_save("mid-write"):
+            ckpt.save_step(root, 8, lambda p: ckpt.save(p, tree))
+    assert ckpt.latest_step(root)[0] == 6
+    # lost pointer: scan fallback still finds the newest COMPLETE dir
+    os.remove(os.path.join(root, "latest"))
+    assert ckpt.latest_step(root)[0] == 6
+    # lying pointer (names a dir with no arrays.npz): scan fallback
+    with open(os.path.join(root, "latest"), "w") as f:
+        f.write("ckpt-00000099")
+    assert ckpt.latest_step(root)[0] == 6
+    assert ckpt.latest_step(str(tmp_path / "nowhere")) is None
+
+
+def test_restore_refuses_wrong_worker_count(tmp_path):
+    """A flat restore into an engine initialized at a different W fails
+    loudly naming both shapes — elastic restarts must go through
+    ``restore_resharded``, never a silent reshape."""
+    import pytest
+
+    cfg = VRLConfig(algorithm="vrl_sgd", comm_period=2, learning_rate=0.05,
+                    warmup=False, update_backend="xla")
+    eng = make_engine(cfg, {"w": jnp.zeros((6, 4))})
+    s4 = eng.init({"w": jnp.ones((6, 4))}, 4)
+    ckpt.save_flat_state(str(tmp_path / "w4"), s4, eng.spec)
+    s6 = eng.init({"w": jnp.ones((6, 4))}, 6)
+    with pytest.raises(ValueError, match=r"\(4,.*\(6,"):
+        ckpt.restore_flat_state(str(tmp_path / "w4"), s6, eng.spec)
+
+
+# -------------------------------------------------------------- resharding
+
+
+def _elastic_state(w, rounds=2):
+    cfg = VRLConfig(algorithm="bvr_l_sgd", comm_period=2,
+                    learning_rate=0.05, warmup=False, update_backend="xla",
+                    membership=True)
+    eng = make_engine(cfg, {"w": jnp.zeros((6, 4)), "b": jnp.zeros((3,))})
+    p0 = {"w": jnp.ones((6, 4)) * 0.3, "b": jnp.ones((3,)) * -0.1}
+    state = eng.init(p0, w)
+    step = jax.jit(eng.train_step)
+    for t in range(2 * rounds + 1):   # ends mid-round: delta non-trivial
+        g = jax.tree.map(
+            lambda x: jnp.sin(x + t) + 0.01 * jnp.arange(
+                w, dtype=x.dtype).reshape((w,) + (1,) * (x.ndim - 1)),
+            eng.params_tree(state))
+        state = step(state, g)
+    return cfg, eng, state
+
+
+@pytest.mark.parametrize("w_new", [3, 6])
+def test_restore_resharded_invariants(tmp_path, w_new):
+    """W=4 checkpoint onto W'∈{3, 6}: params/moments tile saved rows
+    (row j = saved j % 4), Δ and B recentre to Σ = 0 over the new set,
+    membership comes back fully active at W', and the step counter
+    resumes."""
+    cfg, eng, s4 = _elastic_state(4)
+    d = str(tmp_path / "w4")
+    ckpt.save_flat_state(d, s4, eng.spec, meta={"step": 5})
+    assert ckpt.saved_workers(d) == 4
+
+    engn = make_engine(cfg, {"w": jnp.zeros((6, 4)), "b": jnp.zeros((3,))})
+    sn = engn.init({"w": jnp.zeros((6, 4)), "b": jnp.zeros((3,))}, w_new)
+    out = ckpt.restore_resharded(d, sn, engn.spec)
+
+    old_p = np.asarray(s4.params)
+    new_p = np.asarray(out.params)
+    for j in range(w_new):
+        np.testing.assert_array_equal(new_p[j], old_p[j % 4])
+    for buf in (np.asarray(out.delta), np.asarray(out.bias)):
+        assert np.abs(buf.sum(0)).max() < 1e-5
+    m = np.asarray(out.member.active).reshape(-1)
+    np.testing.assert_array_equal(m, np.ones(w_new))
+    assert float(out.member.n_active) == float(w_new)
+    assert int(out.step) == int(s4.step)
+    # and the resharded state actually trains
+    step = jax.jit(engn.train_step)
+    g = jax.tree.map(lambda x: jnp.sin(x), engn.params_tree(out))
+    nxt = step(out, g)
+    assert np.isfinite(np.asarray(nxt.params)).all()
+
+
+def test_restore_resharded_refuses_hier_and_validates(tmp_path):
+    """Resharding refuses pod-grid checkpoints (topology, not row
+    surgery) and runs the same compatibility gate as the plain restore
+    (here: a compressor mismatch)."""
+    import dataclasses
+
+    import pytest
+
+    from repro.configs.base import HierConfig
+
+    tpl = {"w": jnp.zeros((6, 4))}
+    cfgh = VRLConfig(algorithm="hier_vrl_sgd", learning_rate=0.05,
+                     update_backend="xla",
+                     hier=HierConfig(k1=2, k2=4, grid=(2, 2)))
+    engh = make_engine(cfgh, tpl)
+    sh = engh.init({"w": jnp.ones((6, 4))}, 4)
+    dh = str(tmp_path / "hier")
+    ckpt.save_flat_state(dh, sh, engh.spec, grid=engh.grid)
+    with pytest.raises(ValueError, match="hierarchical"):
+        ckpt.restore_resharded(dh, sh, engh.spec)
+
+    cfg, eng, s4 = _elastic_state(4)
+    d = str(tmp_path / "w4")
+    ckpt.save_flat_state(d, s4, eng.spec)
+    cfgc = dataclasses.replace(cfg, compress=cc.parse_compressor("int8"))
+    engc = make_engine(cfgc, {"w": jnp.zeros((6, 4)),
+                              "b": jnp.zeros((3,))})
+    sc = engc.init({"w": jnp.zeros((6, 4)), "b": jnp.zeros((3,))}, 6)
+    with pytest.raises(ValueError, match="compressor"):
+        ckpt.restore_resharded(d, sc, engc.spec,
+                               compressors=cc.pair_meta(engc.compressors))
+
+
+def test_repartition_covers_every_index_once():
+    """Elastic data reassignment: every sample owned exactly once at the
+    new worker count, old per-worker runs kept contiguous."""
+    import pytest
+
+    from repro.data.partition import class_shard_partition, repartition
+
+    labels = np.repeat(np.arange(10), 20)
+    parts = class_shard_partition(labels, 4, seed=0)
+    for w_new in (3, 4, 6):
+        newp = repartition(parts, w_new)
+        assert len(newp) == w_new
+        allidx = np.concatenate(newp)
+        assert len(allidx) == len(labels)
+        assert len(np.unique(allidx)) == len(labels)
+    with pytest.raises(ValueError, match=">= 1"):
+        repartition(parts, 0)
