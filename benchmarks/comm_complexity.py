@@ -33,6 +33,13 @@ Three views:
       why compression composes multiplicatively with every schedule.
       Cheap (no dry-run shell-out; the flat layout is derived from
       shapes), so CI runs it standalone: ``--view compress``.
+  (f) COHORT bytes-vs-participation: with M logical clients sampled at
+      participation p, a round's sync all-reduce spans W = p·M cohort
+      slots — per-round wire bytes scale with the cohort — while one
+      "client epoch" (every client heard once, ≈ M/W rounds) moves the
+      SAME total bytes at every p.  Participation trades per-round
+      bandwidth against rounds, never total epoch traffic.  Cheap like
+      (e): ``--view cohort``.
 
 The measured views shell out to the dry-run driver because the 512-device
 placeholder env must be set before jax initializes.
@@ -238,15 +245,77 @@ def compressed_bytes_view(k_max: int = K, horizons=STAGE_T,
     return out
 
 
+def cohort_bytes_view(num_clients: int = 256,
+                      participation=(0.25, 0.5, 1.0),
+                      k_max: int = K,
+                      out_json: str = "results/comm_cohort.json") -> dict:
+    """View (f): per-round vs per-client-epoch bytes across participation.
+
+    The payload is the same measured qwen2-0.5b flat buffer as view (e).
+    Per participant and round the sync moves one payload; a cohort of
+    W = p·M moves W payloads per round, and the M/W rounds of a client
+    epoch always total M payloads — the participation-invariant.  The
+    table also carries the client-store traffic (gather + scatter move
+    each cohort row twice over host memory, not the network — reported
+    separately so the wire column stays a wire number).
+    """
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.comm import compressors as cc
+    from repro.configs import registry
+    from repro.core import flat as flat_mod
+    from repro.models import transformer
+
+    mesh_cfg = registry.mesh_roles(ARCH, multi_pod=False)
+    cfg = registry.padded_arch(ARCH, mesh_cfg)
+    template = jax.eval_shape(functools.partial(
+        transformer.init_params, cfg, dtype=jnp.bfloat16),
+        jax.random.PRNGKey(0))
+    spec = flat_mod.make_spec(template)
+    payload = cc.raw_bytes(spec.rows, spec.lanes,
+                           jnp.dtype(spec.dtype).itemsize)
+
+    table = {}
+    for p in sorted(participation):
+        w = max(1, round(p * num_clients))
+        rounds_epoch = -(-num_clients // w)           # ceil(M / W)
+        row = {
+            "workers": w,
+            "wire_bytes_per_round": w * payload,
+            "rounds_per_client_epoch": rounds_epoch,
+            "wire_bytes_per_client_epoch": rounds_epoch * w * payload,
+            "store_bytes_per_round": 2 * w * payload,  # gather + scatter
+        }
+        table[str(p)] = row
+        csv(f"table1/cohort_bytes/p{p}", 0.0,
+            f"workers={w};bytes_per_round={row['wire_bytes_per_round']:.3e};"
+            f"epoch_rounds={rounds_epoch};bytes_per_epoch="
+            f"{row['wire_bytes_per_client_epoch']:.3e}")
+    out = {"arch": ARCH, "num_clients": num_clients, "k": k_max,
+           "payload_bytes": payload, "table": table}
+    if out_json:
+        os.makedirs(os.path.dirname(out_json), exist_ok=True)
+        with open(out_json, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {os.path.abspath(out_json)}")
+    return out
+
+
 if __name__ == "__main__":
     import argparse
 
     ap = argparse.ArgumentParser()
-    ap.add_argument("--view", default="all", choices=["all", "compress"],
-                    help="'compress' runs only view (e) — no dry-run "
-                         "shell-outs, CI-cheap")
+    ap.add_argument("--view", default="all",
+                    choices=["all", "compress", "cohort"],
+                    help="'compress' runs only view (e), 'cohort' only "
+                         "view (f) — no dry-run shell-outs, CI-cheap")
     args = ap.parse_args()
     if args.view == "compress":
         compressed_bytes_view()
+    elif args.view == "cohort":
+        cohort_bytes_view()
     else:
         main()

@@ -760,6 +760,120 @@ def gate_sharded(res: dict) -> int:
     return 0
 
 
+def bench_participation(*, num_clients: int = 16, k: int = 10,
+                        rounds_max: int = 80, batch: int = 32,
+                        lr: float = 0.5, seed: int = 0,
+                        participation=(0.25, 0.5, 1.0),
+                        out_path: str = "BENCH_engine.json") -> dict:
+    """Rounds-to-target vs participation on the fig1 non-identical task.
+
+    M logical clients hold disjoint class shards (the paper's
+    partitioning); each round a seed-deterministic cohort of W = p·M
+    clients is gathered from a ``ClientStore``, runs k VRL-SGD local
+    steps on ITS OWN shard, syncs (one all-reduce), and scatters back.
+    The target is the loss full participation reaches a fifth of the way
+    into the budget — an intermediate milestone, since a p-participation
+    round does p times the gradient work of a full round, so reaching
+    full participation's ENDPOINT inside the same budget is impossible
+    by construction.  Every regime then reports the rounds it needs to
+    reach that common milestone: the measured rounds-vs-work trade-off.
+    """
+    import numpy as np
+
+    from benchmarks.common import feature_classification, mlp_init, \
+        mlp_loss
+    from repro.core.clients import ClientStore, sample_cohort
+    from repro.data.partition import class_shard_partition
+
+    data = feature_classification(n=4096, dim=256, num_classes=64,
+                                  seed=seed)
+    parts = class_shard_partition(data.y, num_clients, seed=seed)
+    params = mlp_init(jax.random.PRNGKey(seed), in_dim=data.x.shape[1],
+                      hidden=128, classes=data.num_classes)
+    template = jax.eval_shape(lambda: params)
+    # a fixed global batch scores the average model across regimes
+    ev = np.random.RandomState(seed + 1).choice(len(data.y), 512,
+                                                replace=False)
+    ex, ey = jnp.asarray(data.x[ev]), jnp.asarray(data.y[ev])
+
+    def run(p: float) -> dict:
+        w = max(1, round(p * num_clients))
+        cfg = VRLConfig(algorithm="vrl_sgd", comm_period=k,
+                        learning_rate=lr, weight_decay=1e-4,
+                        warmup=False, update_backend="xla")
+        eng = make_engine(cfg, template)
+        state = eng.init(params, w)
+        store = ClientStore(state, num_clients)
+        rec = (jax.jit(eng.recenter_drift)
+               if num_clients > w else None)
+
+        @jax.jit
+        def step(s, xs, ys):
+            def per_worker(pp, x, y):
+                return jax.grad(mlp_loss)(pp, x, y)
+            grads = jax.vmap(per_worker)(eng.params_tree(s), xs, ys)
+            return eng.train_step(s, grads)
+
+        @jax.jit
+        def eval_loss(s):
+            return mlp_loss(eng.average_model(s), ex, ey)
+
+        rng = np.random.RandomState(seed + 2)
+        curve = []
+        for r in range(rounds_max):
+            cohort = sample_cohort(num_clients, w, r, seed)
+            st = store.gather(cohort, seed_params=rec is not None
+                              and r > 0)
+            if rec is not None:
+                st = rec(st)
+            for _ in range(k):
+                idx = np.stack([rng.choice(parts[c], batch)
+                                for c in cohort])
+                st = step(st, jnp.asarray(data.x[idx]),
+                          jnp.asarray(data.y[idx]))
+            store.scatter(st, cohort)
+            curve.append(float(eval_loss(st)))
+        return {"workers": w, "curve": curve}
+
+    out = {"num_clients": num_clients, "k": k, "batch": batch, "lr": lr,
+           "rounds_max": rounds_max, "regimes": {}}
+    full = run(1.0)
+    target = full["curve"][rounds_max // 5 - 1]
+    out["target_loss"] = round(target, 4)
+    for p in sorted(participation, reverse=True):
+        res = full if p == 1.0 else run(p)
+        hit = next((r + 1 for r, v in enumerate(res["curve"])
+                    if v <= target), None)
+        row = {"workers": res["workers"],
+               "rounds_to_target": hit,
+               "final_loss": round(res["curve"][-1], 4)}
+        out["regimes"][str(p)] = row
+        csv(f"participation/p{p}", 0.0,
+            f"workers={res['workers']};rounds_to_target={hit};"
+            f"final_loss={row['final_loss']}")
+    _merge_json(out_path, {"participation": out})
+    return out
+
+
+def gate_participation(res: dict) -> int:
+    """CI gate: every regime must actually REACH the full-participation
+    target within the round budget — client sampling trades rounds for
+    per-round work, it must not break convergence.  Returns an exit
+    code."""
+    bad = [f"p={p}: never reached target {res['target_loss']} "
+           f"(final {row['final_loss']})"
+           for p, row in res["regimes"].items()
+           if row["rounds_to_target"] is None]
+    if bad:
+        print("PARTICIPATION GATE FAILED: " + "; ".join(bad))
+        return 1
+    rounds = {p: row["rounds_to_target"]
+              for p, row in res["regimes"].items()}
+    print(f"participation gate OK: rounds-to-target {rounds} "
+          f"(target {res['target_loss']})")
+    return 0
+
+
 if __name__ == "__main__":
     import argparse
     import sys
@@ -767,7 +881,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--bench", default="all",
                     choices=["paper", "engine", "hier", "rounds",
-                             "compressed", "overlap", "sharded", "all"])
+                             "compressed", "overlap", "sharded",
+                             "participation", "all"])
     ap.add_argument("--include-interpret", action="store_true",
                     help="time the fused Pallas rows even where they "
                          "would run in interpret mode (off-TPU/GPU they "
@@ -798,6 +913,10 @@ if __name__ == "__main__":
                          "section (layout-only sharding bitwise, bf16 "
                          "moments >= 1.7x smaller within 5e-2 drift, SM3 "
                          "smaller still)")
+    ap.add_argument("--gate-participation", action="store_true",
+                    help="bench_participation: exit 1 if any sampled "
+                         "regime fails to reach the full-participation "
+                         "loss target within the round budget")
     args = ap.parse_args()
     dims = tuple(int(d) for d in args.dims.split(","))
 
@@ -831,4 +950,8 @@ if __name__ == "__main__":
         shd = bench_sharded(k=args.k, iters=args.iters)
         if args.gate_sharded:
             code |= gate_sharded(shd)
+    if args.bench in ("participation", "all"):
+        part = bench_participation()
+        if args.gate_participation:
+            code |= gate_participation(part)
     sys.exit(code) if code else None

@@ -1,0 +1,249 @@
+"""Client sampling: M logical clients over W physical worker slots.
+
+The paper's federated follow-ups (BVR-L-SGD, local-steps analyses) assume
+only a *sampled cohort* of clients participates in each round.  This module
+adds that regime on top of the flat-buffer engine without touching the
+compiled round:
+
+  ``ClientStore``   — a host-side store of per-client engine state.  Every
+      (W, R, C) worker-stacked buffer in ``FlatWorkerState`` (params, Δ,
+      BVR bias, EF residual, optimizer moments) has an (M, R, C) numpy
+      twin; scalar/shared leaves (step, last_sync, EASGD center, the
+      compressed-sync reference) are global and stored once.
+  ``sample_cohort`` — a seed-deterministic draw of W distinct clients per
+      round.
+
+Each round the driver gathers the cohort's rows into the device buffers —
+one contiguous fancy-indexed copy per buffer, which is precisely what the
+flat layout buys us — runs the UNCHANGED compiled round (still exactly one
+sync all-reduce per k steps), and scatters the updated rows back.
+
+Two invariants the store is careful about:
+
+  * Full participation (M == W, cohort = identity) must be BITWISE the
+    plain engine path: the gather/scatter round-trip moves bytes through
+    host numpy untouched and applies no repair, so the trajectory is the
+    one the engine would have produced with no store at all (CI-gated).
+  * A strict-subset cohort breaks Σ_i Δ_i = 0 (the sum is zero over all M
+    clients, not over any W of them) — the driver runs
+    ``Engine.recenter_drift`` on the gathered state before the round.
+
+The worker-slot ``member`` mask is NOT per-client state: it describes the
+health of the physical slots (crash/rejoin fault injection composes with
+sampling), so it stays device-resident and never round-trips the store —
+``scatter`` instead skips the rows of dead slots, leaving those clients'
+state exactly as it was before the round.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core.types import MemberState, OverlapState
+
+
+def sample_cohort(num_clients: int, cohort_size: int, round_index: int,
+                  seed: int = 0) -> np.ndarray:
+    """Draw the round's cohort: ``cohort_size`` DISTINCT client ids out of
+    ``num_clients``, sorted, int64.
+
+    Deterministic in (seed, round_index) alone — a resumed run re-draws
+    the same cohorts for the same rounds, and independent processes agree
+    without communicating.  Full participation returns the identity
+    permutation (``arange``), which is what makes the M == W gather a
+    bitwise no-op.
+    """
+    if not 0 < cohort_size <= num_clients:
+        raise ValueError(
+            f"cohort_size must be in [1, {num_clients}], got {cohort_size}")
+    if cohort_size == num_clients:
+        return np.arange(num_clients, dtype=np.int64)
+    rng = np.random.default_rng([seed, round_index])
+    pick = rng.choice(num_clients, size=cohort_size, replace=False)
+    return np.sort(pick).astype(np.int64)
+
+
+def _strip_member(state):
+    return state._replace(member=())
+
+
+class ClientStore:
+    """Host-side per-client engine state behind a (W, R, C) device window.
+
+    Built from a FRESHLY-INITIALIZED engine state (``engine.init``
+    broadcasts one model over the worker axis, so row 0 is every client's
+    starting point).  Leaves with a leading worker axis (``ndim == 3`` and
+    ``shape[0] == W``) become (M, ...) per-client arrays; everything else
+    is a shared global, snapshotted at ``scatter`` time so checkpoints see
+    a consistent (store, step) pair.
+    """
+
+    def __init__(self, state, num_clients: int):
+        if isinstance(state.overlap, OverlapState):
+            raise ValueError(
+                "client sampling does not compose with overlapped rounds: "
+                "the overlap pend buffers are one round stale, so a "
+                "gathered cohort would fold positions transmitted by "
+                "DIFFERENT clients")
+        w = int(state.params.shape[0])
+        if num_clients < w:
+            raise ValueError(
+                f"num_clients ({num_clients}) must be >= the cohort size "
+                f"({w} worker slots)")
+        self.num_clients = int(num_clients)
+        self.cohort_size = w
+        host = jax.device_get(_strip_member(state))
+        leaves, self.treedef = jax.tree_util.tree_flatten(host)
+        self._is_client = [
+            getattr(lf, "ndim", 0) == 3 and lf.shape[0] == w
+            for lf in leaves
+        ]
+        self._leaves = [
+            np.ascontiguousarray(
+                np.broadcast_to(lf[:1], (num_clients,) + lf.shape[1:]))
+            if per_client else np.asarray(lf)
+            for lf, per_client in zip(leaves, self._is_client)
+        ]
+        # the server consensus x̂: the post-sync parameter row every
+        # participant holds at a round boundary.  Strict-subset cohorts
+        # are seeded from it (``gather(..., seed_params=True)``) — the
+        # round's Δ update (x̂' − x_i)/(k·γ) assumes the cohort STARTED at
+        # the previous consensus, and a client re-entering with params
+        # from many rounds ago would otherwise book that whole gap into
+        # its control variate
+        self.server_params = np.array(host.params[0])
+
+    # ------------------------------------------------------ gather/scatter
+    def gather(self, cohort: np.ndarray, member: Any = (),
+               like: Any = None, seed_params: bool = False):
+        """Load the cohort's client rows into a device state.
+
+        One contiguous fancy-indexed copy per buffer; globals ride along
+        from the store.  ``member`` is the device-resident worker-slot
+        mask to carry (``()`` when membership is off); ``like`` — when
+        given — is a state whose leaf shardings the gathered leaves are
+        placed onto (mesh runs).
+
+        ``seed_params=True`` replaces the cohort's parameter rows with
+        the server consensus (the federated round contract: the server
+        BROADCASTS x̂ to the sampled cohort; what persists per client is
+        the control variate, bias, moments and residual).  Callers use it
+        for strict-subset cohorts of the broadcast-sync algorithms, and
+        must NOT use it at full participation (the bitwise gate) or for
+        EASGD (persistent local params are elastic averaging's point).
+        """
+        cohort = np.asarray(cohort, dtype=np.int64)
+        if cohort.shape != (self.cohort_size,):
+            raise ValueError(
+                f"cohort must have shape ({self.cohort_size},), got "
+                f"{cohort.shape}")
+        leaves = [lf[cohort] if per_client else lf
+                  for lf, per_client in zip(self._leaves, self._is_client)]
+        state = jax.tree_util.tree_unflatten(self.treedef, leaves)
+        if seed_params:
+            state = state._replace(params=np.ascontiguousarray(
+                np.broadcast_to(
+                    self.server_params.astype(state.params.dtype),
+                    state.params.shape)))
+        if like is not None:
+            # Place onto ``like``'s shardings only when they are actually
+            # distributed.  On the first round the init state has not been
+            # through the mesh-jitted round yet — its leaves sit
+            # uncommitted on the default device, and committing the
+            # gathered copy there would make the multi-device shard_map
+            # jit refuse the input.  Host leaves are auto-placed by jit,
+            # same as the storeless path's init state.
+            tgt = _strip_member(like)
+            state = jax.tree.map(
+                lambda x, t: (jax.device_put(x, t.sharding)
+                              if getattr(t, "sharding", None) is not None
+                              and len(t.sharding.device_set) > 1 else x),
+                state, tgt)
+        return state._replace(member=member)
+
+    def scatter(self, state, cohort: np.ndarray) -> None:
+        """Write the round's updated rows back to the cohort's clients.
+
+        Rows whose worker slot is marked dead in ``state.member`` are
+        SKIPPED — that slot's client keeps its pre-round state (it simply
+        did not participate), rather than absorbing whatever a crashed
+        slot's buffers hold.  Globals (step, center, sync reference, ...)
+        are snapshotted unconditionally.
+        """
+        cohort = np.asarray(cohort, dtype=np.int64)
+        alive = np.ones(self.cohort_size, dtype=bool)
+        if isinstance(state.member, MemberState):
+            alive = np.asarray(
+                jax.device_get(state.member.active)).reshape(-1) > 0
+        host = jax.device_get(_strip_member(state))
+        leaves = jax.tree_util.tree_flatten(host)[0]
+        for i, (lf, per_client) in enumerate(zip(leaves, self._is_client)):
+            if per_client:
+                self._leaves[i][cohort[alive]] = np.asarray(lf)[alive]
+            else:
+                self._leaves[i] = np.asarray(lf)
+        # refresh the consensus from the post-round rows.  Every round
+        # closes with a sync, after which the broadcast-sync algorithms'
+        # alive rows are identical — the mean IS that common value (it is
+        # never read on the bitwise full-participation path, which does
+        # not seed)
+        if alive.any():
+            p = np.asarray(host.params)
+            self.server_params = p[alive].mean(axis=0).astype(p.dtype)
+
+    # -------------------------------------------------------- checkpoints
+    def to_tree(self):
+        """The store as a checkpointable pytree: the state-shaped client
+        tree with (M, ...) per-client leaves, plus the server consensus
+        (which must survive a resume — a restored run seeds its first
+        strict-subset cohort from it)."""
+        return {
+            "clients": jax.tree_util.tree_unflatten(self.treedef,
+                                                    list(self._leaves)),
+            "server_params": self.server_params,
+        }
+
+    def load_tree(self, tree) -> None:
+        """Install a restored store pytree (shapes must match)."""
+        if not isinstance(tree, dict) or set(tree) != {"clients",
+                                                       "server_params"}:
+            raise ValueError(
+                "client store tree must be {'clients', 'server_params'}, "
+                f"got {sorted(tree) if isinstance(tree, dict) else type(tree).__name__}")
+        leaves, treedef = jax.tree_util.tree_flatten(tree["clients"])
+        if treedef != self.treedef:
+            raise ValueError(
+                f"client store structure mismatch:\n  restored: {treedef}"
+                f"\n  expected: {self.treedef}")
+        for mine, theirs in zip(self._leaves, leaves):
+            theirs = np.asarray(theirs)
+            if theirs.shape != mine.shape:
+                raise ValueError(
+                    f"client store leaf shape mismatch: restored "
+                    f"{theirs.shape} != expected {mine.shape}")
+        server = np.asarray(tree["server_params"])
+        if server.shape != self.server_params.shape:
+            raise ValueError(
+                f"server consensus shape mismatch: restored {server.shape} "
+                f"!= expected {self.server_params.shape}")
+        self._leaves = [np.asarray(lf) for lf in leaves]
+        self.server_params = server
+
+    def global_leaf(self, name: str):
+        """A stored global leaf by state field name (e.g. ``step``)."""
+        tree = self.to_tree()["clients"]
+        return getattr(tree, name)
+
+    @property
+    def nbytes(self) -> int:
+        return int(sum(lf.nbytes for lf in self._leaves))
+
+
+def cohort_schedule(num_clients: int, cohort_size: int, rounds: int,
+                    seed: int = 0,
+                    start_round: int = 0) -> list[np.ndarray]:
+    """The cohorts of ``rounds`` consecutive rounds (inspection/tests)."""
+    return [sample_cohort(num_clients, cohort_size, r, seed)
+            for r in range(start_round, start_round + rounds)]

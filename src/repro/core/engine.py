@@ -770,6 +770,18 @@ class Engine(NamedTuple):
                                 # donate_argnums=(0,); NOT part of the
                                 # compiled round).  None when
                                 # cfg.membership is off.
+    recenter_drift: Any = None  # client sampling: (state,) -> state —
+                                # re-zero Σ Δ (and Σ B) over the worker
+                                # rows currently loaded in the buffers.  A
+                                # sampled cohort's corrections sum to the
+                                # cohort mean, not zero (Σ_i Δ_i = 0 holds
+                                # over ALL M clients, not over W of them);
+                                # run this after a cohort gather, BEFORE
+                                # the round, whenever the cohort is a
+                                # strict subset.  jit with
+                                # donate_argnums=(0,); None on the
+                                # hierarchical engine (client sampling is
+                                # a flat-engine construct).
 
 
 class RoundCache:
@@ -1425,6 +1437,33 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
                               inner=inner, comm=comm, overlap=ov,
                               member=member)
 
+    # --------------------------------------------- cohort drift recentre
+    def _core_recenter_drift(state: FlatWorkerState) -> FlatWorkerState:
+        """Re-zero Σ Δ (and Σ B) over the rows currently in the buffers.
+
+        Client sampling gathers a cohort of W rows out of M client rows;
+        each client's Δ was recentred against ALL clients, so the cohort's
+        corrections sum to the cohort mean rather than zero — the sync
+        math would then drag x̂ by that mean every round.  Subtracting the
+        cohort mean restores Σ Δ = 0 (the ``set_membership`` repair's
+        recentre, minus the churn handling), masked over active rows when
+        a ``MemberState`` rides along so a crashed slot's NaNs can't leak.
+        """
+        member = state.member
+        keep = (member.active > 0 if isinstance(member, MemberState)
+                else None)
+
+        def recenter(buf):
+            shift = _wmean(buf, member)
+            if keep is None:
+                return buf - shift.astype(buf.dtype)[None]
+            return jnp.where(keep, buf - shift.astype(buf.dtype)[None],
+                             buf)
+
+        delta = recenter(state.delta) if algo.use_delta else state.delta
+        bias = recenter(state.bias) if bias_on else state.bias
+        return state._replace(delta=delta, bias=bias)
+
     # ----------------------------------------------------- shard_map wrap
     ax = None
     if axis_names is not None:
@@ -1449,6 +1488,7 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
 
     local_core = _sharded(_core_local, gspec=P(ax, shard_axis, None))
     sync_core = _sharded(_core_sync)
+    recenter_core = _sharded(_core_recenter_drift)
     train_core = _sharded(_core_train, gspec=P(ax, shard_axis, None))
     round_core = _sharded(_core_round_overlap if cfg.overlap
                           else _core_round,
@@ -1551,7 +1591,8 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
                   # .compressors) — checkpoint metadata agrees whichever
                   # form a caller derives it from)
                   compressors=(comp, _comp2),
-                  set_membership=set_membership)
+                  set_membership=set_membership,
+                  recenter_drift=recenter_core)
 
 
 # ================================================ fused executor ("vrl2")

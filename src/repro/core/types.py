@@ -9,6 +9,15 @@ communication event. On CPU the same code simulates W workers on one device.
 ``WorkerState`` is the reference executor's tree-structured state; the
 fused flat-buffer executor carries the same fields as contiguous (W, R, C)
 buffers in ``core.engine.FlatWorkerState`` (layout: ``core.flat``).
+
+The worker-stacked convention is also the client-sampling contract
+(``core.clients``): a state leaf is *per-participant* exactly when it has
+``ndim == 3`` with leading axis W — those leaves get (M, ...) host-side
+twins in a ``ClientStore`` and are gathered/scattered per sampled cohort —
+while everything else (step counters, the EASGD center, the shared
+compressed-sync reference) is global.  ``MemberState`` is deliberately
+outside that contract: the active mask describes physical worker SLOTS,
+not logical clients, so it stays device-resident across cohorts.
 """
 from __future__ import annotations
 

@@ -1,12 +1,17 @@
 from repro.data.loader import WorkerLoader  # noqa: F401
 from repro.data.partition import (  # noqa: F401
+    assignment_from_meta,
+    assignment_to_meta,
     class_shard_partition,
+    contiguous_assignment,
     dirichlet_partition,
     iid_partition,
     label_skew,
+    repartition,
 )
 from repro.data.synthetic import (  # noqa: F401
     ClassificationData,
+    assigned_token_stream,
     feature_classification,
     gaussian_classification,
     lm_token_stream,

@@ -29,7 +29,18 @@ def class_shard_partition(labels: np.ndarray, num_workers: int,
 def dirichlet_partition(labels: np.ndarray, num_workers: int,
                         alpha: float = 0.1, seed: int = 0) -> list[np.ndarray]:
     """Dirichlet(α) label-skew partition; α→0 approaches class sharding,
-    α→∞ approaches iid."""
+    α→∞ approaches iid.
+
+    Every worker is guaranteed at least one index (small α starves
+    buckets; an empty bucket would otherwise come back as a float64
+    array — ``np.array([])`` — and corrupt downstream fancy indexing),
+    and every returned array is ``int64``.  Raises when there are fewer
+    samples than workers, since the guarantee is then unsatisfiable.
+    """
+    if len(labels) < num_workers:
+        raise ValueError(
+            f"cannot give every worker an index: {len(labels)} samples "
+            f"< {num_workers} workers")
     rng = np.random.RandomState(seed)
     classes = np.unique(labels)
     buckets: list[list[int]] = [[] for _ in range(num_workers)]
@@ -40,7 +51,15 @@ def dirichlet_partition(labels: np.ndarray, num_workers: int,
         cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
         for w, part in enumerate(np.split(idx, cuts)):
             buckets[w].extend(part.tolist())
-    return [np.array(sorted(b)) for b in buckets]
+    parts = [np.array(sorted(b), dtype=np.int64) for b in buckets]
+    # deterministic repair: feed each starved bucket one index from the
+    # currently-largest bucket (ties broken by lowest worker id)
+    while any(len(p) == 0 for p in parts):
+        empty = min(w for w in range(num_workers) if len(parts[w]) == 0)
+        donor = max(range(num_workers), key=lambda w: (len(parts[w]), -w))
+        parts[empty] = parts[donor][-1:]
+        parts[donor] = parts[donor][:-1]
+    return parts
 
 
 def iid_partition(n: int, num_workers: int, seed: int = 0) -> list[np.ndarray]:
@@ -61,8 +80,44 @@ def repartition(parts: list[np.ndarray],
     original skew."""
     if num_workers < 1:
         raise ValueError(f"num_workers must be >= 1, got {num_workers}")
-    allidx = np.concatenate([np.asarray(p) for p in parts])
-    return list(np.array_split(allidx, num_workers))
+    allidx = np.concatenate(
+        [np.asarray(p, dtype=np.int64) for p in parts] or
+        [np.empty(0, np.int64)])
+    if len(allidx) < num_workers:
+        raise ValueError(
+            f"cannot give every worker an index: {len(allidx)} indices "
+            f"< {num_workers} workers")
+    return [np.asarray(p, dtype=np.int64)
+            for p in np.array_split(allidx, num_workers)]
+
+
+def contiguous_assignment(n_shards: int,
+                          num_units: int) -> list[np.ndarray]:
+    """Fresh shard→unit assignment: ``n_shards`` data shards split
+    contiguously over ``num_units`` units (physical workers or logical
+    clients).  This is the assignment a run starts from; a resumed run
+    must NOT call this again — it re-splits the saved assignment with
+    :func:`repartition` so per-unit data continuity survives a unit-count
+    change (the resharded-resume path)."""
+    if num_units < 1:
+        raise ValueError(f"num_units must be >= 1, got {num_units}")
+    if n_shards < num_units:
+        raise ValueError(
+            f"cannot give every unit a shard: {n_shards} shards "
+            f"< {num_units} units")
+    shards = np.arange(n_shards, dtype=np.int64)
+    return [np.asarray(p, dtype=np.int64)
+            for p in np.array_split(shards, num_units)]
+
+
+def assignment_to_meta(parts: list[np.ndarray]) -> list[list[int]]:
+    """JSON-safe form of an assignment, for embedding in checkpoint
+    metadata (``launch.train`` threads it through ``--resume``)."""
+    return [[int(i) for i in np.asarray(p).ravel()] for p in parts]
+
+
+def assignment_from_meta(meta: list[list[int]]) -> list[np.ndarray]:
+    return [np.asarray(p, dtype=np.int64) for p in meta]
 
 
 def label_skew(labels: np.ndarray, parts: list[np.ndarray]) -> float:

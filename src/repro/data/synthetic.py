@@ -64,3 +64,38 @@ def lm_token_stream(num_workers: int, seq_len: int, vocab: int,
         draws = rng.choice(vocab, size=(steps, batch, seq_len), p=probs[w])
         out[:, w] = np.sort(draws, axis=-1)  # monotone runs => predictable
     return out
+
+
+def assigned_token_stream(assignment: list[np.ndarray], seq_len: int,
+                          vocab: int, steps: int, batch: int, *,
+                          alpha: float = 0.1, identical: bool = False,
+                          seed: int = 0) -> np.ndarray:
+    """(steps, U, batch, seq_len) int32 token batches for U units (physical
+    workers or logical clients) under a persistent shard→unit assignment.
+
+    The stream is backed by ``n_shards = Σ len(assignment[u])`` shard-level
+    Dirichlet(α)-skewed unigram distributions drawn from ``seed`` alone;
+    unit ``u`` samples from the MEAN of its assigned shards' distributions.
+    The distributions therefore survive a resharded resume: re-splitting
+    the saved assignment with ``data.partition.repartition`` keeps each
+    shard's skew attached to whichever unit inherits it, instead of
+    re-drawing the whole stream.  With the trivial assignment (unit u ↔
+    shard u, ``partition.contiguous_assignment(U, U)``) the output is
+    BITWISE :func:`lm_token_stream` — fresh runs are unchanged.
+    """
+    num_units = len(assignment)
+    n_shards = int(sum(len(a) for a in assignment))
+    rng = np.random.RandomState(seed)
+    if identical:
+        unit_probs = np.ones((num_units, vocab)) / vocab
+    else:
+        shard_probs = rng.dirichlet([alpha] * vocab, size=n_shards)
+        unit_probs = np.stack(
+            [shard_probs[np.asarray(a, dtype=np.int64)].mean(axis=0)
+             for a in assignment])
+    out = np.empty((steps, num_units, batch, seq_len), np.int32)
+    for u in range(num_units):
+        draws = rng.choice(vocab, size=(steps, batch, seq_len),
+                           p=unit_probs[u])
+        out[:, u] = np.sort(draws, axis=-1)
+    return out

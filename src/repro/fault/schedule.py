@@ -8,14 +8,17 @@ the same steps, independent of wall clock, host, or retry count.
 Event kinds
 -----------
 
-``nan`` / ``inf``
+``nan`` / ``inf`` / ``scale``
     Poison worker *w*'s gradient at step *s* — the fault harness feeds a
-    (k, W) multiplier into ``round_step_fault`` with NaN/Inf at that
-    position, modeling a sick accelerator emitting garbage.  These are
-    **consuming** events: ``grad_mul`` marks them fired, so when the
-    divergence guard rolls back and replays the same data the fault does
-    NOT re-fire (the real-world analogue: a transient fault plus
-    deterministic data would otherwise be unescapable).
+    (k, W) multiplier into ``round_step_fault`` with NaN/Inf (or a finite
+    scale factor) at that position, modeling a sick accelerator emitting
+    garbage.  ``scale`` is the *silent* corruption: the gradient stays
+    finite, so the finiteness health check never trips — only the
+    driver's loss-blow-up guard catches it.  These are **consuming**
+    events: ``grad_mul`` marks them fired, so when the divergence guard
+    rolls back and replays the same data the fault does NOT re-fire (the
+    real-world analogue: a transient fault plus deterministic data would
+    otherwise be unescapable).
 ``crash`` / ``rejoin``
     Worker *w* leaves / re-enters the membership at step *s*.  These are
     **pure**: ``active_at(t)`` folds the full event history, so replaying
@@ -31,8 +34,9 @@ Spec grammar (the ``--faults`` flag)::
 
     spec    := event ("," event)*
     event   := kind "@" worker ":" step      # nan/inf/crash/rejoin
+             | "scale" "@" worker ":" step ":" mult   # finite grad scale
              | "killsave" ":" step           # no worker
-    example := "nan@1:12,crash@1:30,rejoin@1:60,killsave:50"
+    example := "nan@1:12,scale@0:20:1e3,crash@1:30,rejoin@1:60,killsave:50"
 
 ``FaultSchedule.random(...)`` draws a spec from a seed with the same
 semantics (crash/rejoin pairs that always leave >= 1 survivor, plus
@@ -44,7 +48,7 @@ from typing import List, NamedTuple, Optional
 
 import numpy as np
 
-GRAD_KINDS = ("nan", "inf")
+GRAD_KINDS = ("nan", "inf", "scale")
 MEMBER_KINDS = ("crash", "rejoin")
 KINDS = GRAD_KINDS + MEMBER_KINDS + ("killsave",)
 
@@ -53,13 +57,32 @@ class FaultEvent(NamedTuple):
     kind: str        # one of KINDS
     step: int        # global step index the event fires at
     worker: int = -1  # target worker; -1 for killsave
+    mult: float = 1.0  # scale only: the finite gradient multiplier
 
 
 def _parse_event(tok: str) -> FaultEvent:
     tok = tok.strip()
     if not tok:
         raise ValueError("empty fault event in spec")
-    head, sep, step_s = tok.rpartition(":")
+    body, mult = tok, 1.0
+    if tok.partition("@")[0].partition(":")[0].strip() == "scale":
+        # three ':'-separated fields — peel the trailing multiplier so the
+        # common kind@worker:step parse below sees its usual form
+        body, sep, mult_s = tok.rpartition(":")
+        if not sep or ":" not in body:
+            raise ValueError(
+                f"scale event {tok!r} needs a multiplier — "
+                f"'scale@worker:step:mult' (e.g. 'scale@1:12:1e3')")
+        try:
+            mult = float(mult_s)
+        except ValueError:
+            raise ValueError(f"fault event {tok!r}: multiplier {mult_s!r} "
+                             f"is not a float") from None
+        if not np.isfinite(mult):
+            raise ValueError(
+                f"fault event {tok!r}: multiplier must be finite — use "
+                f"'nan@'/'inf@' for non-finite poisons")
+    head, sep, step_s = body.rpartition(":")
     if not sep:
         raise ValueError(
             f"fault event {tok!r} has no ':step' — expected "
@@ -92,7 +115,7 @@ def _parse_event(tok: str) -> FaultEvent:
                          f"an integer") from None
     if worker < 0:
         raise ValueError(f"fault event {tok!r}: worker must be >= 0")
-    return FaultEvent(kind, step, worker)
+    return FaultEvent(kind, step, worker, mult)
 
 
 class FaultSchedule:
@@ -116,10 +139,11 @@ class FaultSchedule:
     def random(cls, steps: int, workers: int, *, seed: int,
                n_grad: int = 1, n_churn: int = 1,
                killsave: bool = False) -> "FaultSchedule":
-        """Draw a deterministic schedule: ``n_grad`` NaN/Inf poisons,
-        ``n_churn`` crash→rejoin pairs (never the same worker twice at
-        once, so with workers >= 2 at least one survivor always holds),
-        and optionally one mid-save kill."""
+        """Draw a deterministic schedule: ``n_grad`` NaN/Inf/scale
+        poisons (scale draws a fixed 1e3 blow-up — finite, so only a
+        loss guard catches it), ``n_churn`` crash→rejoin pairs (never
+        the same worker twice at once, so with workers >= 2 at least one
+        survivor always holds), and optionally one mid-save kill."""
         if workers < 2 and n_churn:
             raise ValueError("churn faults need >= 2 workers")
         rng = np.random.default_rng(seed)
@@ -127,7 +151,8 @@ class FaultSchedule:
         for _ in range(n_grad):
             kind = GRAD_KINDS[int(rng.integers(len(GRAD_KINDS)))]
             events.append(FaultEvent(kind, int(rng.integers(1, steps)),
-                                     int(rng.integers(workers))))
+                                     int(rng.integers(workers)),
+                                     1e3 if kind == "scale" else 1.0))
         victims = rng.choice(workers, size=min(n_churn, workers - 1),
                              replace=False)
         for w in victims:
@@ -170,7 +195,8 @@ class FaultSchedule:
                 if out is None:
                     out = np.ones((k, workers), np.float32)
                 out[e.step - t0, e.worker] = (
-                    np.nan if e.kind == "nan" else np.inf)
+                    np.nan if e.kind == "nan"
+                    else np.inf if e.kind == "inf" else e.mult)
                 self._fired.add(i)
         return out
 
@@ -189,9 +215,13 @@ class FaultSchedule:
         return [e for e in self.events if e.kind in MEMBER_KINDS]
 
     def describe(self) -> str:
-        return ",".join(
-            f"{e.kind}:{e.step}" if e.kind == "killsave"
-            else f"{e.kind}@{e.worker}:{e.step}" for e in self.events)
+        def one(e: FaultEvent) -> str:
+            if e.kind == "killsave":
+                return f"{e.kind}:{e.step}"
+            if e.kind == "scale":
+                return f"scale@{e.worker}:{e.step}:{e.mult:g}"
+            return f"{e.kind}@{e.worker}:{e.step}"
+        return ",".join(one(e) for e in self.events)
 
     def __len__(self) -> int:
         return len(self.events)

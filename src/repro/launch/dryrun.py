@@ -298,7 +298,7 @@ def _engine_state_bytes(cfg, vrl_cfg: VRLConfig, workers: int) -> dict:
 def engine_mem(arch_id: str, *, algorithm: str = "vrl_sgd",
                inner: str = "adam", workers: int = 0, shards: int = 1,
                moment_dtype: str = "float32", sm3: bool = False,
-               verbose: bool = True) -> dict:
+               clients: int = 0, verbose: bool = True) -> dict:
     """Analytic engine-state HBM artifact for one (arch, sharding,
     moment-storage) point, plus the unsharded-fp32 baseline.
 
@@ -318,6 +318,12 @@ def engine_mem(arch_id: str, *, algorithm: str = "vrl_sgd",
                            per_device_bytes <= HBM_PER_CHIP (v5e 16 GiB)
       t_engine_pass      — roofline HBM seconds of one fused local step's
                            engine traffic (2x per-device bytes / HBM BW)
+      client_store_bytes — with ``clients`` = M > 0: the HOST bytes of a
+                           ``core.clients.ClientStore`` holding M logical
+                           clients behind the W-slot device window — each
+                           per-participant leaf ((W, ...) leading axis)
+                           scaled by M/W, globals counted once.  Host
+                           RAM, not HBM: it never rides a chip.
     """
     mesh_cfg = registry.mesh_roles(arch_id, multi_pod=False, serving=False)
     cfg = registry.padded_arch(arch_id, mesh_cfg)
@@ -353,13 +359,28 @@ def engine_mem(arch_id: str, *, algorithm: str = "vrl_sgd",
                      and per_dev <= HBM_PER_CHIP),
         "t_engine_pass": rl.engine_pass_time(per_dev),
     }
+    if clients:
+        if clients < workers:
+            raise ValueError(f"clients ({clients}) must be >= workers "
+                             f"({workers}) — the cohort size is the "
+                             f"worker count")
+        store = 0
+        for b in bufs.values():
+            per_participant = (len(b["shape"]) >= 3
+                               and b["shape"][0] == workers)
+            store += (b["bytes"] // workers * clients if per_participant
+                      else b["bytes"])
+        art["clients"] = clients
+        art["client_store_bytes"] = store
     if verbose:
+        extra = (f", client store {art['client_store_bytes']/2**30:.2f} "
+                 f"GiB host (M={clients})" if clients else "")
         print(f"[engine-mem] {arch_id} {algorithm}/{inner} W={workers} "
               f"shards={shards} moments={moment_dtype}"
               f"{'+sm3' if sm3 else ''}: "
               f"{per_dev/2**30:.2f} GiB/device "
               f"(baseline {base_dev/2**30:.2f}, {art['reduction']}x), "
-              f"{devices} chips, fits_pod={art['fits_pod']}")
+              f"{devices} chips, fits_pod={art['fits_pod']}{extra}")
     return art
 
 
@@ -728,6 +749,10 @@ def main(argv=None) -> int:
     ap.add_argument("--workers", type=int, default=0,
                     help="--engine-mem worker count (0 = the arch's "
                          "single-pod mesh role)")
+    ap.add_argument("--clients", type=int, default=0,
+                    help="--engine-mem: also size the HOST client store "
+                         "of M logical clients behind the W worker slots "
+                         "(per-participant buffers x M/W + globals)")
     ap.add_argument("--gate-bytes", type=int, default=0,
                     help="--engine-mem CI gate: exit 1 if any arch's "
                          "per-device engine bytes exceed this budget")
@@ -762,7 +787,8 @@ def main(argv=None) -> int:
             art = engine_mem(arch, algorithm=args.algorithm,
                              inner=args.inner, workers=args.workers,
                              shards=args.shards,
-                             moment_dtype=args.moment_dtype, sm3=args.sm3)
+                             moment_dtype=args.moment_dtype, sm3=args.sm3,
+                             clients=args.clients)
             if args.out:
                 with open(args.out, "a") as f:
                     f.write(json.dumps(art) + "\n")

@@ -37,6 +37,18 @@ changed:
       --workers 4 --steps 40 --k 5 --membership --guard \
       --faults "nan@1:12,crash@1:15,rejoin@1:30" \
       --ckpt /tmp/run --ckpt-every 10 --resume auto
+
+Partial participation (federated client sampling): ``--clients M`` keeps M
+logical clients' engine state (Dirichlet non-IID data each) in a host-side
+store; every round a seed-deterministic cohort of ``--workers`` clients is
+gathered into the flat buffers (one contiguous copy per buffer), Σ Δ is
+recentred over the cohort, the UNCHANGED compiled round runs (still one
+sync all-reduce), and the rows scatter back.  M == --workers with
+``--participation 1.0`` is bitwise the plain engine path:
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
+      --workers 8 --steps 40 --k 5 --clients 32 --participation 0.25 \
+      --alpha 0.1
 """
 from __future__ import annotations
 
@@ -52,14 +64,24 @@ from repro import checkpoint as ckpt
 from repro.comm import compressors as comm_mod
 from repro.configs import registry
 from repro.configs.base import EngineConfig, HierConfig, VRLConfig
+from repro.core import clients as clients_mod
 from repro.core import engine as engine_mod
 from repro.core import schedule as schedule_mod
-from repro.data import lm_token_stream
+from repro.data import assigned_token_stream
+from repro.data import partition as partition_mod
 from repro.fault import FaultSchedule
 from repro.launch import mesh as mesh_mod
 from repro.models import transformer as T
 from repro.train.loss import cross_entropy_lm
 from repro.train.train_loop import make_train_step
+
+
+# --guard's loss-trend trip-wire: a round whose mean loss exceeds
+# factor * last_good + slack is treated as diverged even though every
+# value is finite (the signature of a scale-poisoned gradient).  The
+# slack keeps ordinary early-training noise from tripping it.
+_BLOWUP_FACTOR = 10.0
+_BLOWUP_SLACK = 1.0
 
 
 def _validate_args(args) -> None:
@@ -85,6 +107,27 @@ def _validate_args(args) -> None:
     if args.max_retries < 0:
         raise SystemExit(f"--max-retries must be >= 0, got "
                          f"{args.max_retries}")
+    if args.clients < 0:
+        raise SystemExit(f"--clients must be >= 0 (0 = no client "
+                         f"sampling), got {args.clients}")
+    if args.clients and args.clients < args.workers:
+        raise SystemExit(f"--clients {args.clients} must be >= --workers "
+                         f"{args.workers} (the cohort size is the worker "
+                         f"count)")
+    if args.participation and not args.clients:
+        raise SystemExit("--participation needs --clients (it is the "
+                         "sampled fraction of the client population)")
+    if args.participation and not (0.0 < args.participation <= 1.0):
+        raise SystemExit(f"--participation is a fraction in (0, 1], got "
+                         f"{args.participation}")
+    if args.participation:
+        cohort = round(args.participation * args.clients)
+        if cohort != args.workers:
+            raise SystemExit(
+                f"--participation {args.participation} of "
+                f"{args.clients} clients is a cohort of {cohort}, but "
+                f"--workers is {args.workers} — set --workers {cohort} "
+                f"(the cohort size is the worker count)")
 
 
 def _build_faults(args) -> FaultSchedule | None:
@@ -186,6 +229,22 @@ def main(argv=None) -> int:
                          "and — under compressed sync — parks the missed "
                          "payload in its EF residual.  Requires --overlap.")
     ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--clients", type=int, default=0,
+                    help="partial participation: keep this many LOGICAL "
+                         "clients' engine state (params drift, Δ, bias, "
+                         "EF residual, moments — each on its own "
+                         "Dirichlet non-iid data shard) in a host-side "
+                         "store, and sample a cohort of --workers of "
+                         "them per round into the flat buffers.  The "
+                         "compiled round is unchanged (one sync all-"
+                         "reduce); Σ Δ is recentred over each sampled "
+                         "cohort.  0 = off; --clients == --workers is "
+                         "bitwise the plain path")
+    ap.add_argument("--participation", type=float, default=0.0,
+                    help="sampled fraction of --clients per round, as a "
+                         "cross-check: round(participation * clients) "
+                         "must equal --workers (the cohort size).  "
+                         "Default: --workers / --clients")
     ap.add_argument("--batch", type=int, default=8, help="per-worker batch")
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--steps", type=int, default=100)
@@ -224,11 +283,14 @@ def main(argv=None) -> int:
     ap.add_argument("--faults", default=None,
                     help="deterministic chaos schedule: 'kind@worker:step' "
                          "events joined by commas — nan/inf (gradient "
-                         "poison), crash/rejoin (membership), "
+                         "poison), scale@w:step:mult (finite gradient "
+                         "blow-up — silent corruption only the --guard "
+                         "loss trend catches), crash/rejoin (membership), "
                          "killsave:step (die inside the next checkpoint "
                          "save).  'random' draws a schedule from "
                          "--fault-seed.  Example: "
-                         "'nan@1:12,crash@1:15,rejoin@1:30,killsave:20'")
+                         "'nan@1:12,scale@0:20:1e3,crash@1:15,"
+                         "rejoin@1:30,killsave:20'")
     ap.add_argument("--fault-seed", type=int, default=None,
                     help="seed for --faults random (default: --seed)")
     ap.add_argument("--membership", action="store_true",
@@ -239,9 +301,12 @@ def main(argv=None) -> int:
                          "path).  Auto-enabled by crash/rejoin faults.")
     ap.add_argument("--guard", action="store_true",
                     help="divergence guard: check loss/param finiteness "
-                         "each round; on failure roll back to the last "
-                         "good checkpoint (or the round-start snapshot) "
-                         "and retry with backoff, bounded by "
+                         "AND the loss trend (a round whose mean loss "
+                         "blows past 10x the last good round + 1 is "
+                         "diverged even when finite — the scale-poison "
+                         "signature) each round; on failure roll back to "
+                         "the last good checkpoint (or the round-start "
+                         "snapshot) and retry with backoff, bounded by "
                          "--max-retries")
     ap.add_argument("--max-retries", type=int, default=2,
                     help="divergence-guard rollback budget")
@@ -285,6 +350,24 @@ def main(argv=None) -> int:
         raise SystemExit("--overlap hides the sync behind the next round's "
                          "local steps, which needs round execution; drop "
                          "--no-round")
+    if args.clients:
+        if args.algorithm == "hier_vrl_sgd":
+            raise SystemExit("--clients samples cohorts into the flat "
+                             "(W, R, C) buffers; hier_vrl_sgd runs a "
+                             "pod-major grid — drop --clients or the "
+                             "hierarchy")
+        if args.overlap:
+            raise SystemExit("--clients does not compose with --overlap: "
+                             "the overlapped pend buffer is one round "
+                             "stale and would mix positions from "
+                             "different clients across cohorts")
+        if not args.round:
+            raise SystemExit("--clients gathers/scatters per round; drop "
+                             "--no-round")
+        if args.backend == "reference":
+            raise SystemExit("--clients needs the flat-buffer engine's "
+                             "contiguous client store; --backend "
+                             "reference has none")
     faults = _build_faults(args)
     membership = args.membership
     if faults is not None and faults.membership_events() and not membership:
@@ -329,6 +412,16 @@ def main(argv=None) -> int:
     except ValueError as e:
         raise SystemExit(str(e))
     state = bundle.init_state(jax.random.PRNGKey(args.seed), args.workers)
+    store = None
+    if args.clients:
+        try:
+            store = clients_mod.ClientStore(state, args.clients)
+        except ValueError as e:
+            raise SystemExit(f"--clients: {e}")
+        print(f"clients: {args.clients} logical clients over "
+              f"{args.workers} worker slots (participation "
+              f"{args.workers / args.clients:.3g}), host store "
+              f"{store.nbytes / 2**20:.1f} MiB")
     n_params = (bundle.engine.spec.size if bundle.engine is not None else
                 sum(p.size for p in jax.tree.leaves(state.params))
                 // args.workers)
@@ -377,10 +470,13 @@ def main(argv=None) -> int:
                            for w in wires)
               + f" vs raw {raw/2**20:.2f} MiB per worker payload")
 
-    data = lm_token_stream(args.workers, args.seq, cfg.vocab_size,
-                           steps=args.steps, batch=args.batch,
-                           alpha=args.alpha, identical=args.identical,
-                           seed=args.seed)
+    # data assignment: one Dirichlet-skewed shard per unit (logical client
+    # or physical worker) to start; a resumed run re-splits the SAVED
+    # assignment instead (below), so per-unit distributions survive a
+    # resharded resume.  The trivial fresh assignment is bitwise the old
+    # lm_token_stream, so non-resumed runs are unchanged.
+    units = args.clients if args.clients else args.workers
+    assignment = partition_mod.contiguous_assignment(units, units)
 
     @jax.jit
     def eval_avg(state, toks, labels):
@@ -389,8 +485,20 @@ def main(argv=None) -> int:
         return cross_entropy_lm(logits, labels.reshape(-1, args.seq))
 
     def save_into(path, t):
-        meta = {"step": t, "arch": args.arch, "workers": args.workers}
-        if bundle.engine is not None:
+        meta = {"step": t, "arch": args.arch, "workers": args.workers,
+                "assignment": partition_mod.assignment_to_meta(assignment)}
+        if store is not None:
+            # client mode checkpoints the STORE (every client's state,
+            # (M, ...) leaves + shared globals), not the transient cohort
+            # window; the layout/compressor/moment metadata still rides
+            # along so mismatched restores fail loudly
+            meta["clients"] = args.clients
+            meta["flat_spec"] = bundle.engine.spec.meta()
+            meta["compressors"] = comm_mod.pair_meta(
+                bundle.engine.compressors)
+            meta["moments"] = ckpt.moments_meta(vrl)
+            ckpt.save(path, store.to_tree(), meta=meta)
+        elif bundle.engine is not None:
             ckpt.save_flat_state(
                 path, state, bundle.engine.spec, meta=meta,
                 grid=bundle.engine.grid,
@@ -417,7 +525,34 @@ def main(argv=None) -> int:
 
     def load_from(path):
         """Restore into the freshly-initialized state — resharding the
-        worker axis when the save's W differs from this run's."""
+        worker axis when the save's W differs from this run's.  Client
+        mode restores the STORE instead (same client count required; the
+        cohort size —--workers— may change freely, that's just a
+        different participation rate)."""
+        recorded = ckpt.load_meta(path).get("meta", {})
+        if store is not None:
+            if "clients" not in recorded:
+                raise ValueError(
+                    "checkpoint was saved without --clients (a plain "
+                    "worker state, not a client store) — resume it "
+                    "without --clients")
+            if int(recorded["clients"]) != args.clients:
+                raise ValueError(
+                    f"checkpoint holds {recorded['clients']} clients but "
+                    f"--clients is {args.clients}; the client population "
+                    f"is fixed for a run (change --workers to change the "
+                    f"participation rate instead)")
+            ckpt.validate_flat_meta(
+                recorded, bundle.engine.spec,
+                compressors=comm_mod.pair_meta(bundle.engine.compressors),
+                moments=ckpt.moments_meta(vrl))
+            store.load_tree(ckpt.restore(path, store.to_tree()))
+            return state        # the next round's gather installs the rows
+        if "clients" in recorded:
+            raise ValueError(
+                f"checkpoint is a client store ({recorded['clients']} "
+                f"clients) — pass --clients {recorded['clients']} to "
+                f"resume it")
         if bundle.engine is None:
             return ckpt.restore(path, state)
         comps_meta = comm_mod.pair_meta(bundle.engine.compressors)
@@ -454,9 +589,30 @@ def main(argv=None) -> int:
             except (ValueError, KeyError, FileNotFoundError) as e:
                 raise SystemExit(f"--resume {args.resume}: {e}")
             state = jax.tree.map(jnp.asarray, restored)
-            start_t = int(ckpt.load_meta(resume_path)["meta"].get(
-                "step", start_t))
+            rec_meta = ckpt.load_meta(resume_path).get("meta", {})
+            start_t = int(rec_meta.get("step", start_t))
+            # data continuity: reuse the SAVED shard assignment instead of
+            # re-drawing the stream; a changed unit count re-splits it
+            # exactly once (data.partition.repartition) and the re-split
+            # is what later checkpoints record
+            saved_assign = rec_meta.get("assignment")
+            if saved_assign is not None:
+                saved_assign = partition_mod.assignment_from_meta(
+                    saved_assign)
+                if len(saved_assign) != units:
+                    print(f"resume: re-splitting saved data assignment "
+                          f"{len(saved_assign)} -> {units} units (shard "
+                          f"skews preserved)")
+                    assignment = partition_mod.repartition(saved_assign,
+                                                           units)
+                else:
+                    assignment = saved_assign
             print(f"resumed step {start_t} from {resume_path}")
+    data = assigned_token_stream(assignment, args.seq, cfg.vocab_size,
+                                 steps=args.steps, batch=args.batch,
+                                 alpha=args.alpha,
+                                 identical=args.identical, seed=args.seed)
+
     if start_t >= args.steps:
         print(f"resume: checkpoint step {start_t} >= --steps "
               f"{args.steps} — nothing to do")
@@ -493,6 +649,24 @@ def main(argv=None) -> int:
                     state.member, tuple):
                 cur_mask = np.asarray(state.member.active).reshape(-1)
         health_fn = jax.jit(bundle.health) if args.guard else None
+        # client sampling: the cohort recentre is its own tiny jit (the
+        # compiled round stays the UNCHANGED clean executable), and it only
+        # runs when the cohort is a strict subset — full participation
+        # must stay bitwise the storeless path
+        recenter_fn = None
+        if store is not None and args.clients > args.workers:
+            recenter_fn = jax.jit(bundle.engine.recenter_drift,
+                                  donate_argnums=(0,))
+        # strict-subset cohorts start the round FROM the server consensus
+        # (the federated broadcast): what persists per client is the
+        # control variate / bias / moments / residual.  A client
+        # re-entering with params from many rounds ago would otherwise
+        # book the whole consensus gap into its Δ via (x̂' − x_i)/(k·γ)
+        # and blow up its next participation.  EASGD keeps per-client
+        # params — persistent local params are elastic averaging's point.
+        seed_cohort = (store is not None and args.clients > args.workers
+                       and not bundle.engine.algo.has_center)
+        last_good = None        # last healthy round-mean loss (--guard)
         retries = 0
         t, r = start_t, 0
         while t < args.steps:
@@ -508,21 +682,47 @@ def main(argv=None) -> int:
                 # pend buffer, so the tail runs local steps only — its
                 # contribution folds at the next boundary, which never
                 # comes (the tail is the end of the run).
+                cohort = None
+                if store is not None:
+                    cohort = clients_mod.sample_cohort(
+                        args.clients, args.workers, t, args.seed)
+                    state = store.gather(cohort,
+                                         member=getattr(state, "member",
+                                                        ()),
+                                         like=state,
+                                         seed_params=seed_cohort)
                 step = jax.jit(bundle.local_step if args.overlap
                                else bundle.train_step)
                 while t < args.steps:
-                    toks = jnp.asarray(data[t])
+                    toks = jnp.asarray(data[t] if cohort is None
+                                       else data[t][cohort])
                     labels = jnp.roll(toks, -1, axis=-1)
                     state, loss = step(state, toks, labels)
                     t += 1
                     if args.ckpt and t % args.ckpt_every == 0:
+                        if store is not None:
+                            store.scatter(state, cohort)
                         checkpoint(t)
+                if store is not None:
+                    store.scatter(state, cohort)
                 el = eval_avg(state, toks, labels)
                 print(f"step {t:5d} (tail)  "
                       f"local_loss {float(loss):.4f}  "
                       f"avg_model_loss {float(el):.4f}  "
                       f"({(time.time()-t0)/t:.2f}s/step)")
                 break
+            # client sampling: draw the round's cohort and load its rows
+            # into the device buffers — one contiguous copy per flat
+            # buffer.  The draw depends only on (seed, round-start step),
+            # so a resumed or rolled-back run re-gathers the same cohort.
+            cohort = None
+            if store is not None:
+                cohort = clients_mod.sample_cohort(
+                    args.clients, args.workers, t, args.seed)
+                state = store.gather(cohort,
+                                     member=getattr(state, "member", ()),
+                                     like=state,
+                                     seed_params=seed_cohort)
             # membership repair at the round boundary: fold the fault
             # schedule's crash/rejoin history into a mask; one jitted
             # set_membership call redistributes the leavers' Δ over the
@@ -535,8 +735,13 @@ def main(argv=None) -> int:
                     print(f"membership: step {t} active "
                           f"{int(mask.sum())}/{args.workers} "
                           f"{mask.astype(int).tolist()}")
+            # a strict-subset cohort's corrections sum to the cohort mean,
+            # not zero — recentre so the round's sync math holds
+            if recenter_fn is not None:
+                state = recenter_fn(state)
             snap = jax.device_get(state) if args.guard else None
-            toks = jnp.asarray(data[t:t + rk])          # (rk, W, b, s)
+            toks = jnp.asarray(data[t:t + rk] if cohort is None
+                               else data[t:t + rk][:, cohort])
             labels = jnp.roll(toks, -1, axis=-1)
             gmul = (faults.grad_mul(t, rk, args.workers)
                     if faults is not None else None)
@@ -546,11 +751,23 @@ def main(argv=None) -> int:
                                                jnp.asarray(gmul))
             else:
                 state, losses = round_fn(state, toks, labels)
-            if health_fn is not None and not bool(
-                    health_fn(state, jnp.mean(losses))):
+            diverged = None
+            if health_fn is not None:
+                loss_r = float(jnp.mean(losses))
+                if not bool(health_fn(state, jnp.asarray(loss_r))):
+                    diverged = "non-finite state"
+                elif (last_good is not None
+                      and loss_r > _BLOWUP_FACTOR * last_good
+                      + _BLOWUP_SLACK):
+                    # a finite blow-up (e.g. a scale@w:s:mult poison)
+                    # passes every finiteness check — catch it on the
+                    # loss trend instead
+                    diverged = (f"loss blow-up ({loss_r:.3g} vs last "
+                                f"good {last_good:.3g})")
+            if diverged is not None:
                 if retries >= args.max_retries:
                     raise SystemExit(
-                        f"divergence guard: state still non-finite after "
+                        f"divergence guard: state still diverged after "
                         f"{retries} rollbacks at step {t + rk} — aborting")
                 retries += 1
                 time.sleep(min(0.05 * 2 ** retries, 1.0))   # backoff
@@ -564,10 +781,16 @@ def main(argv=None) -> int:
                 if set_member is not None and hasattr(state, "member") \
                         and not isinstance(state.member, tuple):
                     cur_mask = np.asarray(state.member.active).reshape(-1)
-                print(f"divergence guard: non-finite state — rolled back "
+                print(f"divergence guard: {diverged} — rolled back "
                       f"to step {t} (retry {retries}/{args.max_retries})")
                 continue
+            if health_fn is not None:
+                last_good = loss_r
             retries = 0
+            # only a HEALTHY round's rows reach the store: a rolled-back
+            # round never scatters, so its clients keep pre-round state
+            if store is not None:
+                store.scatter(state, cohort)
             t += rk
             r += 1
             if r % args.log_every == 0 or r == 1 or t >= args.steps:

@@ -1,0 +1,340 @@
+"""Client sampling: cohorts, the host store, and the driver glue.
+
+Layers, mirroring ``tests/test_fault.py``'s structure:
+
+1. ``sample_cohort`` — seed-deterministic, distinct sorted int64 ids,
+   identity at full participation, and every client participates over
+   enough rounds (no starvation).
+2. ``ClientStore`` engine layer — the M == W gather/round/scatter
+   round-trip is BITWISE the storeless trajectory for every flat
+   algorithm (the acceptance gate); a strict-subset cohort's Δ is
+   recentred to Σ = 0 by ``Engine.recenter_drift``; consensus seeding
+   replaces cohort params; scatter skips dead slots; the checkpoint
+   tree (clients + server consensus) round-trips with named errors on
+   mismatch; overlap and undersized populations are refused loudly.
+3. Driver flag validation — malformed --clients/--participation combos
+   exit early with named messages.
+4. Driver smoke — a real M > W train run composed with crash/rejoin
+   faults, in-process.
+
+The collective-count acceptance (a gathered strict-subset cohort's round
+is STILL exactly one sync all-reduce on an 8-device mesh — the compiled
+round is unchanged by construction, and this pins it) runs in a
+subprocess, same idiom as tests/test_fault.py.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import VRLConfig
+from repro.core import flat_algorithms, make_engine
+from repro.core.clients import ClientStore, cohort_schedule, sample_cohort
+
+# ----------------------------------------------------------------- sampler
+
+
+def test_cohort_is_deterministic_sorted_distinct():
+    a = sample_cohort(32, 8, round_index=3, seed=7)
+    b = sample_cohort(32, 8, round_index=3, seed=7)
+    np.testing.assert_array_equal(a, b)
+    assert a.dtype == np.int64
+    assert (np.diff(a) > 0).all()                 # sorted AND distinct
+    assert a.min() >= 0 and a.max() < 32
+    c = sample_cohort(32, 8, round_index=4, seed=7)
+    d = sample_cohort(32, 8, round_index=3, seed=8)
+    assert not np.array_equal(a, c)
+    assert not np.array_equal(a, d)
+
+
+def test_full_participation_is_identity():
+    np.testing.assert_array_equal(sample_cohort(6, 6, 11),
+                                  np.arange(6, dtype=np.int64))
+
+
+def test_every_client_participates():
+    seen = set()
+    for cohort in cohort_schedule(24, 6, rounds=40, seed=0):
+        seen.update(cohort.tolist())
+    assert seen == set(range(24))
+
+
+def test_cohort_size_validated():
+    with pytest.raises(ValueError, match=r"cohort_size must be in \[1, 4\]"):
+        sample_cohort(4, 5, 0)
+    with pytest.raises(ValueError, match="cohort_size must be in"):
+        sample_cohort(4, 0, 0)
+
+
+# ------------------------------------------------------------ engine layer
+
+W = 4
+TEMPLATE = {"w": jnp.zeros((12, 8)), "b": jnp.zeros((5,))}
+P0 = {"w": jnp.ones((12, 8)) * 0.3, "b": jnp.ones((5,)) * -0.2}
+
+
+def _cfg(alg="vrl_sgd", **kw):
+    return VRLConfig(algorithm=alg, comm_period=4, learning_rate=0.05,
+                     weight_decay=0.0, warmup=False, update_backend="xla",
+                     **kw)
+
+
+def _gk(eng, state, r, k=4, scale=0.1):
+    return jax.tree.map(
+        lambda x: jnp.stack([jnp.sin(x + r * k + i) * scale
+                             for i in range(k)]),
+        eng.params_tree(state))
+
+
+@pytest.mark.parametrize("alg",
+                         [a for a in flat_algorithms()
+                          if a != "hier_vrl_sgd"])
+def test_full_participation_round_trip_is_bitwise(alg):
+    """The acceptance gate: with M == W the gather/round/scatter loop
+    produces BITWISE the storeless trajectory, for every flat algorithm
+    (params AND every per-client leaf)."""
+    eng = make_engine(_cfg(alg), TEMPLATE)
+    rs = jax.jit(eng.round_step, donate_argnums=(0,))
+
+    s0 = eng.init(P0, W)                       # storeless reference
+    s1 = eng.init(P0, W)
+    store = ClientStore(s1, W)
+    for r in range(3):
+        s0 = rs(s0, _gk(eng, s0, r))
+        cohort = sample_cohort(W, W, r)
+        st = store.gather(cohort)
+        st = rs(st, _gk(eng, st, r))
+        store.scatter(st, cohort)
+    tree = store.to_tree()["clients"]
+    for a, b in zip(jax.tree.leaves(s0), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_strict_subset_recenter_restores_invariant():
+    """After rounds over rotating cohorts, a gathered strict subset's Δ
+    sums to the cohort mean — recenter_drift restores Σ Δ = 0 without
+    moving the cohort-mean model."""
+    eng = make_engine(_cfg(), TEMPLATE)
+    rs = jax.jit(eng.round_step, donate_argnums=(0,))
+    rec = jax.jit(eng.recenter_drift)
+    state = eng.init(P0, W)
+    store = ClientStore(state, 10)
+    for r in range(4):
+        st = store.gather(sample_cohort(10, W, r), seed_params=r > 0)
+        st = rec(st)
+        d = np.asarray(st.delta)
+        assert np.abs(d.sum(0)).max() < 1e-5
+        st = rs(st, _gk(eng, st, r))
+        store.scatter(st, sample_cohort(10, W, r))
+
+
+def test_seed_params_installs_consensus():
+    eng = make_engine(_cfg(), TEMPLATE)
+    rs = jax.jit(eng.round_step, donate_argnums=(0,))
+    state = eng.init(P0, 2)
+    store = ClientStore(state, 6)
+    c0 = sample_cohort(6, 2, 0)
+    st = rs(store.gather(c0), _gk(eng, state, 0, k=4))
+    store.scatter(st, c0)
+    # a later cohort of NEVER-sampled clients starts at the consensus,
+    # not at x0
+    rest = np.array(sorted(set(range(6)) - set(c0.tolist()))[:2],
+                    np.int64)
+    seeded = store.gather(rest, seed_params=True)
+    np.testing.assert_array_equal(
+        np.asarray(seeded.params)[0], store.server_params)
+    np.testing.assert_array_equal(
+        np.asarray(seeded.params)[1], store.server_params)
+    unseeded = store.gather(rest)
+    assert not np.array_equal(np.asarray(unseeded.params)[0],
+                              store.server_params)
+
+
+def test_scatter_skips_dead_slots():
+    from repro.core.types import MemberState
+
+    eng = make_engine(_cfg(membership=True), TEMPLATE)
+    state = eng.init(P0, W)
+    store = ClientStore(state, 8)
+    cohort = np.array([0, 2, 4, 6], np.int64)
+    before = np.array(store.to_tree()["clients"].params)
+    st = store.gather(cohort, member=state.member)
+    st = st._replace(
+        params=jnp.asarray(np.full_like(np.asarray(st.params), 7.0)),
+        member=MemberState(
+            active=jnp.array([1, 0, 1, 1], jnp.float32).reshape(W, 1, 1),
+            n_active=jnp.float32(3)))
+    store.scatter(st, cohort)
+    after = np.array(store.to_tree()["clients"].params)
+    assert (after[[0, 4, 6]] == 7.0).all()        # alive slots landed
+    np.testing.assert_array_equal(after[2], before[2])   # dead slot kept
+    np.testing.assert_array_equal(after[[1, 3, 5, 7]],
+                                  before[[1, 3, 5, 7]])  # non-cohort kept
+
+
+def test_store_tree_round_trips_and_validates():
+    eng = make_engine(_cfg(), TEMPLATE)
+    state = eng.init(P0, W)
+    store = ClientStore(state, 6)
+    tree = store.to_tree()
+    assert set(tree) == {"clients", "server_params"}
+    store2 = ClientStore(eng.init(P0, W), 6)
+    store2.load_tree(tree)
+    np.testing.assert_array_equal(store2.server_params,
+                                  store.server_params)
+    with pytest.raises(ValueError, match="'clients', 'server_params'"):
+        store2.load_tree({"clients": tree["clients"]})
+    bad = dict(tree)
+    bad["clients"] = jax.tree.map(
+        lambda x: x[:1] if getattr(x, "ndim", 0) == 3 else x,
+        tree["clients"])
+    with pytest.raises(ValueError, match="leaf shape mismatch"):
+        store2.load_tree(bad)
+
+
+def test_store_refuses_overlap_and_undersized_population():
+    eng = make_engine(_cfg(overlap=True), TEMPLATE)
+    state = eng.init(P0, W)
+    with pytest.raises(ValueError, match="overlapped rounds"):
+        ClientStore(state, 8)
+    eng = make_engine(_cfg(), TEMPLATE)
+    with pytest.raises(ValueError, match="must be >= the cohort size"):
+        ClientStore(eng.init(P0, W), W - 1)
+
+
+def test_gather_validates_cohort_shape():
+    eng = make_engine(_cfg(), TEMPLATE)
+    store = ClientStore(eng.init(P0, W), 8)
+    with pytest.raises(ValueError, match=r"cohort must have shape \(4,\)"):
+        store.gather(np.arange(3))
+
+
+# ------------------------------------------------- driver flag validation
+
+
+@pytest.mark.parametrize("flags,msg", [
+    (["--clients", "-1"], "--clients must be >= 0"),
+    (["--workers", "4", "--clients", "2"],
+     "--clients 2 must be >= --workers 4"),
+    (["--participation", "0.5"], "--participation needs --clients"),
+    (["--clients", "8", "--participation", "1.5"],
+     r"fraction in \(0, 1\]"),
+    (["--workers", "4", "--clients", "8", "--participation", "0.25"],
+     "cohort of 2, but --workers is 4"),
+    (["--workers", "2", "--clients", "4", "--overlap"],
+     "--clients .* overlap"),
+    (["--workers", "2", "--clients", "4", "--no-round"],
+     "--no-round"),
+    (["--workers", "2", "--clients", "4", "--backend", "reference"],
+     "reference"),
+])
+def test_bad_client_flags_exit_with_named_message(flags, msg):
+    from repro.launch import train
+
+    with pytest.raises(SystemExit, match=msg):
+        train.main(["--smoke", "--steps", "4"] + flags)
+
+
+# ------------------------------------------------------------ driver smoke
+
+
+def test_driver_client_sampling_composes_with_faults(tmp_path):
+    """M=8 clients over W=4 slots with a crash/rejoin pair: the run
+    completes, stays finite, and checkpoints a client store that
+    records the population."""
+    from repro.checkpoint import checkpoint as ckpt
+    from repro.launch import train
+
+    root = str(tmp_path / "ck")
+    train.main(["--smoke", "--steps", "8", "--workers", "4",
+                "--clients", "8", "--batch", "2", "--seq", "32",
+                "--k", "2", "--alpha", "0.1", "--lr", "0.05",
+                "--faults", "crash@2:3,rejoin@2:5",
+                "--ckpt", root, "--ckpt-every", "8"])
+    found = ckpt.latest_step(root)
+    assert found is not None and found[0] == 8
+    meta = ckpt.load_meta(found[1])["meta"]
+    assert meta["clients"] == 8
+    assert len(meta["assignment"]) == 8
+    z = np.load(os.path.join(found[1], "arrays.npz"))
+    assert z["clients/params"].shape[0] == 8
+    assert np.isfinite(z["clients/params"]).all()
+    assert np.isfinite(z["server_params"]).all()
+
+
+# ------------------------------------- collective count on an 8-device mesh
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import re
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs.base import VRLConfig
+    from repro.core import make_engine
+    from repro.core.clients import ClientStore, sample_cohort
+
+    mesh = jax.make_mesh((8,), ("data",), devices=jax.devices())
+    template = {"w": jnp.zeros((64, 16)), "b": jnp.zeros((33,))}
+    cfg = VRLConfig(algorithm="vrl_sgd", comm_period=4, learning_rate=0.05,
+                    weight_decay=0.0, warmup=False, update_backend="xla")
+    eng = make_engine(cfg, template, mesh=mesh, worker_axes=("data",))
+    p0 = {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 16)),
+          "b": jax.random.normal(jax.random.PRNGKey(1), (33,))}
+
+    def shard(x):
+        nd = getattr(x, "ndim", 0)
+        spec = P("data", None, None) if nd == 3 else P(*([None] * nd))
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    state = jax.tree.map(shard, eng.init(p0, 8))
+    store = ClientStore(state, 32)
+
+    # a strict-subset cohort, gathered onto the mesh shardings
+    cohort = sample_cohort(32, 8, round_index=1, seed=0)
+    st = store.gather(cohort, like=state)
+
+    def count_ar(hlo):
+        return len(re.findall(r"all-reduce(?:-start)?\\(", hlo))
+
+    out = {}
+    out["gathered_sharding_matches"] = bool(
+        st.params.sharding == state.params.sharding)
+    # THE acceptance property: the round over a gathered cohort is the
+    # SAME executable — still exactly one sync all-reduce per k steps
+    gk = jax.tree.map(lambda x: jnp.stack([jnp.sin(3.0 * x + t) + 0.1 * x
+                                           for t in range(4)]),
+                      eng.params_tree(st))
+    hlo_round = jax.jit(eng.round_step, donate_argnums=(0,)
+                        ).lower(st, gk).compile().as_text()
+    out["round_all_reduce"] = count_ar(hlo_round)
+    # the out-of-round cohort recentre stays collective-frugal
+    hlo_rec = jax.jit(eng.recenter_drift).lower(st).compile().as_text()
+    out["recenter_all_reduce"] = count_ar(hlo_rec)
+    # and the round actually runs on the gathered state
+    st2 = jax.jit(eng.round_step, donate_argnums=(0,))(st, gk)
+    out["finite"] = bool(np.isfinite(np.asarray(st2.params)).all())
+    print(json.dumps(out))
+""")
+
+
+def test_gathered_cohort_round_is_still_one_all_reduce():
+    env = dict(os.environ, PYTHONPATH="src")
+    res = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stderr[-2000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert out["gathered_sharding_matches"] is True, out
+    assert out["round_all_reduce"] == 1, out
+    assert out["recenter_all_reduce"] <= 4, out
+    assert out["finite"] is True, out

@@ -54,6 +54,17 @@ def test_spec_parse_roundtrip():
                                       FaultEvent("rejoin", 60, 1)]
 
 
+def test_scale_spec_parse_roundtrip():
+    fs = FaultSchedule.parse("scale@0:20:1e3,nan@1:12")
+    assert fs.describe() == "nan@1:12,scale@0:20:1000"
+    assert fs.events[1] == FaultEvent("scale", 20, 0, 1e3)
+    # describe() output re-parses to the same schedule
+    assert FaultSchedule.parse(fs.describe()).events == fs.events
+    # fractional and sub-1 multipliers survive the g-format roundtrip
+    fs2 = FaultSchedule.parse("scale@2:5:0.125")
+    assert FaultSchedule.parse(fs2.describe()).events == fs2.events
+
+
 @pytest.mark.parametrize("bad,msg", [
     ("frob@1:3", "unknown fault kind"),
     ("nan@1", "no ':step'"),
@@ -64,6 +75,10 @@ def test_spec_parse_roundtrip():
     ("nan@1:-3", "step must be >= 0"),
     ("killsave@2:3", "killsave takes no worker"),
     ("  ,  ", "contains no events"),
+    ("scale@1:12", "needs a multiplier"),
+    ("scale@1:12:zzz", "not a float"),
+    ("scale@1:12:inf", "multiplier must be finite"),
+    ("scale@1:12:nan", "multiplier must be finite"),
 ])
 def test_spec_errors_are_named(bad, msg):
     with pytest.raises(ValueError, match=msg):
@@ -95,6 +110,15 @@ def test_grad_mul_placement_and_single_fire():
     assert (m[np.isfinite(m)] == 1.0).all()
     # consumed: the rollback replay of the same round is clean
     assert fs.grad_mul(4, 4, 4) is None
+
+
+def test_scale_grad_mul_is_finite_and_placed():
+    fs = FaultSchedule.parse("scale@3:6:1e3")
+    m = fs.grad_mul(4, 4, 4)                     # round covering [4, 8)
+    assert m[2, 3] == 1e3
+    assert np.isfinite(m).all()                  # silent: no NaN/Inf
+    assert (m[m != 1e3] == 1.0).all()
+    assert fs.grad_mul(4, 4, 4) is None          # one-shot
 
 
 def test_membership_fold_is_pure():
@@ -371,6 +395,26 @@ def test_bad_flags_exit_with_named_message(flags, msg):
 
     with pytest.raises(SystemExit, match=msg):
         train.main(["--smoke", "--steps", "4"] + flags)
+
+
+def test_guard_catches_scale_poison_and_rolls_back(capsys):
+    """A finite scale poison passes every finiteness check — the state
+    never goes NaN — so ONLY the loss-trend guard can catch it.  Poison
+    the first local step of a round: that round's mean loss blows up,
+    the guard rolls back to the round snapshot, and the consumed fault
+    lets the replay finish clean."""
+    from repro.launch import train
+
+    train.main(["--smoke", "--steps", "6", "--workers", "4",
+                "--batch", "2", "--seq", "32", "--k", "2",
+                "--lr", "0.05", "--guard", "--max-retries", "2",
+                "--faults", "scale@1:2:1e3", "--log-every", "1"])
+    out = capsys.readouterr().out
+    assert "gradient fault in round [2, 4)" in out
+    assert "loss blow-up" in out                 # the trend branch fired,
+    assert "non-finite state" not in out         # not the finiteness one
+    assert "rolled back to step 2 (retry 1/2)" in out
+    assert "done: 6 steps" in out
 
 
 # ------------------------------------- collective count on an 8-device mesh

@@ -1,0 +1,127 @@
+"""Property-based tests (hypothesis) for the data partitioners and the
+client-cohort sampler.
+
+Own module (the ``test_schedule_properties.py`` pattern) so the
+module-level ``importorskip`` skips ONLY the randomized properties when
+hypothesis is absent — the deterministic partition tests in
+``test_data.py`` and the cohort tests in ``test_clients.py`` always run.
+
+The properties are the federated-scale correctness contracts:
+
+* every partitioner covers the index set EXACTLY once (no loss, no
+  duplication) with int64 arrays and at least one index per unit — the
+  two bugs (float64-from-empty-bucket, fresh-split-on-resume) were both
+  violations of this family;
+* ``repartition`` preserves the index multiset across ANY unit-count
+  change, which is what makes resharded resume data-lossless;
+* cohorts are distinct, sorted, in-range, and seed-deterministic.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.clients import sample_cohort  # noqa: E402
+from repro.data.partition import (  # noqa: E402
+    assignment_from_meta,
+    assignment_to_meta,
+    contiguous_assignment,
+    dirichlet_partition,
+    iid_partition,
+    repartition,
+)
+
+
+def _assert_exact_cover(parts, n, num_units):
+    assert len(parts) == num_units
+    for p in parts:
+        assert p.dtype == np.int64          # never a float64 empty array
+        assert len(p) >= 1                  # every unit holds something
+    allidx = np.concatenate(parts)
+    assert len(allidx) == n
+    assert set(allidx.tolist()) == set(range(n))
+
+
+@settings(max_examples=60, deadline=None)
+@given(n_classes=st.integers(1, 8), n=st.integers(1, 200),
+       workers=st.integers(1, 12),
+       alpha=st.floats(0.01, 10.0), seed=st.integers(0, 2 ** 16))
+def test_dirichlet_partition_covers_exactly_once(n_classes, n, workers,
+                                                 alpha, seed):
+    labels = np.arange(n) % n_classes
+    if n < workers:
+        with pytest.raises(ValueError,
+                           match="cannot give every worker an index"):
+            dirichlet_partition(labels, workers, alpha=alpha, seed=seed)
+        return
+    parts = dirichlet_partition(labels, workers, alpha=alpha, seed=seed)
+    _assert_exact_cover(parts, n, workers)
+    again = dirichlet_partition(labels, workers, alpha=alpha, seed=seed)
+    for a, b in zip(parts, again):
+        np.testing.assert_array_equal(a, b)     # seed-deterministic
+
+
+@settings(max_examples=60, deadline=None)
+@given(n=st.integers(1, 200), w0=st.integers(1, 12),
+       w1=st.integers(1, 12), seed=st.integers(0, 2 ** 10))
+def test_repartition_preserves_the_index_multiset(n, w0, w1, seed):
+    if n < w0:
+        return
+    parts = iid_partition(n, w0, seed=seed)
+    if n < w1:
+        with pytest.raises(ValueError,
+                           match="cannot give every worker an index"):
+            repartition(parts, w1)
+        return
+    re = repartition(parts, w1)
+    _assert_exact_cover(re, n, w1)
+    # worker-order concatenation is preserved verbatim (contiguity is
+    # what keeps each unit's non-iid structure through a reshard)
+    np.testing.assert_array_equal(np.concatenate(re),
+                                  np.concatenate(parts))
+
+
+@settings(max_examples=60, deadline=None)
+@given(shards=st.integers(1, 64), units=st.integers(1, 64))
+def test_contiguous_assignment_covers_in_order(shards, units):
+    if shards < units:
+        with pytest.raises(ValueError,
+                           match="cannot give every unit a shard"):
+            contiguous_assignment(shards, units)
+        return
+    parts = contiguous_assignment(shards, units)
+    _assert_exact_cover(parts, shards, units)
+    np.testing.assert_array_equal(np.concatenate(parts),
+                                  np.arange(shards))
+
+
+@settings(max_examples=60, deadline=None)
+@given(n=st.integers(1, 100), w=st.integers(1, 12),
+       seed=st.integers(0, 2 ** 10))
+def test_assignment_meta_roundtrip(n, w, seed):
+    if n < w:
+        return
+    parts = iid_partition(n, w, seed=seed)
+    back = assignment_from_meta(assignment_to_meta(parts))
+    assert len(back) == len(parts)
+    for a, b in zip(parts, back):
+        assert b.dtype == np.int64
+        np.testing.assert_array_equal(np.asarray(a, np.int64), b)
+
+
+@settings(max_examples=80, deadline=None)
+@given(m=st.integers(1, 64), w=st.integers(1, 64),
+       r=st.integers(0, 1000), seed=st.integers(0, 2 ** 16))
+def test_cohorts_are_distinct_sorted_in_range(m, w, r, seed):
+    if not 0 < w <= m:
+        with pytest.raises(ValueError, match="cohort_size must be in"):
+            sample_cohort(m, w, r, seed)
+        return
+    c = sample_cohort(m, w, r, seed)
+    assert c.dtype == np.int64 and c.shape == (w,)
+    assert (np.diff(c) > 0).all() if w > 1 else True
+    assert c.min() >= 0 and c.max() < m
+    np.testing.assert_array_equal(c, sample_cohort(m, w, r, seed))
+    if m == w:
+        np.testing.assert_array_equal(c, np.arange(m))
