@@ -54,6 +54,7 @@ import time
 
 from benchmarks.common import csv
 from repro.core import schedule as schedule_mod
+from repro.obs import convert as obs_convert
 
 ARCH = "qwen2-0.5b"
 K = 20
@@ -133,6 +134,12 @@ def main() -> dict:
                          flat_cross_pod_iter=flat_cross_iter,
                          sync2=s2_b, flat_sync=flat_b, k1=K1, k2=K2),
                rounds=rounds, stagewise=stagewise, compressed=compressed)
+    # canonicalize the raw dry-run rows (scratch channel between the
+    # subprocess runs above) onto the schema-versioned obs stream
+    with open(tmp) as f:
+        raw_rows = [json.loads(ln) for ln in f if ln.strip()]
+    obs_convert.write_jsonl(
+        obs_convert.records_from_legacy(raw_rows, "comm_bench"), tmp)
     return out
 
 
@@ -238,10 +245,14 @@ def compressed_bytes_view(k_max: int = K, horizons=STAGE_T,
         "reduction": {n: round(raw / b, 2) for n, b in per_round.items()},
     }, "horizons": list(horizons), "table": table}
     if out_json:
-        os.makedirs(os.path.dirname(out_json), exist_ok=True)
-        with open(out_json, "w") as f:
-            json.dump(out, f, indent=1)
-        print(f"wrote {os.path.abspath(out_json)}")
+        # canonical obs JSONL stream + the legacy .json through the shim
+        # (existing artifact consumers read the latter)
+        recs = obs_convert.records_from_legacy(out, "comm_compress")
+        canon = obs_convert.write_jsonl(
+            recs, os.path.splitext(out_json)[0] + ".jsonl")
+        obs_convert.write_legacy_json(recs, out_json)
+        print(f"wrote {os.path.abspath(canon)} "
+              f"(+ legacy {os.path.abspath(out_json)})")
     return out
 
 
@@ -297,10 +308,12 @@ def cohort_bytes_view(num_clients: int = 256,
     out = {"arch": ARCH, "num_clients": num_clients, "k": k_max,
            "payload_bytes": payload, "table": table}
     if out_json:
-        os.makedirs(os.path.dirname(out_json), exist_ok=True)
-        with open(out_json, "w") as f:
-            json.dump(out, f, indent=1)
-        print(f"wrote {os.path.abspath(out_json)}")
+        recs = obs_convert.records_from_legacy(out, "comm_cohort")
+        canon = obs_convert.write_jsonl(
+            recs, os.path.splitext(out_json)[0] + ".jsonl")
+        obs_convert.write_legacy_json(recs, out_json)
+        print(f"wrote {os.path.abspath(canon)} "
+              f"(+ legacy {os.path.abspath(out_json)})")
     return out
 
 

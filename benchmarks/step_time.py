@@ -27,6 +27,10 @@ from repro.core import flat, get_algorithm, hierarchical, make_engine, \
 from repro.launch import roofline as rl
 from repro.train.train_loop import make_train_step
 
+# the launch driver's default --log-every: one diagnostics pass per this
+# many rounds — the cadence the amortized diag gate assumes
+DIAG_CADENCE = 10
+
 
 def _stats(samples) -> dict:
     """mean/p50/p95 of a µs sample list, rounded for the JSON artifact."""
@@ -279,6 +283,28 @@ def _bench_rounds_alg(alg_name: str, *, workers: int, k: int, dims,
             it = fused_iters if backend == "fused" else iters
             row[backend] = _stats(timeit_samples(one_round, iters=it,
                                                  warmup_iters=1))
+            if backend == "xla":
+                # telemetry overhead: one Engine.diagnostics pass (its
+                # own jit, never part of the round) against the round it
+                # rides along with.  The driver fires it every
+                # --log-every rounds (default 10), so the gated figure is
+                # the AMORTIZED per-round cost at that cadence;
+                # diag_over_round keeps the raw one-pass ratio honest.
+                diag_fn = jax.jit(eng.diagnostics)
+                row["diag"] = _stats(timeit_samples(
+                    lambda: diag_fn(box[0]), iters=it, warmup_iters=1))
+                row["diag_over_round"] = round(
+                    (row["xla"]["round_us"] + row["diag"]["round_us"])
+                    / row["xla"]["round_us"], 3)
+                row["diag_amortized"] = round(
+                    (row["xla"]["round_us"]
+                     + row["diag"]["round_us"] / DIAG_CADENCE)
+                    / row["xla"]["round_us"], 3)
+                csv(f"engine/rounds/{alg_name}/diag/d{dim}",
+                    row["diag"]["round_us"],
+                    f"diag_over_round={row['diag_over_round']};"
+                    f"amortized_every{DIAG_CADENCE}="
+                    f"{row['diag_amortized']}")
         for backend in ["reference", "xla", "fused"]:
             if backend not in row:
                 continue
@@ -363,6 +389,43 @@ def gate_rounds(rounds: dict, ratio: float) -> int:
         return 1
     print(f"round gate OK: auto ({rounds['auto_backend']}) / reference <= "
           f"{ratio} at all sizes for {sorted(by_alg)}")
+    return 0
+
+
+def gate_diag(rounds: dict, ratio: float) -> int:
+    """CI gate: telemetry must not slow training past ``ratio`` x the
+    bare round wall-clock.  The gated figure is the AMORTIZED per-round
+    cost at the driver's default cadence (one diagnostics pass every
+    ``DIAG_CADENCE`` = --log-every rounds), per benched algorithm at its
+    LARGEST size: tiny sizes are dispatch-latency bound — there the diag
+    pass's fixed python+dispatch cost rivals the round itself and the
+    ratio measures the host, not the pass — so the gate reads the size
+    where compute dominates.  Returns a process exit code."""
+    by_alg = rounds.get("by_alg") or {"vrl_sgd": rounds["sizes"]}
+    bad, checked = [], []
+    for alg_name, sizes in by_alg.items():
+        dims_here = [d for d, row in sizes.items()
+                     if "diag_amortized" in row]
+        if not dims_here:
+            continue
+        top = max(dims_here, key=lambda d: sizes[d]["n_params"])
+        r = sizes[top]["diag_amortized"]
+        checked.append((alg_name, top, r))
+        if r > ratio:
+            bad.append((alg_name, top, r))
+    if not checked:
+        print("DIAG GATE FAILED: no diag timings recorded (xla rows "
+              "missing?)")
+        return 1
+    if bad:
+        print(f"DIAG GATE FAILED: amortized (round + diag/"
+              f"{DIAG_CADENCE}) / round exceeds {ratio}x at: "
+              + ", ".join(f"{a}/d{d} ({r}x)" for a, d, r in bad))
+        return 1
+    print("diag gate OK (amortized, 1 pass per "
+          f"{DIAG_CADENCE} rounds): "
+          + ", ".join(f"{a}/d{d} {r}x" for a, d, r in checked)
+          + f" <= {ratio}")
     return 0
 
 
@@ -899,6 +962,11 @@ if __name__ == "__main__":
     ap.add_argument("--gate-ratio", type=float, default=0.0,
                     help="bench_rounds: exit 1 if auto/reference round "
                          "time exceeds this at any size (0 = no gate)")
+    ap.add_argument("--gate-diag", type=float, default=0.0,
+                    help="bench_rounds: exit 1 if (round + diagnostics "
+                         "pass) exceeds this ratio x the bare round at "
+                         "the largest size for any algorithm (0 = no "
+                         "gate)")
     ap.add_argument("--gate-overlap", type=float, default=0.0,
                     help="bench_overlap: exit 1 if the overlapped round's "
                          "p50 exceeds this ratio x the blocking round's "
@@ -935,6 +1003,8 @@ if __name__ == "__main__":
                                          if a))
         if args.gate_ratio:
             code |= gate_rounds(rounds, args.gate_ratio)
+        if args.gate_diag:
+            code |= gate_diag(rounds, args.gate_diag)
     if args.bench in ("overlap", "all"):
         ov = bench_overlap(dims=dims, k=args.k,
                            iters=max(args.iters, 20),

@@ -16,6 +16,12 @@ tolerance of the clean run's.  The trajectories legitimately differ
 tolerance is loose — this is a liveness-and-sanity gate, not a bitwise
 one (bitwise full-mask parity is asserted in tests/test_fault.py).
 
+Every run streams --metrics telemetry into ``results/chaos_metrics/``
+(kept, unlike the tempdir — CI uploads it as an artifact).  The streams
+are themselves gated: chaos A must record the guard rollback and the
+crash membership change, chaos B the restore and the rejoin, and the
+chaos-B report is rendered at the end (repro.obs.report).
+
 Run from the repo root:  python scripts/chaos_smoke.py
 """
 from __future__ import annotations
@@ -27,7 +33,14 @@ import subprocess
 import sys
 import tempfile
 
+sys.path.insert(0, os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "src")))
+
+from repro.obs import report as obs_report  # noqa: E402
+from repro.obs.metrics import read_metrics  # noqa: E402
+
 FAULTS = "nan@1:12,crash@1:15,rejoin@1:30,killsave:20"
+METRICS_DIR = os.path.join("results", "chaos_metrics")
 COMMON = ["--arch", "qwen2-0.5b", "--smoke", "--batch", "2", "--seq", "32",
           "--k", "5", "--lr", "0.02", "--backend", "xla", "--mesh-grid"]
 
@@ -47,21 +60,42 @@ def run(tag, extra, *, devices=8, check=True):
     return proc
 
 
+def _events(path):
+    return [r["event"] for r in read_metrics(path)]
+
+
+def _check_stream(tag, path, expected):
+    """Assert the run's telemetry stream recorded the expected events."""
+    have = set(_events(path))
+    missing = [e for e in expected if e not in have]
+    if missing:
+        raise SystemExit(f"{tag}: metrics stream {path} is missing "
+                         f"expected events {missing} (has {sorted(have)})")
+    print(f"{tag}: metrics stream ok — {sorted(have)}")
+
+
 def main() -> int:
     work = tempfile.mkdtemp(prefix="chaos-smoke-")
     clean_json = os.path.join(work, "clean.json")
     chaos_json = os.path.join(work, "chaos.json")
     ckpt = os.path.join(work, "ckpt")
+    # metrics land OUTSIDE the tempdir so CI can upload them
+    os.makedirs(METRICS_DIR, exist_ok=True)
+    m_clean = os.path.join(METRICS_DIR, "clean.jsonl")
+    m_chaos_a = os.path.join(METRICS_DIR, "chaosA.jsonl")
+    m_chaos_b = os.path.join(METRICS_DIR, "chaosB.jsonl")
     try:
         run("clean", ["--workers", "8", "--steps", "40",
-                      "--loss-out", clean_json])
+                      "--loss-out", clean_json, "--metrics", m_clean])
         run("chaos-A (dies mid-run)",
             ["--workers", "8", "--steps", "24", "--membership", "--guard",
-             "--faults", FAULTS, "--ckpt", ckpt, "--ckpt-every", "10"])
+             "--faults", FAULTS, "--ckpt", ckpt, "--ckpt-every", "10",
+             "--metrics", m_chaos_a])
         run("chaos-B (resume auto, resharded 8 -> 4)",
             ["--workers", "4", "--steps", "40", "--membership", "--guard",
              "--faults", FAULTS, "--ckpt", ckpt, "--ckpt-every", "10",
-             "--resume", "auto", "--loss-out", chaos_json])
+             "--resume", "auto", "--loss-out", chaos_json,
+             "--metrics", m_chaos_b])
         with open(clean_json) as f:
             clean = json.load(f)["avg_model_loss"]
         with open(chaos_json) as f:
@@ -75,6 +109,19 @@ def main() -> int:
             raise SystemExit(
                 f"chaos final loss {chaos:.4f} deviates from clean "
                 f"{clean:.4f} by more than {tol:.4f}")
+        # the telemetry streams must have recorded the chaos timeline:
+        # A trips the NaN guard (rollback) and loses worker 1 (crash),
+        # B restores the checkpoint and sees the step-30 rejoin
+        _check_stream("clean", m_clean,
+                      ["run_start", "round", "sync", "diag", "run_end"])
+        _check_stream("chaos-A", m_chaos_a,
+                      ["fault", "rollback", "membership", "checkpoint"])
+        _check_stream("chaos-B", m_chaos_b,
+                      ["restore", "membership", "run_end"])
+        print()
+        print(obs_report.summarize(read_metrics(m_chaos_b),
+                                   label="chaos-B"))
+        print()
         print("chaos smoke OK")
         return 0
     finally:

@@ -1,0 +1,47 @@
+#!/usr/bin/env python
+"""Summarize one metrics stream, or diff two.
+
+Usage:
+  python scripts/report.py run.jsonl              # one-run report
+  python scripts/report.py clean.jsonl chaos.jsonl  # A-vs-B diff (+ both
+                                                    # summaries with -v)
+
+The input files are the schema-versioned JSONL streams a
+``--metrics out.jsonl`` training run emits (see ``repro.obs.metrics``).
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "src")))
+
+from repro.obs import report  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("metrics", help="metrics JSONL file")
+    ap.add_argument("other", nargs="?", default=None,
+                    help="second metrics file: print a diff instead")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="with two files, also print both summaries")
+    args = ap.parse_args(argv)
+
+    a = report.load(args.metrics)
+    if args.other is None:
+        print(report.summarize(a, label=os.path.basename(args.metrics)))
+        return 0
+    b = report.load(args.other)
+    labels = (os.path.basename(args.metrics), os.path.basename(args.other))
+    if args.verbose:
+        print(report.summarize(a, label=labels[0]))
+        print()
+        print(report.summarize(b, label=labels[1]))
+        print()
+    print(report.diff(a, b, labels=labels))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

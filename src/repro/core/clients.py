@@ -240,6 +240,12 @@ class ClientStore:
     def nbytes(self) -> int:
         return int(sum(lf.nbytes for lf in self._leaves))
 
+    def meta(self) -> dict:
+        """JSON-safe store description for telemetry / run metadata."""
+        return {"num_clients": self.num_clients,
+                "cohort_size": self.cohort_size,
+                "store_bytes": self.nbytes}
+
 
 def cohort_schedule(num_clients: int, cohort_size: int, rounds: int,
                     seed: int = 0,

@@ -782,6 +782,18 @@ class Engine(NamedTuple):
                                 # donate_argnums=(0,); None on the
                                 # hierarchical engine (client sampling is
                                 # a flat-engine construct).
+    diagnostics: Any = None     # observability: (state,) -> dict of
+                                # algorithm-health scalars (drift
+                                # dispersion, Δ-dispersion ζ² proxy,
+                                # Σ Δ / Σ B invariant residuals, EF and
+                                # moment norms, non-finite worker count).
+                                # READ-ONLY — its own jit, never part of
+                                # the compiled round, so the round's
+                                # one-sync-all-reduce HLO contract is
+                                # untouched; it may spend a few extra
+                                # collectives, which is fine at
+                                # --log-every cadence.  None on the
+                                # reference backend.
 
 
 class RoundCache:
@@ -1464,6 +1476,134 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
         bias = recenter(state.bias) if bias_on else state.bias
         return state._replace(delta=delta, bias=bias)
 
+    # --------------------------------------------------------- diagnostics
+    # The record layout is decided at TRACE time from the config — the
+    # shard_map out_specs must be a statically-known pytree, so which keys
+    # exist can never depend on runtime values.
+    ef_on = comp is not None and bool(getattr(comp, "error_feedback",
+                                              False))
+    diag_keys = ["params_rms", "drift_sq_mean", "drift_max",
+                 "drift_per_worker", "nonfinite_workers"]
+    if algo.use_delta:
+        diag_keys += ["delta_residual", "zeta_sq_proxy"]
+    if bias_on:
+        diag_keys += ["bias_residual"]
+    if ef_on:
+        diag_keys += ["ef_resid_rms"]
+    if kind != "sgd":
+        diag_keys += ["mu_rms"]
+    if kind == "adam":
+        diag_keys += ["nu_rms"]
+    red_axes = tuple(axis_names or ()) + ((shard_axis,)
+                                          if shard_axis is not None else ())
+
+    def _core_diagnostics(state: FlatWorkerState) -> dict:
+        """Algorithm-health figures in ONE read-only pass.
+
+        Runs OUTSIDE the compiled round (its own jit, --log-every
+        cadence), so its handful of collectives — worker-axis psums plus
+        the shard-axis row reductions — never touch the round's
+        one-all-reduce HLO contract.
+
+        Paper grounding: ``zeta_sq_proxy`` is the across-worker
+        dispersion of the control variates, (1/n) Σᵢ ‖Δᵢ − Δ̄‖² — the
+        analysis has Δᵢ tracking ∇Fᵢ − ∇F, so this is the runtime proxy
+        for ζ², the inter-worker gradient variance whose dependency
+        VRL-SGD eliminates.  (Post-sync params COINCIDE under broadcast
+        syncs, so a between-round drift dispersion would measure ~0 and
+        proxy nothing; drift is still reported because it is the
+        meaningful dispersion under overlap / membership / EASGD, where
+        params do not re-coincide.)  ``delta_residual`` is
+        ‖(1/n) Σᵢ Δᵢ‖∞ — the Σ Δ = 0 invariant's residual
+        (``bias_residual`` the BVR Σ B = 0 twin); both sit at
+        float-noise level on a healthy run.
+
+        Dead rows are excluded with ``where`` (never multiply — a
+        crashed worker's NaNs would survive ``NaN * 0``), so a masked-
+        out slot neither counts as non-finite nor drags any mean.
+        """
+        member = state.member
+        masked = isinstance(member, MemberState)
+        n = (member.n_active if masked
+             else jnp.asarray(float(state.params.shape[0] * axis_size),
+                              jnp.float32))
+
+        def keep(buf):
+            if not masked:
+                return buf.astype(jnp.float32)
+            return jnp.where(member.active > 0, buf.astype(jnp.float32),
+                             0.0)
+
+        def _gsum(x):                       # scalar sum over EVERY axis
+            s = jnp.sum(x)
+            return jax.lax.psum(s, red_axes) if red_axes else s
+
+        def _gmax(x):                       # scalar max over EVERY axis
+            m = jnp.max(x)
+            return jax.lax.pmax(m, red_axes) if red_axes else m
+
+        def _per_worker(x):                 # (W_l, R_l, C) -> (W_l,)
+            s = jnp.sum(x, axis=(1, 2))
+            if shard_axis is not None:
+                s = jax.lax.psum(s, shard_axis)
+            return s
+
+        def _wsum(x):                       # worker-axis sum -> (R_l, C)
+            s = jnp.sum(x, axis=0)
+            if axis_names is not None:
+                s = jax.lax.psum(s, axis_names)
+            return s
+
+        def _wscalar(s):                    # scalar sum over worker axes
+            return (jax.lax.psum(s, axis_names) if axis_names is not None
+                    else s)
+
+        elems = float(fspec.rows * fspec.lanes)  # padded per-worker count
+
+        out = {}
+        p32 = keep(state.params)
+        bad = _per_worker((~jnp.isfinite(p32)).astype(jnp.float32))
+        out["nonfinite_workers"] = _wscalar(
+            jnp.sum((bad > 0).astype(jnp.float32)))
+        out["params_rms"] = jnp.sqrt(_gsum(p32 * p32) / (n * elems))
+        xhat = _wsum(p32) * (1.0 / n)
+        dev = keep(p32 - xhat[None])
+        drift_w = _per_worker(dev * dev)    # ‖xᵢ − x̂‖² per worker
+        out["drift_sq_mean"] = _wscalar(jnp.sum(drift_w)) * (1.0 / n)
+        out["drift_max"] = jnp.sqrt(_gmax(drift_w))
+        out["drift_per_worker"] = jnp.sqrt(drift_w)
+
+        def invariant(buf, res_key, disp_key=None):
+            b32 = keep(buf)
+            s = _wsum(b32)                  # Σᵢ over active workers
+            out[res_key] = _gmax(jnp.abs(s)) * (1.0 / n)
+            if disp_key is not None:
+                d = keep(b32 - (s * (1.0 / n))[None])
+                out[disp_key] = _gsum(d * d) * (1.0 / n)
+
+        if algo.use_delta:
+            invariant(state.delta, "delta_residual", "zeta_sq_proxy")
+        if bias_on:
+            invariant(state.bias, "bias_residual")
+        if ef_on:
+            r32 = keep(state.comm.resid)
+            out["ef_resid_rms"] = jnp.sqrt(_gsum(r32 * r32) / (n * elems))
+        if kind != "sgd":
+            m32 = keep(state.inner if kind == "momentum"
+                       else state.inner.mu)
+            out["mu_rms"] = jnp.sqrt(_gsum(m32 * m32) / (n * elems))
+        if kind == "adam":
+            if sm3:
+                row32 = keep(state.inner.nu.row)
+                col32 = keep(state.inner.nu.col)
+                cnt = n * float(fspec.rows + fspec.shards * fspec.lanes)
+                out["nu_rms"] = jnp.sqrt((_gsum(row32 * row32)
+                                          + _gsum(col32 * col32)) / cnt)
+            else:
+                n32 = keep(state.inner.nu)
+                out["nu_rms"] = jnp.sqrt(_gsum(n32 * n32) / (n * elems))
+        return {k: out[k] for k in diag_keys}
+
     # ----------------------------------------------------- shard_map wrap
     ax = None
     if axis_names is not None:
@@ -1489,6 +1629,19 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
     local_core = _sharded(_core_local, gspec=P(ax, shard_axis, None))
     sync_core = _sharded(_core_sync)
     recenter_core = _sharded(_core_recenter_drift)
+
+    def diagnostics(state: FlatWorkerState) -> dict:
+        """One read-only jitted pass of algorithm-health scalars plus a
+        (W,) per-worker drift vector (see ``_core_diagnostics``).  Jit
+        WITHOUT donation — it must not consume the state."""
+        if not on_mesh:
+            return _core_diagnostics(state)
+        out_specs = {k: (P(ax) if k == "drift_per_worker" else P())
+                     for k in diag_keys}
+        return compat.shard_map(_core_diagnostics, mesh=mesh,
+                                in_specs=(_specs(state),),
+                                out_specs=out_specs,
+                                check_vma=False)(state)
     train_core = _sharded(_core_train, gspec=P(ax, shard_axis, None))
     round_core = _sharded(_core_round_overlap if cfg.overlap
                           else _core_round,
@@ -1592,7 +1745,8 @@ def make_engine(cfg: VRLConfig, template: Any, *, mesh=None,
                   # form a caller derives it from)
                   compressors=(comp, _comp2),
                   set_membership=set_membership,
-                  recenter_drift=recenter_core)
+                  recenter_drift=recenter_core,
+                  diagnostics=diagnostics)
 
 
 # ================================================ fused executor ("vrl2")
@@ -2006,6 +2160,137 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
                               inner=inner, comm=comm, overlap=ov,
                               member=member)
 
+    # --------------------------------------------------------- diagnostics
+    # Static key set — shard_map out_specs must be a statically-known
+    # pytree (see the flat engine's twin).
+    ef_on = comp1 is not None and bool(getattr(comp1, "error_feedback",
+                                               False))
+    diag_keys = ["params_rms", "drift_sq_mean", "drift_max",
+                 "nonfinite_workers", "delta1_residual", "delta2_residual",
+                 "zeta_sq_proxy"]
+    if ef_on:
+        diag_keys += ["ef_resid_rms"]
+    if kind != "sgd":
+        diag_keys += ["mu_rms"]
+    if kind == "adam":
+        diag_keys += ["nu_rms"]
+    d_red = tuple(a for a in (pod_axis, data_axis, shard_axis)
+                  if a is not None)
+
+    def _core_diag_hier(state: HierFlatState) -> dict:
+        """Two-level twin of the flat ``_core_diagnostics`` (same
+        read-only / own-jit contract).  The invariant residuals follow
+        the two-level structure: ``delta1_residual`` is the worst pod's
+        ‖mean over its active members of Δ1‖∞ (Σ_d Δ1[p] = 0 within
+        every pod), ``delta2_residual`` is ‖mean over alive pods of
+        Δ2‖∞ (Σ_p Δ2 = 0); the ζ² proxy is the dispersion of the
+        worker's TOTAL correction Δ1 + Δ2 — the quantity that tracks
+        ∇Fᵢ − ∇F in the analysis."""
+        member = state.member
+        masked = isinstance(member, MemberState)
+        worker_axes_ = tuple(a for a in (pod_axis, data_axis)
+                             if a is not None)
+
+        def keep(buf):                      # (P, D, ...) worker mask
+            if not masked:
+                return buf.astype(jnp.float32)
+            return jnp.where(member.active > 0, buf.astype(jnp.float32),
+                             0.0)
+
+        def keep_pod(buf):                  # (P, 1, ...) alive-pod mask
+            if not masked:
+                return buf.astype(jnp.float32)
+            return jnp.where(member.n_pod > 0, buf.astype(jnp.float32),
+                             0.0)
+
+        def _gsum(x):
+            s = jnp.sum(x)
+            return jax.lax.psum(s, d_red) if d_red else s
+
+        def _gmax(x):
+            m = jnp.max(x)
+            return jax.lax.pmax(m, d_red) if d_red else m
+
+        def _per_worker(x):                 # (P_l, D_l, R_l, C) -> (P_l, D_l)
+            s = jnp.sum(x, axis=(2, 3))
+            if shard_axis is not None:
+                s = jax.lax.psum(s, shard_axis)
+            return s
+
+        def _grid_sum(x):                   # worker-axes sum -> (R_l, C)
+            s = jnp.sum(x, axis=(0, 1))
+            return jax.lax.psum(s, worker_axes_) if worker_axes_ else s
+
+        def _wscalar(s):
+            return (jax.lax.psum(s, worker_axes_) if worker_axes_ else s)
+
+        def _data_sum(x):                   # (P_l, D_l, ...) -> (P_l, 1, ...)
+            s = jnp.sum(x, axis=1, keepdims=True)
+            if data_axis is not None:
+                s = jax.lax.psum(s, data_axis)
+            return s
+
+        def _pod_sum(x):                    # data-replicated (P_l, 1, ...)
+            s = jnp.sum(x, axis=(0, 1))
+            if pod_axis is not None:
+                s = jax.lax.psum(s, pod_axis)
+            return s
+
+        if masked:
+            npod = jnp.sum(member.n_pod)
+            if pod_axis is not None:
+                npod = jax.lax.psum(npod, pod_axis)
+            n = jnp.maximum(npod, 1.0)      # total ACTIVE workers
+        else:
+            n = float(p_total * d_total)
+        elems = float(fspec.rows * fspec.lanes)
+
+        out = {}
+        p32 = keep(state.params)
+        bad = _per_worker((~jnp.isfinite(p32)).astype(jnp.float32))
+        out["nonfinite_workers"] = _wscalar(
+            jnp.sum((bad > 0).astype(jnp.float32)))
+        out["params_rms"] = jnp.sqrt(_gsum(p32 * p32) / (n * elems))
+        xhat = _grid_sum(p32) * (1.0 / n)
+        dev = keep(p32 - xhat[None, None])
+        drift_w = _per_worker(dev * dev)
+        out["drift_sq_mean"] = _wscalar(jnp.sum(drift_w)) * (1.0 / n)
+        out["drift_max"] = jnp.sqrt(_gmax(drift_w))
+
+        d1 = keep(state.delta1)
+        s1 = _data_sum(d1)                  # (P_l, 1, R_l, C)
+        mean1 = (s1 * (1.0 / jnp.maximum(member.n_pod, 1.0)) if masked
+                 else s1 / float(d_total))
+        out["delta1_residual"] = _gmax(jnp.abs(mean1))
+        d2 = keep_pod(state.delta2)
+        s2 = _pod_sum(d2)                   # (R_l, C)
+        mean2 = (s2 * (1.0 / member.n_active) if masked
+                 else s2 / float(p_total))
+        out["delta2_residual"] = _gmax(jnp.abs(mean2))
+        c = keep(d1 + d2.astype(jnp.float32))   # total correction per worker
+        cmean = _grid_sum(c) * (1.0 / n)
+        cdev = keep(c - cmean[None, None])
+        out["zeta_sq_proxy"] = _gsum(cdev * cdev) * (1.0 / n)
+
+        if ef_on:
+            r32 = keep(state.comm.resid1)
+            out["ef_resid_rms"] = jnp.sqrt(_gsum(r32 * r32) / (n * elems))
+        if kind != "sgd":
+            m32 = keep(state.inner if kind == "momentum"
+                       else state.inner.mu)
+            out["mu_rms"] = jnp.sqrt(_gsum(m32 * m32) / (n * elems))
+        if kind == "adam":
+            if sm3:
+                row32 = keep(state.inner.nu.row)
+                col32 = keep(state.inner.nu.col)
+                cnt = n * float(fspec.rows + fspec.shards * fspec.lanes)
+                out["nu_rms"] = jnp.sqrt((_gsum(row32 * row32)
+                                          + _gsum(col32 * col32)) / cnt)
+            else:
+                n32 = keep(state.inner.nu)
+                out["nu_rms"] = jnp.sqrt(_gsum(n32 * n32) / (n * elems))
+        return {k: out[k] for k in diag_keys}
+
     # ----------------------------------------------------- shard_map wrap
     meshless = mesh is None or (pod_axis is None and data_axis is None
                                 and shard_axis is None)
@@ -2038,6 +2323,17 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
                           gspec=P(None, pod_axis, data_axis, shard_axis,
                                   None))
     round_end_core = _sharded(_core_round_end)
+
+    def diagnostics(state: HierFlatState) -> dict:
+        """One read-only jitted pass of two-level algorithm-health
+        scalars (see ``_core_diag_hier``).  Jit WITHOUT donation."""
+        if meshless:
+            return _core_diag_hier(state)
+        out_specs = {k: P() for k in diag_keys}
+        return compat.shard_map(_core_diag_hier, mesh=mesh,
+                                in_specs=(_specs(state),),
+                                out_specs=out_specs,
+                                check_vma=False)(state)
 
     round_begin = round_fold = None
     if cfg.overlap:
@@ -2141,4 +2437,5 @@ def _make_hier_engine(cfg: VRLConfig, algo: AlgoSpec, fspec: flat.FlatSpec,
                   round_begin=round_begin, round_fold=round_fold,
                   backend=backend,
                   compressors=(comp1, comp2),
-                  set_membership=set_membership)
+                  set_membership=set_membership,
+                  diagnostics=diagnostics)

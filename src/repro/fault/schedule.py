@@ -214,6 +214,20 @@ class FaultSchedule:
     def membership_events(self) -> List[FaultEvent]:
         return [e for e in self.events if e.kind in MEMBER_KINDS]
 
+    def events_in(self, t0: int, t1: int) -> List[dict]:
+        """JSON-safe descriptions of the events firing in [t0, t1) —
+        what the telemetry stream records for a faulted round."""
+        out = []
+        for e in self.events:
+            if t0 <= e.step < t1:
+                d = {"kind": e.kind, "step": int(e.step)}
+                if e.worker >= 0:
+                    d["worker"] = int(e.worker)
+                if e.kind == "scale":
+                    d["mult"] = float(e.mult)
+                out.append(d)
+        return out
+
     def describe(self) -> str:
         def one(e: FaultEvent) -> str:
             if e.kind == "killsave":

@@ -49,10 +49,37 @@ sync all-reduce), and the rows scatter back.  M == --workers with
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
       --workers 8 --steps 40 --k 5 --clients 32 --participation 0.25 \
       --alpha 0.1
+
+Observability (structured telemetry, ``repro.obs``): ``--metrics
+out.jsonl`` streams schema-versioned JSONL events — a ``run_start``
+header with the full run description (including the measured sync wire
+bytes), then per-round ``round``/``sync`` records, ``diag``
+algorithm-health records at ``--log-every`` cadence (drift dispersion,
+the Δ-dispersion ζ² proxy for the paper's inter-worker gradient
+variance, Σ Δ / Σ B invariant residuals, EF-residual and moment norms,
+non-finite worker count), ``membership`` / ``rollback`` / ``cohort`` /
+``checkpoint`` / ``restore`` / ``fault`` events as they happen, and a
+``run_end`` record with the final averaged-model loss plus wall-clock
+phase-timer p50/p95s (the phases are the host-visible boundaries —
+data staging, the round dispatch+block, eval, diag, gather/scatter,
+checkpoint; local-steps/sync/fold cannot be split apart, they live
+inside ONE compiled dispatch).  The diagnostics pass is one read-only
+jit over the flat engine state, SEPARATE from the compiled round — the
+one-sync-all-reduce HLO contract is untouched.  ``--invariant-alarm
+1e-3`` feeds a tripped Σ Δ / Σ B residual into the ``--guard``
+rollback; ``--profile-round N --profile-dir d`` captures a
+jax.profiler trace around round N.  Render a stream (or diff two) with
+``scripts/report.py``:
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
+      --workers 4 --steps 40 --k 5 --metrics run.jsonl --diag \
+      --guard --invariant-alarm 1e-3 --ckpt /tmp/run
+  python scripts/report.py run.jsonl
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import time
 
@@ -72,6 +99,9 @@ from repro.data import partition as partition_mod
 from repro.fault import FaultSchedule
 from repro.launch import mesh as mesh_mod
 from repro.models import transformer as T
+from repro.obs import diagnostics as obs_diag
+from repro.obs import metrics as obs_metrics
+from repro.obs.timers import PhaseTimers
 from repro.train.loss import cross_entropy_lm
 from repro.train.train_loop import make_train_step
 
@@ -128,6 +158,18 @@ def _validate_args(args) -> None:
                 f"{args.clients} clients is a cohort of {cohort}, but "
                 f"--workers is {args.workers} — set --workers {cohort} "
                 f"(the cohort size is the worker count)")
+    if args.invariant_alarm < 0:
+        raise SystemExit(f"--invariant-alarm must be >= 0 (0 disables "
+                         f"the residual alarm), got {args.invariant_alarm}")
+    if args.profile_round < 0:
+        raise SystemExit(f"--profile-round counts rounds from 1 (0 = "
+                         f"off), got {args.profile_round}")
+    if args.profile_round and not args.profile_dir:
+        raise SystemExit("--profile-round needs --profile-dir (where the "
+                         "jax.profiler trace lands)")
+    if args.profile_round and not args.round:
+        raise SystemExit("--profile-round traces a compiled round; drop "
+                         "--no-round")
 
 
 def _build_faults(args) -> FaultSchedule | None:
@@ -315,6 +357,37 @@ def main(argv=None) -> int:
                          "json here (chaos CI compares runs with it)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics", default=None,
+                    help="stream schema-versioned JSONL telemetry here "
+                         "(repro.obs): a run_start meta header, then "
+                         "round/sync/diag/eval/membership/rollback/"
+                         "cohort/checkpoint/restore/fault/run_end "
+                         "records, one object per line, flushed per "
+                         "event so crashed runs leave a valid prefix.  "
+                         "Summarize (or diff two) with scripts/report.py")
+    ap.add_argument("--diag", action="store_true",
+                    help="print the engine's algorithm-health "
+                         "diagnostics at --log-every cadence: drift "
+                         "dispersion, the Δ-dispersion ζ² proxy, "
+                         "Σ Δ / Σ B invariant residuals, EF/moment "
+                         "norms, non-finite worker count.  One "
+                         "read-only jit over the flat state — the "
+                         "compiled round keeps its single all-reduce.  "
+                         "--metrics records the same fields without "
+                         "this flag's console lines")
+    ap.add_argument("--invariant-alarm", type=float, default=0.0,
+                    help="alarm threshold on the Σ Δ / Σ B invariant "
+                         "residuals (0 = off).  With --guard a tripped "
+                         "alarm is a divergence (rollback + retry); "
+                         "without it the alarm prints and the run "
+                         "continues.  Under a lossy --compress the "
+                         "residual is genuinely nonzero (EF-bounded "
+                         "bias) — leave off or set above that floor")
+    ap.add_argument("--profile-round", type=int, default=0,
+                    help="capture a jax.profiler trace around the Nth "
+                         "compiled round (1-based; 0 = off)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="directory for the --profile-round trace")
     args = ap.parse_args(argv)
     _validate_args(args)
 
@@ -470,6 +543,47 @@ def main(argv=None) -> int:
                            for w in wires)
               + f" vs raw {raw/2**20:.2f} MiB per worker payload")
 
+    # ----------------------------------------------------- observability
+    # The structured telemetry channel (repro.obs).  --metrics streams
+    # schema-versioned JSONL events; --diag/--invariant-alarm run the
+    # engine's READ-ONLY diagnostics pass at --log-every cadence as its
+    # own jit — the compiled round and its one-sync-all-reduce HLO are
+    # untouched.  Console prints stay the human channel; the stream is
+    # the machine channel.
+    diag_wanted = args.diag or args.invariant_alarm > 0
+    if diag_wanted and bundle.engine is None:
+        raise SystemExit("--diag/--invariant-alarm read the flat engine "
+                         "state; --backend reference has none")
+    wire = obs_diag.wire_bytes_per_sync(bundle.engine)
+    mw = obs_metrics.NullWriter()
+    if args.metrics:
+        mw = obs_metrics.MetricsWriter(args.metrics, run_meta={
+            "arch": args.arch, "smoke": bool(args.smoke),
+            "algorithm": args.algorithm, "workers": args.workers,
+            "clients": args.clients or None, "batch": args.batch,
+            "seq": args.seq, "steps": args.steps, "k": args.k,
+            "k1": hier.k1 if hier else None,
+            "k2": hier.k2 if hier else None,
+            "lr": args.lr, "seed": args.seed,
+            "backend": args.backend, "resolved_backend": resolved,
+            "round_scan": bool(args.round), "overlap": bool(args.overlap),
+            "membership": bool(membership), "guard": bool(args.guard),
+            "shards": args.shards,
+            "compress": comm_mod.pair_meta(comps),
+            "faults": faults.describe() if faults is not None else None,
+            "n_params": int(n_params),
+            "wire": wire,
+            "client_store": store.meta() if store is not None else None,
+        })
+        print(f"metrics: streaming JSONL events -> {args.metrics}")
+    timers = PhaseTimers() if mw.active else None
+    phase = (timers.phase if timers is not None
+             else (lambda name: contextlib.nullcontext()))
+    diag_fn = None
+    if bundle.engine is not None and (diag_wanted or mw.active):
+        diag_fn = jax.jit(bundle.engine.diagnostics)
+    profiling = profiled = False
+
     # data assignment: one Dirichlet-skewed shard per unit (logical client
     # or physical worker) to start; a resumed run re-splits the SAVED
     # assignment instead (below), so per-unit distributions survive a
@@ -518,10 +632,14 @@ def main(argv=None) -> int:
             except ckpt.SimulatedKill:
                 print(f"chaos: simulated kill during save at step {t} — "
                       f"'latest' still points at the previous good step")
+                mw.emit("checkpoint", t=t, killed=True)
             return
-        ckpt.save_step(args.ckpt, t, lambda p: save_into(p, t),
-                       retain=args.ckpt_retain)
+        with phase("checkpoint"):
+            ckpt.save_step(args.ckpt, t, lambda p: save_into(p, t),
+                           retain=args.ckpt_retain)
         print(f"checkpointed -> {ckpt.step_dir(args.ckpt, t)}")
+        mw.emit("checkpoint", t=t, killed=False,
+                path=str(ckpt.step_dir(args.ckpt, t)))
 
     def load_from(path):
         """Restore into the freshly-initialized state — resharding the
@@ -608,18 +726,50 @@ def main(argv=None) -> int:
                 else:
                     assignment = saved_assign
             print(f"resumed step {start_t} from {resume_path}")
+            mw.emit("restore", t=start_t, path=str(resume_path),
+                    workers=args.workers)
     data = assigned_token_stream(assignment, args.seq, cfg.vocab_size,
                                  steps=args.steps, batch=args.batch,
                                  alpha=args.alpha,
                                  identical=args.identical, seed=args.seed)
 
+    def emit_final(state, steps_done, *, note="", **extra):
+        """The ONE end-of-run emit path — the normal end and the
+        checkpoint-step >= --steps early exit both land here, so both
+        get the real averaged-model eval (the early exit used to write
+        --loss-out with avg_model_loss: null)."""
+        if not (args.loss_out or mw.active):
+            return
+        with phase("eval"):
+            toks_f = jnp.asarray(data[args.steps - 1])
+            labels_f = jnp.roll(toks_f, -1, axis=-1)
+            el = float(eval_avg(state, toks_f, labels_f))
+        out = {"steps": int(steps_done), "final_loss": el,
+               "avg_model_loss": el}
+        if args.loss_out:
+            with open(args.loss_out, "w") as f:
+                json.dump(out, f)
+            print(f"loss-out: avg_model_loss {el:.4f}{note} -> "
+                  f"{args.loss_out}")
+        mw.emit("run_end", **out, **extra,
+                phases=timers.summary() if timers is not None else None)
+        mw.close()
+
     if start_t >= args.steps:
         print(f"resume: checkpoint step {start_t} >= --steps "
               f"{args.steps} — nothing to do")
-        if args.loss_out:
-            with open(args.loss_out, "w") as f:
-                json.dump({"steps": start_t, "final_loss": None,
-                           "avg_model_loss": None}, f)
+        if store is not None:
+            # the restored rows live in the client store, not in the
+            # fresh-init device state — gather the step's cohort so the
+            # averaged-model eval sees restored clients, exactly as the
+            # normal end path would
+            cohort = clients_mod.sample_cohort(args.clients, args.workers,
+                                               start_t, args.seed)
+            state = store.gather(
+                cohort, member=getattr(state, "member", ()), like=state,
+                seed_params=(args.clients > args.workers
+                             and not bundle.engine.algo.has_center))
+        emit_final(state, start_t, note=" (restored checkpoint)")
         return 0
 
     t0 = time.time()
@@ -686,11 +836,13 @@ def main(argv=None) -> int:
                 if store is not None:
                     cohort = clients_mod.sample_cohort(
                         args.clients, args.workers, t, args.seed)
-                    state = store.gather(cohort,
-                                         member=getattr(state, "member",
-                                                        ()),
-                                         like=state,
-                                         seed_params=seed_cohort)
+                    with phase("gather"):
+                        state = store.gather(cohort,
+                                             member=getattr(state, "member",
+                                                            ()),
+                                             like=state,
+                                             seed_params=seed_cohort)
+                    mw.emit("cohort", t=t, clients=cohort.tolist())
                 step = jax.jit(bundle.local_step if args.overlap
                                else bundle.train_step)
                 while t < args.steps:
@@ -710,6 +862,8 @@ def main(argv=None) -> int:
                       f"local_loss {float(loss):.4f}  "
                       f"avg_model_loss {float(el):.4f}  "
                       f"({(time.time()-t0)/t:.2f}s/step)")
+                mw.emit("tail", t=t, local_loss=float(loss),
+                        avg_model_loss=float(el))
                 break
             # client sampling: draw the round's cohort and load its rows
             # into the device buffers — one contiguous copy per flat
@@ -719,10 +873,12 @@ def main(argv=None) -> int:
             if store is not None:
                 cohort = clients_mod.sample_cohort(
                     args.clients, args.workers, t, args.seed)
-                state = store.gather(cohort,
-                                     member=getattr(state, "member", ()),
-                                     like=state,
-                                     seed_params=seed_cohort)
+                with phase("gather"):
+                    state = store.gather(cohort,
+                                         member=getattr(state, "member", ()),
+                                         like=state,
+                                         seed_params=seed_cohort)
+                mw.emit("cohort", t=t, clients=cohort.tolist())
             # membership repair at the round boundary: fold the fault
             # schedule's crash/rejoin history into a mask; one jitted
             # set_membership call redistributes the leavers' Δ over the
@@ -730,30 +886,53 @@ def main(argv=None) -> int:
             if faults is not None and set_member is not None:
                 mask = faults.active_at(t, args.workers)
                 if not np.array_equal(mask, cur_mask):
-                    state = set_member(state, mask)
+                    with phase("membership"):
+                        state = set_member(state, mask)
                     cur_mask = mask
                     print(f"membership: step {t} active "
                           f"{int(mask.sum())}/{args.workers} "
                           f"{mask.astype(int).tolist()}")
+                    mw.emit("membership", t=t,
+                            active=mask.astype(int).tolist(),
+                            n_active=int(mask.sum()))
             # a strict-subset cohort's corrections sum to the cohort mean,
             # not zero — recentre so the round's sync math holds
             if recenter_fn is not None:
                 state = recenter_fn(state)
             snap = jax.device_get(state) if args.guard else None
-            toks = jnp.asarray(data[t:t + rk] if cohort is None
-                               else data[t:t + rk][:, cohort])
-            labels = jnp.roll(toks, -1, axis=-1)
+            with phase("data"):
+                toks = jnp.asarray(data[t:t + rk] if cohort is None
+                                   else data[t:t + rk][:, cohort])
+                labels = jnp.roll(toks, -1, axis=-1)
             gmul = (faults.grad_mul(t, rk, args.workers)
                     if faults is not None else None)
             if gmul is not None:
                 print(f"chaos: gradient fault in round [{t}, {t + rk})")
-                state, losses = fault_round_fn(state, toks, labels,
-                                               jnp.asarray(gmul))
-            else:
-                state, losses = round_fn(state, toks, labels)
+                mw.emit("fault", t=t, k=rk,
+                        events=faults.events_in(t, t + rk))
+            if args.profile_round and r + 1 == args.profile_round \
+                    and not profiled:
+                jax.profiler.start_trace(args.profile_dir)
+                profiling = True
+            with phase("round"):
+                if gmul is not None:
+                    state, losses = fault_round_fn(state, toks, labels,
+                                                   jnp.asarray(gmul))
+                else:
+                    state, losses = round_fn(state, toks, labels)
+                if timers is not None or profiling:
+                    # timed rounds block here so the sample is the real
+                    # round wall-clock, not the dispatch latency
+                    losses = jax.block_until_ready(losses)
+            if profiling:
+                jax.profiler.stop_trace()
+                profiling, profiled = False, True
+                print(f"profiler: traced round {r + 1} -> "
+                      f"{args.profile_dir}")
+            loss_r = (float(jnp.mean(losses))
+                      if (health_fn is not None or mw.active) else None)
             diverged = None
             if health_fn is not None:
-                loss_r = float(jnp.mean(losses))
                 if not bool(health_fn(state, jnp.asarray(loss_r))):
                     diverged = "non-finite state"
                 elif (last_good is not None
@@ -764,8 +943,32 @@ def main(argv=None) -> int:
                     # loss trend instead
                     diverged = (f"loss blow-up ({loss_r:.3g} vs last "
                                 f"good {last_good:.3g})")
+            # algorithm-health diagnostics at --log-every cadence (plus
+            # the first/last round and any diverged round): one read-only
+            # jit over the post-round state, separate from the round
+            drec = None
+            if diag_fn is not None and ((r + 1) % args.log_every == 0
+                                        or r == 0
+                                        or t + rk >= args.steps
+                                        or diverged is not None):
+                with phase("diag"):
+                    drec = obs_diag.to_record(diag_fn(state))
+                alarms = obs_diag.check_alarms(
+                    drec, invariant_threshold=args.invariant_alarm)
+                drec["alarms"] = alarms
+                if alarms and health_fn is not None and diverged is None:
+                    # the invariant monitor feeds the SAME rollback path
+                    # as the loss/finiteness guard
+                    diverged = "invariant alarm: " + "; ".join(alarms)
+                elif alarms and health_fn is None:
+                    print("invariant alarm (no --guard, continuing): "
+                          + "; ".join(alarms))
             if diverged is not None:
+                t_fail = t + rk
                 if retries >= args.max_retries:
+                    mw.emit("rollback", t_fail=t_fail, reason=diverged,
+                            retry=retries, aborted=True)
+                    mw.close()
                     raise SystemExit(
                         f"divergence guard: state still diverged after "
                         f"{retries} rollbacks at step {t + rk} — aborting")
@@ -783,6 +986,11 @@ def main(argv=None) -> int:
                     cur_mask = np.asarray(state.member.active).reshape(-1)
                 print(f"divergence guard: {diverged} — rolled back "
                       f"to step {t} (retry {retries}/{args.max_retries})")
+                mw.emit("rollback", t_fail=t_fail, reason=diverged,
+                        back_to=t, retry=retries)
+                if drec is not None:
+                    mw.emit("diag", t=t_fail, r=r + 1, rolled_back=True,
+                            **drec)
                 continue
             if health_fn is not None:
                 last_good = loss_r
@@ -790,15 +998,35 @@ def main(argv=None) -> int:
             # only a HEALTHY round's rows reach the store: a rolled-back
             # round never scatters, so its clients keep pre-round state
             if store is not None:
-                store.scatter(state, cohort)
+                with phase("scatter"):
+                    store.scatter(state, cohort)
             t += rk
             r += 1
+            mw.emit("round", t=t, r=r, k=rk, loss=loss_r,
+                    wire_bytes=None if wire is None
+                    else wire["wire_bytes"])
+            mw.emit("sync", t=t, r=r, k_eff=rk,
+                    participants=int(cur_mask.sum()),
+                    wire_bytes=None if wire is None
+                    else wire["wire_bytes"],
+                    wire_bytes2=None if wire is None
+                    else wire["wire_bytes2"])
+            if drec is not None:
+                mw.emit("diag", t=t, r=r, **drec)
+                if args.diag:
+                    print(f"diag: step {t:5d} (round {r})  "
+                          + obs_diag.describe(drec))
             if r % args.log_every == 0 or r == 1 or t >= args.steps:
-                el = eval_avg(state, toks[-1], labels[-1])
+                with phase("eval"):
+                    el = float(eval_avg(state, toks[-1], labels[-1]))
+                ll = (loss_r if loss_r is not None
+                      else float(jnp.mean(losses)))
                 print(f"step {t:5d} (round {r})  "
-                      f"local_loss {float(jnp.mean(losses)):.4f}  "
+                      f"local_loss {ll:.4f}  "
                       f"avg_model_loss {float(el):.4f}  "
                       f"({(time.time()-t0)/t:.2f}s/step)")
+                mw.emit("eval", t=t, r=r, local_loss=ll,
+                        avg_model_loss=float(el))
             if args.ckpt and t // args.ckpt_every > (t - rk) // args.ckpt_every:
                 checkpoint(t)
     else:
@@ -812,24 +1040,29 @@ def main(argv=None) -> int:
                 print(f"step {t+1:5d}  local_loss {float(loss):.4f}  "
                       f"avg_model_loss {float(el):.4f}  "
                       f"({(time.time()-t0)/(t+1):.2f}s/step)")
+                mw.emit("eval", t=t + 1, local_loss=float(loss),
+                        avg_model_loss=float(el))
+                if diag_fn is not None:
+                    drec = obs_diag.to_record(diag_fn(state))
+                    drec["alarms"] = obs_diag.check_alarms(
+                        drec, invariant_threshold=args.invariant_alarm)
+                    mw.emit("diag", t=t + 1, **drec)
+                    if args.diag:
+                        print(f"diag: step {t+1:5d}  "
+                              + obs_diag.describe(drec))
             if args.ckpt and (t + 1) % args.ckpt_every == 0:
                 checkpoint(t + 1)
     extra = ""
+    end_meta = {"wall_s_train": round(time.time() - t0, 3)}
     if args.round:
         extra = (f", {round_fn.compiles} round executable"
                  f"{'s' if round_fn.compiles != 1 else ''} "
                  f"(k={list(round_fn.cached_ks)})")
+        end_meta.update(rounds=r, round_executables=round_fn.compiles)
     print(f"done: {args.steps} steps in {time.time()-t0:.1f}s{extra}")
-    if args.loss_out:
-        # final metrics off the average model over one fresh batch — the
-        # chaos CI gate compares these across faulted/clean runs
-        toks_f = jnp.asarray(data[args.steps - 1])
-        labels_f = jnp.roll(toks_f, -1, axis=-1)
-        el = float(eval_avg(state, toks_f, labels_f))
-        with open(args.loss_out, "w") as f:
-            json.dump({"steps": int(args.steps), "final_loss": el,
-                       "avg_model_loss": el}, f)
-        print(f"loss-out: avg_model_loss {el:.4f} -> {args.loss_out}")
+    # final metrics off the average model over one fresh batch — the
+    # chaos CI gate compares --loss-out across faulted/clean runs
+    emit_final(state, args.steps, **end_meta)
     return 0
 
 

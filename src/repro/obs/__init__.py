@@ -1,0 +1,31 @@
+"""Structured telemetry for the training driver and benchmarks.
+
+The paper's claims ride on quantities the driver historically never
+measured at runtime: VRL-SGD removes the ζ² (inter-worker gradient
+variance) dependency, and its correctness rests on invariants —
+Σᵢ Δᵢ = 0, bounded drift ‖x_i − x̂‖ — that were previously only visible
+by adding prints.  This package makes them first-class:
+
+  ``metrics``      schema-versioned JSONL event stream (``MetricsWriter``)
+  ``diagnostics``  host-side helpers around ``Engine.diagnostics`` — the
+                   one small jitted read-only pass over the flat state
+                   (drift dispersion, Δ-dispersion ζ² proxy, Σ Δ / Σ B
+                   residuals, EF/moment norms, non-finite worker count)
+  ``timers``       wall-clock phase timers with p50/p95 accumulation
+  ``report``       summarize / diff metrics streams (``scripts/report.py``)
+  ``convert``      legacy ``results/*.json`` ↔ obs JSONL converters
+
+Everything here is host-side except what ``core/engine.py`` builds; the
+diagnostics pass is its OWN jit, never part of the compiled round, so the
+round's one-sync-all-reduce HLO contract is untouched.
+"""
+from repro.obs.metrics import (SCHEMA_VERSION, MetricsWriter, NullWriter,
+                               read_metrics, run_meta)
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "MetricsWriter",
+    "NullWriter",
+    "read_metrics",
+    "run_meta",
+]
